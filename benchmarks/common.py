@@ -1,0 +1,47 @@
+"""Shared benchmark helpers: synthetic LLM-like weights, timing, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def llm_weight(key, m, n, rank_structure=16, outlier_frac=0.003):
+    """Weight with geometric spectrum + channel outliers (the structure
+    FLRQ exploits; matches published LLM weight statistics qualitatively)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    base = jax.random.normal(k1, (m, n)) * 0.02
+    sv = 2.0 ** -jnp.arange(rank_structure)
+    u = jax.random.normal(k2, (m, rank_structure))
+    v = jax.random.normal(k3, (rank_structure, n))
+    w = base + (u * sv) @ v * 0.4
+    # heavy channel outliers (the amax drivers)
+    mask = jax.random.uniform(k4, (n,)) < outlier_frac
+    return w * (1 + 7.0 * mask)
+
+
+def calib_activations(key, tokens, n, outlier_frac=0.01):
+    x = jax.random.normal(key, (tokens, n))
+    mask = jax.random.uniform(jax.random.PRNGKey(17), (n,)) < outlier_frac
+    return x * (1 + 5.0 * mask)
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall time in seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_t(s):
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s*1e3:.1f}ms"
+
+
+def render(rows, multi_pod=False, quantized=None):
+    sel = [r for r in rows
+           if r["multi_pod"] == multi_pod
+           and (quantized is None or r.get("quantized", False) == quantized)]
+    sel.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = []
+    out.append("| arch | shape | status | t_compute | t_memory | t_collective "
+               "| bound | useful-FLOPs ratio | roofline frac | per-dev mem |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sel:
+        if r["status"] != "OK":
+            reason = r.get("reason") or r.get("error", "")
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} — "
+                       f"{reason} | | | | | | | |")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]
+        # memory_analysis reports per-device sizes (verified: grok-1 train
+        # args 12.37 GB = 3.14 TB state / 256 chips)
+        per_dev = mem["argument"] + mem["temp"] + mem["output"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {fmt_t(ro['t_compute'])} | {fmt_t(ro['t_memory'])} "
+            f"| {fmt_t(ro['t_collective'])} | {ro['bottleneck']} "
+            f"| {ro['useful_flops_ratio']:.2f} "
+            f"| {ro['roofline_fraction']:.3f} | {per_dev/1e9:.2f}GB |")
+    return "\n".join(out)
+
+
+def summary(rows):
+    ok = [r for r in rows if r["status"] == "OK"]
+    by_bound = defaultdict(int)
+    for r in ok:
+        by_bound[r["roofline"]["bottleneck"]] += 1
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    lines = [f"cells OK: {len(ok)}; bound distribution: {dict(by_bound)}",
+             "worst roofline fractions:"]
+    for r in worst:
+        lines.append(f"  {r['arch']} × {r['shape']} "
+                     f"(mp={r['multi_pod']}, q={r.get('quantized', False)}): "
+                     f"{r['roofline']['roofline_fraction']:.3f} "
+                     f"[{r['roofline']['bottleneck']}]")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json"
+    rows = json.load(open(path))
+    print("## Single-pod (16×16 = 256 chips)\n")
+    print(render(rows, multi_pod=False))
+    print("\n## Multi-pod (2×16×16 = 512 chips)\n")
+    print(render(rows, multi_pod=True))
+    print("\n## Summary\n")
+    print(summary(rows))
+
+
+if __name__ == "__main__":
+    main()

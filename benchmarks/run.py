@@ -1,0 +1,62 @@
+"""Run every benchmark (one per paper table/figure).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Output: ``name,us_per_call,derived`` CSV lines per benchmark, with a
+summary footer. Roofline terms for the 40 (arch × shape) dry-run cells are
+produced by ``repro.launch.dryrun`` (they need 512 forced devices and are
+kept out of this CPU-sized harness); see EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    blc_ablation,
+    kernel_throughput,
+    memory_sweep,
+    method_quality,
+    quant_time,
+    rank_error,
+    sketch_speed,
+    vs_lqer,
+)
+
+BENCHES = [
+    ("rank_error (Fig.2/4)", rank_error.run),
+    ("method_quality (Table 2)", method_quality.run),
+    ("sketch_speed (Tables 7/12, Fig.6)", sketch_speed.run),
+    ("memory_sweep (Tables 3/19/21)", memory_sweep.run),
+    ("blc_ablation (Tables 10/22, Fig.13)", blc_ablation.run),
+    ("vs_lqer (Tables 4/18)", vs_lqer.run),
+    ("quant_time (Table 8)", quant_time.run),
+    ("kernel_throughput (Fig.3)", kernel_throughput.run),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===")
+        try:
+            fn()
+            print(f"# {name}: done in {time.time()-t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED\n# {traceback.format_exc()}")
+    print(f"# summary: {len(BENCHES)-failures}/{len(BENCHES)} benchmarks ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

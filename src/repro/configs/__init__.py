@@ -1,0 +1,100 @@
+"""Architecture registry: ``get_config(arch_id)`` + input-shape cells.
+
+The 10 assigned architectures (each paired with the LM shape set) plus the
+paper's own evaluation families (OPT / LLaMA-2 proxies used by quantization
+benchmarks and the e2e training example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from ..models.config import ModelConfig, small_variant
+
+from . import (  # noqa: E402
+    gemma2_9b,
+    grok_1_314b,
+    hubert_xlarge,
+    hymba_1_5b,
+    internlm2_20b,
+    mistral_nemo_12b,
+    qwen2_vl_72b,
+    qwen3_4b,
+    qwen3_moe_30b_a3b,
+    rwkv6_1_6b,
+)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        grok_1_314b, qwen3_moe_30b_a3b, hubert_xlarge, gemma2_9b,
+        internlm2_20b, qwen3_4b, mistral_nemo_12b, hymba_1_5b,
+        rwkv6_1_6b, qwen2_vl_72b,
+    )
+}
+
+# Paper-model proxies (OPT-125M-ish / LLaMA-ish) for in-repo training +
+# quantization end-to-end runs on CPU.
+PAPER_PROXIES: Dict[str, ModelConfig] = {
+    "opt-proxy-25m": ModelConfig(
+        name="opt-proxy-25m", family="dense", n_layers=6, d_model=384,
+        n_heads=6, n_kv_heads=6, head_dim=64, d_ff=1536, vocab=8192,
+        remat=False, loss_chunk=256,
+    ),
+    "llama-proxy-100m": ModelConfig(
+        name="llama-proxy-100m", family="dense", n_layers=8, d_model=768,
+        n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048, vocab=16384,
+        remat=False, loss_chunk=256,
+    ),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch in ARCHS:
+        return ARCHS[arch]
+    if arch in PAPER_PROXIES:
+        return PAPER_PROXIES[arch]
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS) + sorted(PAPER_PROXIES)}")
+
+
+def get_smoke_config(arch: str, **overrides) -> ModelConfig:
+    return small_variant(get_config(arch), **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells (the assigned 4-shape LM set)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch × shape) cell."""
+    if cfg.is_encoder and shape.kind == "decode":
+        return False, "encoder-only arch: no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str, bool, str]]:
+    """Every (arch, shape, runnable, skip_reason) — 40 rows."""
+    out = []
+    for a, cfg in ARCHS.items():
+        for s, spec in SHAPES.items():
+            ok, why = cell_status(cfg, spec)
+            out.append((a, s, ok, why))
+    return out

@@ -1,0 +1,21 @@
+"""Gemma-2 9B: 42L, d=3584, 16H (GQA kv=8, hd=256), d_ff=14336,
+vocab=256000, alternating local(4096)/global attention, logit softcaps,
+tied embeddings. [arXiv:2408.00118; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab=256000,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    local_window=4096,
+    global_every=2,
+    tie_embeddings=True,
+)

@@ -1,0 +1,17 @@
+"""grok-1 (314B MoE): 64L, d=6144, 48H (GQA kv=8), d_ff=32768, 8e top-2.
+[hf:xai-org/grok-1; unverified]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab=131072,
+    n_experts=8,
+    topk=2,
+)

@@ -1,0 +1,18 @@
+"""HuBERT X-Large (audio encoder backbone): 48L, d=1280, 16H, d_ff=5120,
+504 cluster units. Encoder-only — no decode shapes. Conv feature frontend
+is a stub per the brief. [arXiv:2106.07447; unverified]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,
+    frontend="audio_stub",
+    is_encoder=True,
+)

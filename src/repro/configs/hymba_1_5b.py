@@ -1,0 +1,21 @@
+"""Hymba 1.5B (hybrid): 32L, d=1600, 25H (GQA kv=5, hd=64), d_ff=5504,
+vocab=32001, parallel attn+mamba heads (ssm_state=16), sliding-window
+attention with 3 global layers. Sub-quadratic -> runs long_500k.
+[arXiv:2411.13676; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hymba",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    ssm_state=16,
+    local_window=1024,
+    global_layers=(0, 15, 31),
+    sub_quadratic=True,
+)

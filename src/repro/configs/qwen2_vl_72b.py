@@ -1,0 +1,18 @@
+"""Qwen2-VL 72B (VLM backbone): 80L, d=8192, 64H (GQA kv=8, hd=128),
+d_ff=29568, vocab=152064, M-RoPE. Vision frontend is a stub per the brief.
+[arXiv:2409.12191; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab=152064,
+    mrope=True,
+    frontend="vision_stub",
+)

@@ -1,0 +1,18 @@
+"""RWKV-6 "Finch" 1.6B (attention-free): 24L, d=2048, d_ff=7168,
+vocab=65536, data-dependent decay, O(1)-state decode -> runs long_500k.
+[arXiv:2404.05892; unverified]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="rwkv6",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,           # d_model / rwkv_head_dim
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab=65536,
+    rwkv_head_dim=64,
+    sub_quadratic=True,
+)

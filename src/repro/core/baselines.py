@@ -1,0 +1,90 @@
+"""Baseline PTQ methods the paper compares against (Table 2 / Table 4).
+
+All share the contract  ``method(w, x_calib, bits, key) -> (w_hat, info)``
+where ``w_hat`` is the effective dequantized matrix, so quality benchmarks
+can score every method with the same ``recon_error``.
+
+  * RTN        — round-to-nearest group quant, no tricks.
+  * AWQ-like   — activation scaling + clip search (no low-rank).
+  * LQER-like  — fixed-rank SVD low-rank + RTN on residual (rank from cfg).
+  * FLRQ       — via ``core.flrq`` (with/without BLC for the ablation).
+  * GPTQ       — in ``core.gptq`` (OBS column-wise, its own API shape).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import (
+    QuantSpec,
+    awq_scale,
+    channel_mean_abs,
+    pseudo_quantize,
+    search_clip_ratio,
+)
+from .rsvd import truncated_svd
+
+
+def rtn(w, x_calib, bits, key=None, group_size=128, symmetric=False):
+    spec = QuantSpec(bits, group_size, symmetric)
+    return pseudo_quantize(w.astype(jnp.float32), spec), dict(rank=0)
+
+
+def awq_like(w, x_calib, bits, key=None, group_size=128, symmetric=False):
+    """Activation-aware scaling + clip search. Like the real AWQ, the
+    scaling strength is grid-searched: alpha = mean|x|^s, s in [0, 1],
+    keeping the s that minimizes output reconstruction error (s = 0 is
+    plain RTN+clip, so this never regresses below it)."""
+    spec = QuantSpec(bits, group_size, symmetric)
+    w32 = w.astype(jnp.float32)
+    n = w.shape[1]
+    x32 = None
+    if x_calib is not None and x_calib.shape[0] > 0:
+        x32 = x_calib.astype(jnp.float32)
+        xmean = channel_mean_abs(x32)
+    best = None
+    for s in (0.0, 0.25, 0.5, 0.75, 1.0):
+        if x32 is None and s > 0:
+            break
+        if s == 0.0:
+            alpha = jnp.ones((n,), jnp.float32)
+        else:
+            a = jnp.maximum(xmean, 1e-6) ** s
+            alpha = jnp.clip(a / jnp.exp(jnp.mean(jnp.log(a))), 1e-2, 1e2)
+        ws = w32 * alpha[None, :]
+        xs = (x32 / alpha[None, :]).T if x32 is not None else None
+        clip = search_clip_ratio(ws, xs, spec)
+        what = pseudo_quantize(ws, spec, clip) / alpha[None, :]
+        err = float(
+            jnp.linalg.norm((w32 - what) @ (x32.T if x32 is not None else jnp.eye(n)))
+        )
+        if best is None or err < best[0]:
+            best = (err, what, float(clip), s)
+    _, what, clip, s = best
+    return what, dict(rank=0, clip=clip, scale_exp=s)
+
+
+def lqer_like(
+    w, x_calib, bits, key=None, rank: int = 32, group_size=128, symmetric=False
+):
+    """LQER: quantize first, then fixed-rank SVD of the *quantization error*
+    (W − Q(W)) kept in higher precision."""
+    spec = QuantSpec(bits, group_size, symmetric)
+    w32 = w.astype(jnp.float32)
+    wq = pseudo_quantize(w32, spec)
+    u, v = truncated_svd(w32 - wq, rank)
+    return wq + u @ v, dict(rank=rank)
+
+
+def fixed_rank_then_quant(
+    w, x_calib, bits, key=None, rank: int = 32, group_size=128, symmetric=False
+):
+    """LoRC/SVD-Quant style: peel top-``rank`` SVD of W first, quantize the
+    residual (the 'low-rank within quantization' family)."""
+    spec = QuantSpec(bits, group_size, symmetric)
+    w32 = w.astype(jnp.float32)
+    u, v = truncated_svd(w32, rank)
+    wq = pseudo_quantize(w32 - u @ v, spec)
+    return wq + u @ v, dict(rank=rank)

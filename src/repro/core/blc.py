@@ -1,0 +1,108 @@
+"""BLC: Best Low-rank Approximation under Clipping (paper Alg. 2 core loop).
+
+Alternating minimization of   E = ||W X − (W_r + W_q) X||₂   over the
+low-rank factor W_r and the clipping ratio used when quantizing W − W_r:
+
+    repeat `epochs` times:
+      1. E      = ||W X − (W_r + W_q) X||
+      2. R      = W − deq(W_q);      W_r ← sketch(R, rank)
+      3. p'_clp = argmin_clip ||(W − W_r − Q(W−W_r; clip)) X||
+         W_q   ← Quant(Clip(W − W_r, p'_clp))
+      4. keep (W_r, W_q) of the best E seen
+
+The rank is fixed to the R1-FLR selection made before BLC starts (re-running
+flexible selection inside the loop would change the storage budget mid-
+optimization; the paper's Alg. 2 likewise selects rank once, then iterates).
+
+Fully jittable: one ``lax.scan`` over epochs; each epoch re-sketches the
+quantization residual with the R1-Sketch peel.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QuantSpec, pseudo_quantize, recon_error
+from .r1_sketch import sketch_lowrank
+
+
+class BLCResult(NamedTuple):
+    u: jax.Array            # (m, r) best low-rank left factor
+    v: jax.Array            # (r, n) best right factor
+    w_q: jax.Array          # (m, n) best dequantized quantized part
+    clip: jax.Array         # best clip ratio (scalar)
+    err: jax.Array          # best relative output error E
+    err_trace: jax.Array    # (epochs + 1,) E per epoch (paper Fig. 13)
+
+
+def _best_clip_quant(w_resid, x, spec: QuantSpec, grid):
+    """Quantize w_resid under every clip ratio in grid, return (w_q, clip)
+    minimizing output error against x."""
+
+    def one(c):
+        wq = pseudo_quantize(w_resid, spec, c)
+        d = (w_resid - wq).astype(jnp.float32)
+        dx = d @ x
+        return wq, jnp.sum(dx * dx)
+
+    wqs, errs = jax.lax.map(one, grid)
+    i = jnp.argmin(errs)
+    return wqs[i], grid[i]
+
+
+@partial(jax.jit, static_argnames=("spec", "rank", "epochs", "it"))
+def blc(
+    w: jax.Array,
+    x: jax.Array,
+    key: jax.Array,
+    spec: QuantSpec,
+    rank: int,
+    epochs: int = 8,
+    it: int = 2,
+    clip_grid=(1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7, 0.65),
+) -> BLCResult:
+    """Run BLC. ``w``: (m, n) weight (already activation-scaled if scaling is
+    on), ``x``: (n, b) calibration activations in the same scaled space."""
+    x32 = x.astype(jnp.float32)
+    grid = jnp.asarray(clip_grid, jnp.float32)
+    keys = jax.random.split(key, epochs + 1)
+
+    # --- initialization: W_r from W, then clipped quant of the residual ----
+    if rank > 0:
+        u0, v0 = sketch_lowrank(w, keys[0], rank, it=it)
+    else:
+        m, n = w.shape
+        u0 = jnp.zeros((m, 0), w.dtype)
+        v0 = jnp.zeros((0, n), w.dtype)
+    wq0, clip0 = _best_clip_quant(w - u0 @ v0, x32, spec, grid)
+    err0 = recon_error(w, wq0 + u0 @ v0, x32)
+
+    def epoch(carry, k):
+        u, v, wq, clip, best = carry
+        bu, bv, bwq, bclip, berr = best
+        # (2) re-sketch the *quantization* residual
+        r = w - wq
+        if rank > 0:
+            u, v = sketch_lowrank(r, k, rank, it=it)
+        # (3) re-quantize under a fresh clip search
+        wq, clip = _best_clip_quant(w - u @ v, x32, spec, grid)
+        # (1)/(4) score and keep the best
+        err = recon_error(w, wq + u @ v, x32)
+        better = err < berr
+        best = (
+            jnp.where(better, u, bu),
+            jnp.where(better, v, bv),
+            jnp.where(better, wq, bwq),
+            jnp.where(better, clip, bclip),
+            jnp.minimum(err, berr),
+        )
+        return (u, v, wq, clip, best), err
+
+    init = (u0, v0, wq0, clip0, (u0, v0, wq0, clip0, err0))
+    (_, _, _, _, best), errs = jax.lax.scan(epoch, init, keys[1:])
+    bu, bv, bwq, bclip, berr = best
+    trace = jnp.concatenate([jnp.asarray([err0]), errs])
+    return BLCResult(bu, bv, bwq, bclip, berr, trace)

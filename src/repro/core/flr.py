@@ -1,0 +1,136 @@
+"""R1-FLR: R1-Sketch-based Flexible Low-Rank Selection (paper Alg. 1 / 3).
+
+Peels rank-1 components off a weight (or residual) matrix, tracking the
+residual ``amax`` after every peel, and stops at the first rank where adding
+another component no longer pays:
+
+    p  = amax_0 / amax_r                 (precision gain factor)
+    q  = (d + log2 p) / d                (effective-bit gain, Eq. 9)
+    k  = 1 + d_fp * r * (m+n) / (d*m*n)  (storage growth, Eq. 9)
+    stop if  k >= q        (gain no longer beats storage)
+          or k >  1 + x    (memory budget, default x = 0.2)
+          or slope < t     (amax curve flattened)
+
+slope is the per-step relative amax decrease (amax_{r-1} - amax_r)/amax_0,
+matching the paper's ``getSlope``.
+
+Two implementations:
+  * ``flexible_rank_select``      — jitted lax.while_loop into fixed-size
+    buffers, returns (U, V, rank, stats). Used inside jit pipelines/BLC.
+  * ``flexible_rank_select_py``   — python-driven loop (one jitted peel per
+    step, stops immediately — zero wasted peels, the paper's "discrete"
+    advantage). Used by the offline model quantizer and timing benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .r1_sketch import rank1_sketch
+
+
+@dataclasses.dataclass(frozen=True)
+class FLRConfig:
+    bits: int = 4          # target quantization bit-width d
+    x: float = 0.2         # max fractional model-size increase (paper default)
+    t: float = 1e-4        # amax slope threshold
+    it: int = 2            # power iterations per sketch (paper default)
+    d_fp: int = 16         # storage precision of the low-rank factors
+    max_rank: int = 128    # hard cap (truncated-SVD comparison uses 128/256)
+
+
+class FLRResult(NamedTuple):
+    u: jax.Array          # (m, max_rank) — columns beyond `rank` are zero
+    v: jax.Array          # (max_rank, n)
+    rank: jax.Array       # scalar int32, selected rank
+    amax_trace: jax.Array # (max_rank + 1,) residual amax after each peel
+    q: jax.Array          # final effective-bit gain
+    k: jax.Array          # final storage growth
+
+
+def _qk(amax0, amax, rank, m, n, cfg: FLRConfig):
+    p = jnp.maximum(amax0 / jnp.maximum(amax, 1e-20), 1.0)
+    q = (cfg.bits + jnp.log2(p)) / cfg.bits
+    k = 1.0 + (cfg.d_fp * rank * (m + n)) / (cfg.bits * m * n)
+    return q, k
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def flexible_rank_select(w: jax.Array, key: jax.Array, cfg: FLRConfig) -> FLRResult:
+    """Fully-jitted R1-FLR. Buffers are sized ``cfg.max_rank``; the loop
+    exits early via lax.while_loop so no wasted peels are *computed* (only
+    allocated)."""
+    m, n = w.shape
+    max_r = min(cfg.max_rank, m, n)
+    amax0 = jnp.max(jnp.abs(w)).astype(jnp.float32)
+    keys = jax.random.split(key, max_r)
+
+    u_buf = jnp.zeros((m, max_r), w.dtype)
+    v_buf = jnp.zeros((max_r, n), w.dtype)
+    trace = jnp.full((max_r + 1,), amax0, jnp.float32)
+
+    def cond(state):
+        i, _, _, _, _, done = state
+        return (~done) & (i < max_r)
+
+    def body(state):
+        i, resid, u_buf, v_buf, trace, _ = state
+        u1, v1 = rank1_sketch(resid, keys[i], it=cfg.it)
+        resid_next = resid - jnp.outer(u1, v1).astype(resid.dtype)
+        amax = jnp.max(jnp.abs(resid_next)).astype(jnp.float32)
+        rank = (i + 1).astype(jnp.float32)
+        q, k = _qk(amax0, amax, rank, m, n, cfg)
+        slope = (trace[i] - amax) / jnp.maximum(amax0, 1e-20)
+        stop = (k >= q) | (k > 1.0 + cfg.x) | (slope < cfg.t)
+        # Accept the peel only if it pays.
+        u_buf = jnp.where(stop, u_buf, u_buf.at[:, i].set(u1))
+        v_buf = jnp.where(stop, v_buf, v_buf.at[i, :].set(v1))
+        trace = trace.at[i + 1].set(jnp.where(stop, trace[i], amax))
+        resid_next = jnp.where(stop, resid, resid_next)
+        return (i + 1, resid_next, u_buf, v_buf, trace, stop)
+
+    i, resid, u_buf, v_buf, trace, done = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), w, u_buf, v_buf, trace, jnp.bool_(False))
+    )
+    rank = jnp.where(done, i - 1, i).astype(jnp.int32)
+    q, k = _qk(amax0, trace[rank], rank.astype(jnp.float32), m, n, cfg)
+    return FLRResult(u_buf, v_buf, rank, trace, q, k)
+
+
+def flexible_rank_select_py(
+    w: jax.Array, key: jax.Array, cfg: FLRConfig
+) -> Tuple[jax.Array, jax.Array, int, list]:
+    """Python-driven R1-FLR (paper Alg. 1 verbatim): stops the moment the
+    rule fires, returning exactly-(m, r)/(r, n) factors and the amax trace."""
+    m, n = w.shape
+    max_r = min(cfg.max_rank, m, n)
+    resid = w
+    amax0 = float(jnp.max(jnp.abs(w)))
+    trace = [amax0]
+    us, vs = [], []
+    for i in range(max_r):
+        key, sub = jax.random.split(key)
+        u1, v1 = rank1_sketch(resid, sub, it=cfg.it)
+        resid_next = resid - jnp.outer(u1, v1).astype(resid.dtype)
+        amax = float(jnp.max(jnp.abs(resid_next)))
+        rank = i + 1
+        q, k = _qk(jnp.float32(amax0), jnp.float32(amax), rank, m, n, cfg)
+        slope = (trace[-1] - amax) / max(amax0, 1e-20)
+        if float(k) >= float(q) or float(k) > 1.0 + cfg.x or slope < cfg.t:
+            break
+        us.append(u1)
+        vs.append(v1)
+        trace.append(amax)
+        resid = resid_next
+    if not us:
+        return (
+            jnp.zeros((m, 0), w.dtype),
+            jnp.zeros((0, n), w.dtype),
+            0,
+            trace,
+        )
+    return jnp.stack(us, axis=1), jnp.stack(vs, axis=0), len(us), trace

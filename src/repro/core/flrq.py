@@ -1,0 +1,257 @@
+"""FLRQ orchestration: per-matrix quantizer and whole-model driver
+(paper Alg. 2: scaling → R1-FLR → clipping → BLC → pack).
+
+The per-matrix pipeline:
+
+  1. activation scaling  α = awq_scale(mean|X|)  (Eq. 10-11), W_s = W·diag(α),
+     X_s = diag(α)⁻¹·X  (output-equivalent reparameterization);
+  2. R1-FLR on W_s selects the rank r and initial (U, V);
+  3. BLC alternates (re-sketch quant residual, re-clip, re-quant) keeping the
+     best E = ||W_s X_s − (W_r + W_q) X_s||;
+  4. the winner is packed into a QuantizedLinear (α⁻¹ folded into the
+     runtime input scaling).
+
+``quantize_model`` maps this over every 2-D parameter of a model pytree
+that matches the quantization predicate (min size, not embeddings/norms),
+producing a parallel pytree of QuantizedLinear + a stats report that the
+benchmarks and EXPERIMENTS.md consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blc import blc as _run_blc
+from .flr import FLRConfig, flexible_rank_select_py
+from .quantize import (
+    QuantSpec,
+    awq_scale,
+    channel_mean_abs,
+    compute_qparams,
+    pseudo_quantize,
+    quantize_codes,
+    recon_error,
+    search_clip_ratio,
+)
+from ..quant import qtensor
+
+
+@dataclasses.dataclass(frozen=True)
+class FLRQConfig:
+    bits: int = 4
+    group_size: int = 128
+    symmetric: bool = False
+    x: float = 0.2               # memory budget (paper default)
+    t: float = 1e-4              # amax slope threshold
+    it: int = 2                  # sketch power iterations (paper default)
+    max_rank: int = 128
+    blc_epochs: int = 8          # paper: 1 suffices at 3/4-bit, ~20 at 2-bit
+    use_scaling: bool = True
+    use_blc: bool = True
+    seed: int = 0
+    store_dtype: Any = jnp.bfloat16
+
+    def flr(self) -> FLRConfig:
+        return FLRConfig(
+            bits=self.bits, x=self.x, t=self.t, it=self.it, max_rank=self.max_rank
+        )
+
+    def spec(self) -> QuantSpec:
+        return QuantSpec(self.bits, self.group_size, self.symmetric)
+
+    def recommended_blc_epochs(self) -> int:
+        # Paper Table 22: BLC converges in ~1 epoch at 3/4-bit, ~20 at 2-bit.
+        return max(self.blc_epochs, 20) if self.bits <= 2 else self.blc_epochs
+
+
+@dataclasses.dataclass
+class LayerStats:
+    name: str
+    shape: Tuple[int, int]
+    rank: int
+    err_before: float      # RTN error at same bits (no low-rank, no scaling)
+    err_after: float       # FLRQ error
+    extra_bits: float
+    clip: float
+    seconds: float
+
+
+def quantize_matrix(
+    w: jax.Array,
+    x_calib: Optional[jax.Array],
+    cfg: FLRQConfig,
+    key: jax.Array,
+    name: str = "w",
+) -> Tuple[qtensor.QuantizedLinear, LayerStats]:
+    """Quantize one (m, n) matrix. ``x_calib``: (tokens, n) calibration
+    activations feeding this matrix (None → unit scaling + Frobenius
+    objectives).
+
+    Robustness gate: activation scaling (Eq. 10-11) is heuristic — if the
+    scaled pipeline ends up worse than the unscaled RTN floor, we redo the
+    pipeline without scaling and keep the better result (a production
+    quantizer must never regress below its own trivial baseline).
+    """
+    qt, st = _quantize_matrix_once(w, x_calib, cfg, key, name)
+    if cfg.use_scaling and st.err_after > st.err_before:
+        cfg2 = dataclasses.replace(cfg, use_scaling=False)
+        qt2, st2 = _quantize_matrix_once(w, x_calib, cfg2, key, name)
+        if st2.err_after < st.err_after:
+            st2.seconds += st.seconds
+            return qt2, st2
+    return qt, st
+
+
+def _quantize_matrix_once(
+    w: jax.Array,
+    x_calib: Optional[jax.Array],
+    cfg: FLRQConfig,
+    key: jax.Array,
+    name: str = "w",
+) -> Tuple[qtensor.QuantizedLinear, LayerStats]:
+    t0 = time.perf_counter()
+    m, n = w.shape
+    spec = cfg.spec()
+    w32 = w.astype(jnp.float32)
+
+    if x_calib is None:
+        x_calib = jnp.zeros((0, n), jnp.float32)
+    xt = x_calib.astype(jnp.float32)
+
+    # --- (1) activation scaling ------------------------------------------
+    if cfg.use_scaling and xt.shape[0] > 0:
+        alpha = awq_scale(channel_mean_abs(xt))
+    else:
+        alpha = jnp.ones((n,), jnp.float32)
+    ws = w32 * alpha[None, :]
+    xs = (xt / alpha[None, :]).T  # (n, tokens) column-batch in scaled space
+    if xs.shape[1] == 0:
+        xs_obj = jnp.eye(n, dtype=jnp.float32)  # Frobenius objective
+    else:
+        xs_obj = xs
+
+    # --- baseline error (plain RTN, for the stats report) ----------------
+    err_before = float(recon_error(w32, pseudo_quantize(w32, spec), xt.T if xt.shape[0] else None))
+
+    # --- (2) flexible rank selection --------------------------------------
+    key, k_flr, k_blc = jax.random.split(key, 3)
+    u, v, rank, _trace = flexible_rank_select_py(ws, k_flr, cfg.flr())
+
+    # --- (3)+(4) BLC (or single-shot clip+quant if disabled) --------------
+    if cfg.use_blc:
+        res = _run_blc(
+            ws, xs_obj, k_blc, spec, rank,
+            epochs=cfg.recommended_blc_epochs(), it=cfg.it,
+        )
+        u, v, clip = res.u, res.v, res.clip
+        wq_deq = res.w_q
+        err_after = float(res.err)
+    else:
+        resid = ws - (u @ v if rank else 0.0)
+        clip = search_clip_ratio(resid, xs_obj, spec)
+        wq_deq = pseudo_quantize(resid, spec, clip)
+        err_after = float(recon_error(ws, wq_deq + (u @ v if rank else 0.0), xs_obj))
+        clip = jnp.asarray(clip)
+
+    # --- pack --------------------------------------------------------------
+    resid_final = ws - (u @ v if rank else jnp.zeros_like(ws))
+    scale, zp = compute_qparams(resid_final, spec, clip)
+    codes = quantize_codes(resid_final, spec, scale, zp)
+    if rank == 0:
+        u = jnp.zeros((m, 0), jnp.float32)
+        v = jnp.zeros((0, n), jnp.float32)
+    qt = qtensor.from_parts(
+        codes, scale, zp, u, v, spec,
+        act_scale_inv=1.0 / alpha, store_dtype=cfg.store_dtype,
+    )
+    stats = LayerStats(
+        name=name,
+        shape=(m, n),
+        rank=int(rank),
+        err_before=err_before,
+        err_after=err_after,
+        extra_bits=qt.extra_avg_bits(),
+        clip=float(clip),
+        seconds=time.perf_counter() - t0,
+    )
+    return qt, stats
+
+
+# ---------------------------------------------------------------------------
+# Whole-model driver
+# ---------------------------------------------------------------------------
+
+def default_predicate(path: str, leaf) -> bool:
+    """Quantize 2-D float matrices except embeddings / norms / tiny params."""
+    if not hasattr(leaf, "ndim") or leaf.ndim != 2:
+        return False
+    if leaf.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+        return False
+    lname = path.lower()
+    if any(s in lname for s in ("embed", "norm", "scale", "bias", "router")):
+        return False
+    m, n = leaf.shape
+    return m >= 128 and n >= 128 and (n % 128 == 0)
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[jax.tree_util.keystr(path)] = leaf
+    return flat
+
+
+def quantize_model(
+    params,
+    calib_acts: Optional[Dict[str, jax.Array]],
+    cfg: FLRQConfig,
+    predicate: Callable[[str, Any], bool] = default_predicate,
+    progress: Optional[Callable[[str, LayerStats], None]] = None,
+):
+    """Walk a parameter pytree; replace matching 2-D matrices with
+    QuantizedLinear. ``calib_acts`` maps the same key-paths to (tokens, n)
+    activation batches (missing entries → no calibration for that layer).
+
+    Returns (quantized_tree, {path: LayerStats}).
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    stats: Dict[str, LayerStats] = {}
+    flat_paths = _flatten_with_paths(params)
+    n_target = sum(1 for p, l in flat_paths.items() if predicate(p, l))
+    keys = iter(jax.random.split(key, max(n_target, 1)))
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if not predicate(pstr, leaf):
+            return leaf
+        xc = None
+        if calib_acts:
+            xc = calib_acts.get(pstr)
+        qt, st = quantize_matrix(leaf, xc, cfg, next(keys), name=pstr)
+        stats[pstr] = st
+        if progress:
+            progress(pstr, st)
+        return qt
+
+    qtree = jax.tree_util.tree_map_with_path(visit, params)
+    return qtree, stats
+
+
+def model_report(stats: Dict[str, LayerStats]) -> Dict[str, float]:
+    """Aggregate stats (paper Tables 3/9 style: avg rank, extra bits)."""
+    if not stats:
+        return dict(layers=0, avg_rank=0.0, avg_extra_bits=0.0,
+                    mean_err_before=0.0, mean_err_after=0.0, seconds=0.0)
+    n = len(stats)
+    return dict(
+        layers=n,
+        avg_rank=sum(s.rank for s in stats.values()) / n,
+        avg_extra_bits=sum(s.extra_bits for s in stats.values()) / n,
+        mean_err_before=sum(s.err_before for s in stats.values()) / n,
+        mean_err_after=sum(s.err_after for s in stats.values()) / n,
+        seconds=sum(s.seconds for s in stats.values()),
+    )

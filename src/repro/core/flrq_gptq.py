@@ -1,0 +1,98 @@
+"""FLRQ ∘ GPTQ: composing the paper's low-rank decomposition with OBS
+column-wise quantization.
+
+The paper positions FLRQ as "easily integrated with other approaches"
+(its released pipeline combines with RILQ/Quip#; Table 5). The natural
+in-repo composition is with GPTQ: use R1-FLR to pick the flexible-rank
+component first (absorbing outliers / dominant directions), then run the
+Hessian-aware GPTQ pass on the residual W − W_r instead of plain RTN:
+
+    W ≈ GPTQ(W − W_r; H) + W_r,     W_r = R1-FLR(αW) / α
+
+and optionally one BLC-style refresh of W_r against the *GPTQ* residual.
+GPTQ's error feedback handles intra-row rounding; the low-rank part
+handles the cross-row structure GPTQ cannot represent — they compose
+because they correct orthogonal error modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flr import flexible_rank_select_py
+from .flrq import FLRQConfig, LayerStats
+from .gptq import gptq_quantize
+from .quantize import (
+    awq_scale,
+    channel_mean_abs,
+    pseudo_quantize,
+    recon_error,
+)
+from .r1_sketch import sketch_lowrank
+
+
+def flrq_gptq_quantize(
+    w: jax.Array,
+    x_calib: Optional[jax.Array],
+    cfg: FLRQConfig,
+    key: jax.Array,
+    refresh_lowrank: bool = True,
+    name: str = "w",
+) -> Tuple[jax.Array, LayerStats]:
+    """Returns (w_hat effective matrix, stats). Same contract as the
+    baselines so quality benchmarks can score it directly."""
+    t0 = time.perf_counter()
+    m, n = w.shape
+    w32 = w.astype(jnp.float32)
+    xt = (jnp.zeros((0, n), jnp.float32) if x_calib is None
+          else x_calib.astype(jnp.float32))
+
+    # activation scaling (Eq. 10-11) with the same robustness gate as FLRQ
+    if cfg.use_scaling and xt.shape[0] > 0:
+        alpha = awq_scale(channel_mean_abs(xt))
+    else:
+        alpha = jnp.ones((n,), jnp.float32)
+    ws = w32 * alpha[None, :]
+    xs = xt / alpha[None, :]
+
+    err_rtn = float(recon_error(w32, pseudo_quantize(w32, cfg.spec()),
+                                xt.T if xt.shape[0] else None))
+
+    # (1) flexible low-rank first
+    key, k1, k2 = jax.random.split(key, 3)
+    u, v, rank, _ = flexible_rank_select_py(ws, k1, cfg.flr())
+    w_r = u @ v if rank else jnp.zeros_like(ws)
+
+    # (2) Hessian-aware quantization of the residual
+    what_q, _ = gptq_quantize(ws - w_r, xs if xs.shape[0] else None,
+                              cfg.bits, group_size=cfg.group_size,
+                              symmetric=cfg.symmetric)
+
+    # (3) optional low-rank refresh against the GPTQ residual (one BLC step)
+    if refresh_lowrank and rank:
+        u, v = sketch_lowrank(ws - what_q, k2, rank, it=cfg.it)
+        w_r = u @ v
+        what_q, _ = gptq_quantize(ws - w_r, xs if xs.shape[0] else None,
+                                  cfg.bits, group_size=cfg.group_size,
+                                  symmetric=cfg.symmetric)
+
+    what = (what_q + w_r) / alpha[None, :]
+    err = float(recon_error(w32, what, xt.T if xt.shape[0] else None))
+
+    # robustness gate (as core.flrq): never regress below plain RTN
+    if err > err_rtn and cfg.use_scaling:
+        cfg2 = dataclasses.replace(cfg, use_scaling=False)
+        return flrq_gptq_quantize(w, x_calib, cfg2, key,
+                                  refresh_lowrank, name)
+
+    stats = LayerStats(
+        name=name, shape=(m, n), rank=int(rank), err_before=err_rtn,
+        err_after=err,
+        extra_bits=16.0 * rank * (m + n) / (m * n),
+        clip=1.0, seconds=time.perf_counter() - t0,
+    )
+    return what, stats

@@ -1,0 +1,193 @@
+"""Group-wise low-bit quantization primitives used by FLRQ and all baselines.
+
+Everything here is pure-functional, jittable JAX. Weight matrices are
+quantized along the *input* (last) dimension in groups of ``group_size``
+(paper setting: 128), either symmetrically (signed codes, zero-point-free)
+or asymmetrically (unsigned codes + zero point). The paper's Eq. 8 uses a
+symmetric clamp; at 2 bits symmetric quantization only has 3 useful levels,
+so — like AWQ/GPTQ implementations — we default to asymmetric min/max with a
+searched clip ratio and expose symmetric as an option.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_GROUP_SIZE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantization format."""
+
+    bits: int = 4
+    group_size: int = DEFAULT_GROUP_SIZE
+    symmetric: bool = False
+
+    @property
+    def n_levels(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.symmetric else self.n_levels
+
+
+def _group(w: jax.Array, group_size: int) -> jax.Array:
+    """(m, n) -> (m, n // g, g). Requires n % g == 0 (configs guarantee it;
+    odd shapes are padded by callers)."""
+    m, n = w.shape
+    if n % group_size:
+        raise ValueError(f"n={n} not divisible by group_size={group_size}")
+    return w.reshape(m, n // group_size, group_size)
+
+
+def _ungroup(wg: jax.Array) -> jax.Array:
+    m, ng, g = wg.shape
+    return wg.reshape(m, ng * g)
+
+
+def compute_qparams(
+    w: jax.Array, spec: QuantSpec, clip_ratio: jax.Array | float = 1.0
+):
+    """Per-group (scale, zero_point). ``clip_ratio`` may be a scalar or a
+    per-output-row (m, 1, 1)-broadcastable array (BLC searches it)."""
+    wg = _group(w.astype(jnp.float32), spec.group_size)
+    if spec.symmetric:
+        amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True) * clip_ratio
+        scale = amax / spec.qmax
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.zeros_like(scale)
+    else:
+        wmax = jnp.max(wg, axis=-1, keepdims=True) * clip_ratio
+        wmin = jnp.min(wg, axis=-1, keepdims=True) * clip_ratio
+        scale = (wmax - wmin) / spec.n_levels
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.round(-wmin / scale)
+    return scale, zp
+
+
+def quantize_codes(
+    w: jax.Array, spec: QuantSpec, scale: jax.Array, zp: jax.Array
+) -> jax.Array:
+    """float weights -> integer codes (int32, grouped layout (m, n//g, g))."""
+    wg = _group(w.astype(jnp.float32), spec.group_size)
+    q = jnp.round(wg / scale) + zp
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(jnp.int32)
+
+
+def dequantize_codes(
+    codes: jax.Array, spec: QuantSpec, scale: jax.Array, zp: jax.Array,
+    dtype=jnp.float32,
+) -> jax.Array:
+    wg = (codes.astype(jnp.float32) - zp) * scale
+    return _ungroup(wg).astype(dtype)
+
+
+def pseudo_quantize(
+    w: jax.Array, spec: QuantSpec, clip_ratio: jax.Array | float = 1.0
+) -> jax.Array:
+    """Quantize-dequantize roundtrip (the `Quant()` of the paper)."""
+    scale, zp = compute_qparams(w, spec, clip_ratio)
+    codes = quantize_codes(w, spec, scale, zp)
+    return dequantize_codes(codes, spec, scale, zp, dtype=w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Clipping search (paper: "setting a portion of the numbers with the largest
+# absolute values to zero by clipping can improve quantization accuracy";
+# implemented — as in AWQ — as a grid search over group-range shrink ratios
+# minimizing output reconstruction error).
+# ---------------------------------------------------------------------------
+
+DEFAULT_CLIP_GRID = tuple(1.0 - 0.05 * i for i in range(8))  # 1.0 .. 0.65
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _clip_errors(w, x, spec: QuantSpec, grid: jax.Array):
+    """Error ||W X - Q(W; c) X||^2 for every clip ratio c in grid.
+
+    x: (n, b) column-batch of calibration activations, or None-sentinel of
+    shape (n, 0) meaning plain Frobenius weight error.
+    """
+
+    def err(c):
+        wq = pseudo_quantize(w, spec, c)
+        d = (w - wq).astype(jnp.float32)
+        if x.shape[1] == 0:
+            return jnp.sum(d * d)
+        dx = d @ x.astype(jnp.float32)
+        return jnp.sum(dx * dx)
+
+    return jax.lax.map(err, grid)
+
+
+def search_clip_ratio(
+    w: jax.Array,
+    x: Optional[jax.Array],
+    spec: QuantSpec,
+    grid=DEFAULT_CLIP_GRID,
+) -> jax.Array:
+    """Return the scalar clip ratio minimizing reconstruction error."""
+    if x is None:
+        x = jnp.zeros((w.shape[1], 0), jnp.float32)
+    g = jnp.asarray(grid, jnp.float32)
+    errs = _clip_errors(w, x, spec, g)
+    return g[jnp.argmin(errs)]
+
+
+# ---------------------------------------------------------------------------
+# Activation-aware scaling (paper Eq. 10-11, AWQ-like)
+# ---------------------------------------------------------------------------
+
+def awq_scale(x_mean: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """alpha = Xbar^2.5 / sqrt(max(Xbar) * min(Xbar)).   (paper Eq. 11)
+
+    x_mean: per-input-channel mean of |activations| (n,), "per-token
+    normalized mean" in the paper. Returns per-channel alpha (n,), clipped
+    into a sane dynamic range so degenerate calibration cannot blow up the
+    weights.
+    """
+    xb = jnp.abs(x_mean.astype(jnp.float32)) + eps
+    denom = jnp.sqrt(jnp.max(xb) * jnp.min(xb))
+    alpha = xb ** 2.5 / denom
+    # Normalize to geometric mean 1 so overall weight magnitude is preserved,
+    # then clamp: alpha multiplies W columns, alpha^-1 folds into W_L / the
+    # previous layer.
+    alpha = alpha / jnp.exp(jnp.mean(jnp.log(alpha)))
+    return jnp.clip(alpha, 1e-2, 1e2)
+
+
+def channel_mean_abs(x: jax.Array) -> jax.Array:
+    """Per-channel mean |x| over a (tokens, n) calibration batch, with
+    per-token normalization as in the paper."""
+    x = x.astype(jnp.float32)
+    tok_norm = jnp.linalg.norm(x, axis=-1, keepdims=True) / jnp.sqrt(x.shape[-1])
+    x = x / jnp.maximum(tok_norm, 1e-6)
+    return jnp.mean(jnp.abs(x), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Error metrics
+# ---------------------------------------------------------------------------
+
+def recon_error(w: jax.Array, w_hat: jax.Array, x: Optional[jax.Array] = None):
+    """Relative L2 output error  ||WX - What X|| / ||WX||  (paper's E)."""
+    w = w.astype(jnp.float32)
+    w_hat = w_hat.astype(jnp.float32)
+    if x is None:
+        num = jnp.linalg.norm(w - w_hat)
+        den = jnp.linalg.norm(w)
+    else:
+        x = x.astype(jnp.float32)
+        num = jnp.linalg.norm(w @ x - w_hat @ x)
+        den = jnp.linalg.norm(w @ x)
+    return num / jnp.maximum(den, 1e-12)

@@ -1,0 +1,114 @@
+"""R1-Sketch: rank-1 randomized-SVD sketching (paper Eq. 5-7, 13-14).
+
+The paper's core efficiency contribution. For a matrix A and a Gaussian
+vector s, run ``it`` power iterations:
+
+    P = (A A^T)^it A s,    K = A^T P
+
+then the dominant rank-1 component of A is
+
+    A_L = (||K|| / ||P||) * P / ||P||   (m-vector)
+    A_R = K / ||K||                      (n-vector)
+
+and  A ≈ A_L A_R^T + residual.  Peeling this repeatedly from the residual
+builds an incremental low-rank approximation whose rank can be decided
+*while* sketching — the property R1-FLR exploits.
+
+Three implementations live here:
+  * ``rank1_sketch``        one rank-1 step (jitted building block)
+  * ``sketch_lowrank``      fixed-rank peel via lax.scan (jittable end-to-end)
+  * ``sketch_lowrank_block``  beyond-paper blocked variant (block power
+    iteration + QR): sketches ``block`` directions per pass, turning GEMV
+    into GEMM for the MXU. Same peel semantics at block=1.
+
+A Pallas TPU kernel version of the inner step is in
+``repro.kernels.r1_sketch`` (VMEM-resident A tile across all 2it+2 GEMVs).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-20
+
+
+@partial(jax.jit, static_argnames=("it",))
+def rank1_sketch(a: jax.Array, key: jax.Array, it: int = 2) -> Tuple[jax.Array, jax.Array]:
+    """One R1-Sketch step. Returns (u, v) with a ≈ outer(u, v) + residual.
+
+    Cost: exactly 2*it + 2 matrix-vector products (paper: "6 GEMV" at it=2).
+    """
+    a32 = a.astype(jnp.float32)
+    s = jax.random.normal(key, (a.shape[1],), jnp.float32)
+    p = a32 @ s
+    # The A_L/A_R formulas (Eq. 7) are invariant to the scale of P, so we
+    # renormalize between power iterations — without this, ||P|| grows as
+    # sigma_1^(2it+1) and overflows f32 for large / activation-scaled
+    # matrices.
+    p = p / jnp.maximum(jnp.linalg.norm(p), _EPS)
+    for _ in range(it):  # unrolled: `it` is tiny and static
+        p = a32 @ (a32.T @ p)
+        p = p / jnp.maximum(jnp.linalg.norm(p), _EPS)
+    k = a32.T @ p  # with ||P|| = 1:  A_L = ||K|| * P,  A_R = K / ||K||
+    kn = jnp.maximum(jnp.linalg.norm(k), _EPS)
+    u = p * kn
+    v = k / kn
+    return u.astype(a.dtype), v.astype(a.dtype)
+
+
+@partial(jax.jit, static_argnames=("rank", "it"))
+def sketch_lowrank(
+    a: jax.Array, key: jax.Array, rank: int, it: int = 2
+) -> Tuple[jax.Array, jax.Array]:
+    """Peel ``rank`` rank-1 components. Returns (U (m,r), V (r,n)) such that
+    a ≈ U @ V. Fully jittable (lax.scan over the peel)."""
+    keys = jax.random.split(key, rank)
+
+    def body(residual, k):
+        u, v = rank1_sketch(residual, k, it=it)
+        residual = residual - jnp.outer(u, v).astype(residual.dtype)
+        return residual, (u, v)
+
+    _, (us, vs) = jax.lax.scan(body, a, keys)
+    return jnp.transpose(us), vs  # (m, r), (r, n)
+
+
+@partial(jax.jit, static_argnames=("rank", "block", "it"))
+def sketch_lowrank_block(
+    a: jax.Array, key: jax.Array, rank: int, block: int = 8, it: int = 2
+) -> Tuple[jax.Array, jax.Array]:
+    """Beyond-paper: block power iteration (randomized subspace iteration)
+    peeling ``block`` directions per pass. GEMM-shaped for the MXU; QR keeps
+    the block orthonormal. Produces (U (m,r), V (r,n)); rank must be a
+    multiple of block."""
+    if rank % block:
+        raise ValueError(f"rank={rank} must be a multiple of block={block}")
+    n_steps = rank // block
+    keys = jax.random.split(key, n_steps)
+
+    def body(residual, k):
+        r32 = residual.astype(jnp.float32)
+        s = jax.random.normal(k, (residual.shape[1], block), jnp.float32)
+        p = r32 @ s
+        for _ in range(it):
+            p, _ = jnp.linalg.qr(p)  # stabilize between power iterations
+            p = r32 @ (r32.T @ p)
+        q, _ = jnp.linalg.qr(p)  # (m, block) orthonormal basis
+        b = q.T @ r32  # (block, n)
+        u = q.astype(residual.dtype)
+        v = b.astype(residual.dtype)
+        residual = residual - (u @ v).astype(residual.dtype)
+        return residual, (u, v)
+
+    _, (us, vs) = jax.lax.scan(body, a, keys)
+    u = jnp.transpose(us, (1, 0, 2)).reshape(a.shape[0], rank)
+    v = vs.reshape(rank, a.shape[1])
+    return u, v
+
+
+def sketch_apply(u: jax.Array, v: jax.Array, x: jax.Array) -> jax.Array:
+    """(U V) @ x computed low-rank-wise: U @ (V @ x)."""
+    return u @ (v @ x)

@@ -1,0 +1,51 @@
+"""Baseline low-rank approximations: exact/truncated SVD and RSVD.
+
+These are the methods FLRQ's R1-Sketch replaces (paper Table 12, Fig 6).
+Same (U, V) contract as ``r1_sketch.sketch_lowrank``: A ≈ U @ V.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def truncated_svd(a: jax.Array, rank: int) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-``rank`` SVD (LAPACK on CPU; the paper's torch.linalg.svd
+    analogue)."""
+    u, s, vt = jnp.linalg.svd(a.astype(jnp.float32), full_matrices=False)
+    ur = (u[:, :rank] * s[:rank]).astype(a.dtype)
+    vr = vt[:rank, :].astype(a.dtype)
+    return ur, vr
+
+
+@partial(jax.jit, static_argnames=("rank", "it", "oversample"))
+def rsvd(
+    a: jax.Array, key: jax.Array, rank: int, it: int = 2, oversample: int = 8
+) -> Tuple[jax.Array, jax.Array]:
+    """Randomized SVD (Halko-Martinsson-Tropp), the algorithm R1-Sketch is a
+    rank-1 specialization of. Stage A: Y = (AA*)^it A S, Q = qr(Y).
+    Stage B: B = Q*A, svd(B)."""
+    a32 = a.astype(jnp.float32)
+    m, n = a.shape
+    r = min(rank + oversample, min(m, n))
+    s = jax.random.normal(key, (n, r), jnp.float32)
+    y = a32 @ s
+    for _ in range(it):
+        q, _ = jnp.linalg.qr(y)
+        y = a32 @ (a32.T @ q)
+    q, _ = jnp.linalg.qr(y)  # (m, r)
+    b = q.T @ a32  # (r, n)
+    ub, sb, vtb = jnp.linalg.svd(b, full_matrices=False)
+    u = (q @ ub[:, :rank]) * sb[:rank]
+    return u.astype(a.dtype), vtb[:rank, :].astype(a.dtype)
+
+
+def lowrank_error(a: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
+    """Relative Frobenius error of the rank-r approximation."""
+    a32 = a.astype(jnp.float32)
+    num = jnp.linalg.norm(a32 - (u.astype(jnp.float32) @ v.astype(jnp.float32)))
+    return num / jnp.maximum(jnp.linalg.norm(a32), 1e-12)

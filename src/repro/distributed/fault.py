@@ -1,0 +1,110 @@
+"""Cluster-health substrate: heartbeats, failure detection, recovery plans.
+
+On a real 1000-node deployment this runs next to the training driver: every
+host reports a heartbeat; the (replicated, deterministic) monitor declares
+hosts dead after ``timeout`` missed beats, classifies stragglers from step-
+time quantiles, and emits a recovery plan — which surviving mesh to re-mesh
+onto (checkpoint restore handles the resharding, see
+``checkpoint.Checkpointer.restore(shardings=...)``).
+
+This container has one host, so the module is exercised by simulation in
+tests — the logic (quantile straggler detection, largest-rectangle mesh
+survivor selection) is the deployable part.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat: float = 0.0
+    step_times: List[float] = dataclasses.field(default_factory=list)
+    alive: bool = True
+
+
+@dataclasses.dataclass
+class RecoveryPlan:
+    dead_hosts: List[int]
+    straggler_hosts: List[int]
+    action: str                 # "none" | "mitigate_stragglers" | "remesh"
+    new_mesh_shape: Optional[Tuple[int, ...]] = None
+
+
+class HealthMonitor:
+    """Deterministic health tracking over host heartbeats + step timings."""
+
+    def __init__(self, n_hosts: int, hosts_per_pod: int = 16,
+                 timeout_s: float = 60.0, straggler_factor: float = 2.0,
+                 window: int = 16):
+        self.hosts = {i: HostState(i) for i in range(n_hosts)}
+        self.hosts_per_pod = hosts_per_pod
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.window = window
+
+    def heartbeat(self, host_id: int, step_time_s: Optional[float] = None,
+                  now: Optional[float] = None) -> None:
+        h = self.hosts[host_id]
+        h.last_beat = time.monotonic() if now is None else now
+        h.alive = True
+        if step_time_s is not None:
+            h.step_times.append(step_time_s)
+            del h.step_times[:-self.window]
+
+    def _median_step(self) -> float:
+        all_t = sorted(t for h in self.hosts.values() for t in h.step_times)
+        return all_t[len(all_t) // 2] if all_t else 0.0
+
+    def check(self, now: Optional[float] = None) -> RecoveryPlan:
+        now = time.monotonic() if now is None else now
+        dead, slow = [], []
+        med = self._median_step()
+        for h in self.hosts.values():
+            if h.alive and now - h.last_beat > self.timeout_s:
+                h.alive = False
+            if not h.alive:
+                dead.append(h.host_id)
+                continue
+            if (med > 0 and h.step_times
+                    and h.step_times[-1] > self.straggler_factor * med):
+                slow.append(h.host_id)
+        if dead:
+            return RecoveryPlan(dead, slow, "remesh",
+                                self.survivor_mesh(dead))
+        if slow:
+            return RecoveryPlan(dead, slow, "mitigate_stragglers")
+        return RecoveryPlan([], [], "none")
+
+    def survivor_mesh(self, dead: Sequence[int]) -> Tuple[int, ...]:
+        """Largest power-of-two data axis that the surviving host count
+        supports, keeping the model axis intact (elastic re-mesh target).
+        E.g. 32 hosts (512 chips as (2,16,16)), one dead pod-half ->
+        (16, 16) single-pod mesh."""
+        alive = sum(1 for h in self.hosts.values() if h.alive
+                    and h.host_id not in dead)
+        chips = alive * self.hosts_per_pod
+        model = 16
+        data = 1
+        while data * 2 * model <= chips:
+            data *= 2
+        return (data, model)
+
+
+def run_with_retries(fn, max_restarts: int = 3,
+                     on_restart=None) -> Tuple[int, object]:
+    """Driver-level restart wrapper: re-invokes ``fn(attempt)`` after
+    recoverable failures (the checkpointed train_loop resumes itself).
+    Returns (attempts_used, result)."""
+    last_exc = None
+    for attempt in range(max_restarts + 1):
+        try:
+            return attempt, fn(attempt)
+        except (TimeoutError, OSError) as e:  # recoverable classes
+            last_exc = e
+            if on_restart:
+                on_restart(attempt, e)
+    raise RuntimeError(f"exhausted {max_restarts} restarts") from last_exc

@@ -1,0 +1,378 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs            / (chips × peak_FLOP/s)
+    memory     = HLO_bytes            / (chips × HBM_bw)
+    collective = Σ wire_bytes(op)     / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+parsed from the optimized HLO text: for each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we take the *result* shape
+and model ring-algorithm wire traffic per participating device:
+
+    all-gather          (n-1)/n × result_bytes
+    all-reduce          2 (n-1)/n × result_bytes
+    reduce-scatter      (n-1) × result_bytes          (operand = n × result)
+    all-to-all          (n-1)/n × result_bytes
+    collective-permute  result_bytes
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of one (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0          # per-device wire traffic (ring model)
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        # NB: use m.end() — the leading ^\s* of the pattern consumes the
+        # previous newline, so slicing from m.start() would return "".
+        eol = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start():eol if eol != -1 else len(hlo_text)]
+        if "-done(" in line:
+            continue  # paired with -start; counted once
+        rb = _shape_bytes(type_str)
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        if kind == "all-gather":
+            wb = rb * (n - 1) / n
+        elif kind == "all-reduce":
+            wb = 2 * rb * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wb = rb * (n - 1)
+        elif kind == "all-to-all":
+            wb = rb * (n - 1) / n
+        else:  # collective-permute
+            wb = rb
+        stats.wire_bytes += wb
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + wb
+        stats.count += 1
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total HLO flops (all devices)
+    hbm_bytes: float             # total HLO bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    n_devices: int
+    model_flops: float = 0.0     # 6·N·D useful flops
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: int = 0
+    per_device_hbm: float = 0.0  # peak memory per device (memory_analysis)
+    xla_flops: float = 0.0       # raw cost_analysis (scan bodies counted once)
+    xla_bytes: float = 0.0
+    min_bytes: float = 0.0       # irreducible HBM traffic (weights [+cache])
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_devices * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_devices * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def t_intrinsic(self) -> float:
+        """Lower bound on step time from physics: useful FLOPs on the MXU
+        vs. irreducible bytes (weights + KV cache for decode) through HBM —
+        whichever is larger."""
+        t_model = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        t_bytes = self.min_bytes / (self.n_devices * HBM_BW)
+        return max(t_model, t_bytes)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """intrinsic step time / achieved (bound) step time. 1.0 = at the
+        roofline. For compute-bound training this is MFU-like; for memory-
+        bound decode it is the achieved-bandwidth fraction."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_intrinsic / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return dict(
+            flops=self.flops, hbm_bytes=self.hbm_bytes,
+            wire_bytes=self.wire_bytes, n_devices=self.n_devices,
+            model_flops=self.model_flops,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+            coll_by_kind=self.coll_by_kind, coll_count=self.coll_count,
+            per_device_hbm=self.per_device_hbm,
+            xla_flops=self.xla_flops, xla_bytes=self.xla_bytes,
+            min_bytes=self.min_bytes, t_intrinsic=self.t_intrinsic,
+        )
+
+
+def analyze(compiled, n_devices: int, model_flops: float = 0.0,
+            cfg=None, shape=None, quantized: bool = False) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    # XLA:CPU reports per-program flops; bytes accessed similarly.
+    hbm = float(cost.get("bytes accessed", 0.0))
+    xla_flops, xla_bytes = flops, hbm
+    minb = 0.0
+    if cfg is not None and shape is not None:
+        # CPU cost_analysis counts scan bodies once — use the analytic model
+        # (see module docstring) and keep the XLA numbers for reference.
+        flops = analytic_flops(cfg, shape, quantized)
+        hbm = analytic_hbm_bytes(cfg, shape, quantized)
+        minb = min_hbm_bytes(cfg, shape, quantized)
+    text = compiled.as_text()
+    coll = collective_stats(text, n_devices)
+    per_dev = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        per_dev = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    r = Roofline(
+        flops=flops, hbm_bytes=hbm, wire_bytes=coll.wire_bytes,
+        n_devices=n_devices, model_flops=model_flops,
+        coll_by_kind=coll.by_kind, coll_count=coll.count,
+        per_device_hbm=per_dev,
+    )
+    r.xla_flops = xla_flops
+    r.xla_bytes = xla_bytes
+    r.min_bytes = minb
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model.
+#
+# XLA:CPU's cost_analysis() counts a lax.scan/while body ONCE (verified:
+# qwen3-4b train_4k reports 4.0e12 flops where the true count is ~2.6e19),
+# so on this CPU-only container the compute and memory roofline terms come
+# from the analytic model below (structure-exact: matmul/attention/ssm flops
+# per layer × layers × tokens; bytes from params/activations/cache traffic).
+# The *collective* term and the optimization profile (gather/reshard
+# patterns, remat duplicates) still come from the compiled HLO, which is
+# shape-faithful. cost_analysis values are reported alongside for
+# transparency.
+# ---------------------------------------------------------------------------
+
+def analytic_flops(cfg, shape, quantized: bool = False,
+                   include_remat: bool = True) -> float:
+    """Structure-exact FLOPs for one step of this cell (all devices).
+    ``include_remat=False`` gives the *useful* count (fwd + bwd only) used
+    as MODEL_FLOPS; the default adds the remat re-forward overhead."""
+    B, S, kind = shape.global_batch, shape.seq_len, shape.kind
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+    qd, kvd, hd, H = cfg.q_dim, cfg.kv_dim, cfg.head_dim, cfg.n_heads
+    tokens = B * S
+
+    def attn_ctx(s_q, s_ctx, layer_frac_local=None):
+        """attention score+value flops for one layer."""
+        if cfg.local_window and kind != "decode":
+            w = min(cfg.local_window, s_ctx)
+            if cfg.global_every:  # gemma2: half local, half global
+                ctx = 0.5 * w + 0.5 * s_ctx * 0.5  # causal halves global
+                return 2 * 2 * B * H * s_q * ctx * hd
+            if cfg.global_layers:  # hymba: few global layers
+                ng = len(cfg.global_layers)
+                frac_g = ng / L
+                ctx = (1 - frac_g) * w + frac_g * s_ctx * 0.5
+                return 2 * 2 * B * H * s_q * ctx * hd
+        causal_frac = 0.5 if (kind != "decode" and not cfg.is_encoder) else 1.0
+        return 2 * 2 * B * H * s_q * s_ctx * causal_frac * hd
+
+    # per-token matmul flops in one layer
+    if cfg.family in ("dense", "moe", "encoder"):
+        attn_proj = 2 * (D * qd + 2 * D * kvd + qd * D)
+        if cfg.family == "moe":
+            ffn = 2 * (cfg.topk * 3 * D * F + D * cfg.n_experts)
+        elif cfg.family == "encoder":
+            ffn = 2 * 2 * D * F
+        else:
+            ffn = 2 * 3 * D * F
+        per_tok_layer = attn_proj + ffn
+    elif cfg.family == "rwkv6":
+        tm = 2 * 5 * D * D + 2 * 2 * D * 64          # 5 proj + decay lora
+        wkv = 3 * 2 * D * cfg.rwkv_head_dim          # state update + readout
+        cm = 2 * (D * F + F * D + D * D)
+        per_tok_layer = tm + wkv + cm
+    elif cfg.family == "hymba":
+        Di, N = cfg.d_inner_resolved, cfg.ssm_state
+        attn_proj = 2 * (D * qd + 2 * D * kvd + qd * D)
+        mamba = 2 * (D * 2 * Di + Di * Di + 2 * Di * N + Di * D) + 8 * Di * N
+        mlp = 2 * 3 * D * F
+        per_tok_layer = attn_proj + mamba + mlp
+    else:
+        raise ValueError(cfg.family)
+
+    unembed = 2 * D * V
+
+    if kind == "train":
+        fwd = tokens * (L * per_tok_layer + unembed)
+        if cfg.family in ("dense", "moe", "encoder", "hymba"):
+            fwd += L * attn_ctx(S, S)
+        remat_factor = 0.0
+        if cfg.remat and include_remat:
+            remat_factor = {"full": 1.0, "dots": 0.33, "none": 0.0}.get(
+                getattr(cfg, "remat_policy", "full"), 1.0)
+        return fwd * (3.0 + remat_factor)
+    if kind == "prefill":
+        fwd = tokens * (L * per_tok_layer + unembed)
+        if cfg.family in ("dense", "moe", "encoder", "hymba"):
+            fwd += L * attn_ctx(S, S)
+        return fwd
+    # decode: 1 token per sequence, attention over the full cache
+    fwd = B * (L * per_tok_layer + unembed)
+    if cfg.family in ("dense", "moe", "hymba"):
+        fwd += L * attn_ctx(1, S)
+    return fwd
+
+
+def analytic_hbm_bytes(cfg, shape, quantized: bool = False,
+                       weight_bits: float = 16.0) -> float:
+    """HBM traffic for one step (all devices). Activation traffic uses a
+    per-layer tensor-count coefficient (≈12 activation r/w per layer)."""
+    B, S, kind = shape.global_batch, shape.seq_len, shape.kind
+    L, D = cfg.n_layers, cfg.d_model
+    tokens = B * S
+    n_params = cfg.param_count()
+    wbytes = weight_bits / 8.0
+    if quantized:
+        wbytes = (cfg_quant_bits(cfg) / 8.0)
+    p_bytes = n_params * wbytes
+    act_coeff = 12.0
+    act_bytes = tokens * L * act_coeff * D * 2.0  # bf16 activations
+    cache_bytes = 0.0
+    kvb = getattr(cfg, "kv_cache_bits", 16) / 8.0
+    if cfg.family in ("dense", "moe", "hymba"):
+        cache_bytes = 2 * L * B * S * cfg.kv_dim * kvb
+    elif cfg.family == "rwkv6":
+        cache_bytes = L * B * D * cfg.rwkv_head_dim * 2.0
+
+    if kind == "train":
+        # fwd read + remat read + bwd read of params; grads + 2 moments rw in f32
+        opt = n_params * 4.0 * 6.0
+        return 3 * p_bytes + opt + 3 * act_bytes
+    if kind == "prefill":
+        return p_bytes + act_bytes + cache_bytes  # cache written once
+    # decode: every step streams all weights + the whole cache + tiny acts
+    return p_bytes + cache_bytes + B * L * act_coeff * D * 2.0
+
+
+def cfg_quant_bits(cfg) -> float:
+    """Effective bits/weight under FLRQ W4 defaults (4b codes + group scales
+    + ~0.2 extra bits of low-rank factors, paper Tables 3/19)."""
+    return 4.0 + 0.32 + 0.2
+
+
+def min_hbm_bytes(cfg, shape, quantized: bool = False) -> float:
+    """Irreducible per-step HBM traffic: every weight byte must be read once
+    (at serving precision) and — for decode — the whole KV/SSM cache too."""
+    B, S, kind = shape.global_batch, shape.seq_len, shape.kind
+    wbytes = (cfg_quant_bits(cfg) if quantized else 16.0) / 8.0
+    p_bytes = cfg.param_count() * wbytes
+    if kind == "train":
+        return 3 * p_bytes + cfg.param_count() * 4.0 * 6.0
+    if kind == "prefill":
+        return p_bytes
+    cache = 0.0
+    kv_bytes = getattr(cfg, "kv_cache_bits", 16) / 8.0
+    if cfg.family in ("dense", "moe", "hymba"):
+        cache = 2 * cfg.n_layers * B * S * cfg.kv_dim * kv_bytes
+        if kv_bytes < 2.0:
+            cache *= 1.0 + 1.0 / cfg.head_dim  # per-entry scales
+    elif cfg.family == "rwkv6":
+        cache = cfg.n_layers * B * cfg.d_model * cfg.rwkv_head_dim * 2.0
+    return p_bytes + cache
+
+
+# ---------------------------------------------------------------------------
+# Useful-FLOPs models (MODEL_FLOPS = 6·N·D for training; 2·N·D for one
+# forward; decode: 2·N_active per token)
+# ---------------------------------------------------------------------------
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful FLOPs: structure-exact forward(+backward for train) including
+    attention score/value work, EXCLUDING remat recompute. For dense LMs
+    this reduces to ~6·N·D (train) / 2·N·D (prefill) + attention."""
+    return analytic_flops(cfg, shape, include_remat=False)

@@ -1,0 +1,292 @@
+"""Sharding rules: parameters (2-D FSDP×TP), activations, batches, caches.
+
+Layout policy (v5e 16×16 pod, optionally ×2 pods):
+  * TP ("model")            — attention heads / d_ff / vocab
+  * FSDP ("pod","data")     — the other weight dim, gathered layer-by-layer
+                              inside lax.scan (XLA overlaps gather & compute)
+  * batch ("pod","data")    — data parallel on the batch dim
+  * decode KV cache         — batch on data, *sequence* on model (flash-
+                              decode style distributed softmax; KV heads are
+                              rarely divisible by 16, sequence always is)
+
+Every rule degrades gracefully: an axis is applied only if it divides the
+dim (e.g. hymba's 25 heads stay replicated on the head dim; its 1600-wide
+d_model still FSDP-shards 32 ways).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution with divisibility guards
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, axis) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def _filter_axis(mesh, axis):
+    """Drop mesh axes that don't exist (e.g. 'pod' on a single-pod mesh)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+def resolve_spec(spec: P, mesh, shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Adapt a written-for-multipod PartitionSpec to ``mesh``: filter missing
+    axes and (if ``shape`` given) drop axes that don't divide the dim."""
+    out = []
+    for i, axis in enumerate(spec):
+        axis = _filter_axis(mesh, axis)
+        if axis is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, axis) != 0:
+                axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def make_constrainer(mesh):
+    """Build the fn installed into models.layers.set_constrainer."""
+
+    def constrain(x, spec: P):
+        spec = resolve_spec(spec, mesh, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def install(mesh) -> None:
+    from ..models import layers
+
+    layers.set_constrainer(make_constrainer(mesh))
+
+
+def uninstall() -> None:
+    from ..models import layers
+
+    layers.set_constrainer(lambda x, spec: x)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+FSDP = ("pod", "data")
+TP = "model"
+
+# (regex on param path) -> PartitionSpec for the *unstacked* dims.
+# Stacked layer params get a leading None prepended automatically.
+_RULES = [
+    # embeddings / output head
+    (r"embed$", P(TP, FSDP)),
+    (r"unembed$", P(FSDP, TP)),
+    # attention
+    (r"\bwq$", P(FSDP, TP)),
+    (r"\bwk$", P(FSDP, TP)),
+    (r"\bwv$", P(FSDP, TP)),
+    (r"\bwo$", P(TP, FSDP)),
+    # dense mlp
+    (r"w_gate$", P(FSDP, TP)),
+    (r"w_up$", P(FSDP, TP)),
+    (r"w_down$", P(TP, FSDP)),
+    (r"\bw_in$", P(FSDP, TP)),
+    (r"\bw_out$", P(TP, FSDP)),
+    # moe (leading expert dim replicated; experts are few (8) or many (128),
+    # neither matches the 16-way model axis — d_ff shards instead)
+    (r"router$", P(FSDP, None)),
+    # rwkv6
+    (r"\bwr$|\bwg$", P(FSDP, TP)),
+    (r"w_lora_a$", P(FSDP, None)),
+    (r"w_lora_b$", P(None, FSDP)),
+    (r"wk_cm$", P(FSDP, TP)),
+    (r"wv_cm$", P(TP, FSDP)),
+    (r"wr_cm$", P(FSDP, TP)),
+    # hymba mamba
+    (r"conv_w$", P(None, TP)),
+    (r"conv_b$", P(TP)),
+    (r"w_dt$", P(None, TP)),
+    (r"w_B$|w_C$", P(TP, None)),
+    (r"a_log$", P(TP, None)),
+    (r"d_skip$", P(TP)),
+]
+
+_MOE_RULES = [
+    (r"w_gate$", P(None, FSDP, TP)),
+    (r"w_up$", P(None, FSDP, TP)),
+    (r"w_down$", P(None, TP, FSDP)),
+]
+
+# expert parallelism: experts over the model axis (when divisible), d_ff
+# unsharded -> the expert einsum contracts unsharded dims only (no
+# model-axis partial-sum ARs on (B,E,cap,*) tensors; the combine is one
+# (B,S,D) reduction per layer instead).
+_MOE_EP_RULES = [
+    (r"w_gate$", P(TP, FSDP, None)),
+    (r"w_up$", P(TP, FSDP, None)),
+    (r"w_down$", P(TP, None, FSDP)),
+]
+
+
+def _rule_for(path: str, ndim_unstacked: int, is_moe_expert: bool,
+              expert_parallel: bool = False) -> P:
+    if is_moe_expert:
+        rules = (_MOE_EP_RULES if expert_parallel else _MOE_RULES) + _RULES
+    else:
+        rules = _RULES
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if len(spec) == ndim_unstacked:
+                return spec
+    return P(*([None] * ndim_unstacked))  # norms, biases, mu, scalars
+
+
+_QFIELD = re.compile(r"\.(packed|scale|zp|u|v|act_scale_inv)$")
+
+
+def _norm(path: str) -> str:
+    """keystr gives "['layers']['wq'].packed" — normalize to
+    ".layers.wq.packed" so the $-anchored rules match."""
+    return re.sub(r"\[['\"]?([^'\"\]]+)['\"]?\]", r".\1", path)
+
+
+def param_spec(path: str, leaf_shape: Tuple[int, ...], cfg: ModelConfig) -> P:
+    path = _norm(path)
+    qm = _QFIELD.search(path)
+    if qm:
+        return _quantized_spec(path[: qm.start()], qm.group(1), leaf_shape, cfg)
+    stacked = ".layers" in path
+    is_moe_expert = (
+        cfg.family == "moe"
+        and re.search(r"w_gate$|w_up$|w_down$", path) is not None
+        and len(leaf_shape) == (4 if stacked else 3)
+    )
+    nd = len(leaf_shape) - (1 if stacked else 0)
+    spec = _rule_for(path, nd, is_moe_expert,
+                     getattr(cfg, "expert_parallel", False))
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def _quantized_spec(parent: str, field: str, leaf_shape, cfg: ModelConfig) -> P:
+    """Sharding for a QuantizedLinear field, derived from the parent
+    matrix's (in, out) rule: the quantizer stores the transpose, so the
+    packed codes (m=out, n_groups=in/g) shard (a_out, a_in)."""
+    base = _rule_for(parent, 2, False)
+    a_in, a_out = base[0], base[1]
+    if field in ("packed", "scale", "zp"):
+        spec, nd = (a_out, a_in, None), 3
+    elif field == "u":
+        spec, nd = (a_out, None), 2
+    elif field == "v":
+        spec, nd = (None, a_in), 2
+    else:  # act_scale_inv
+        spec, nd = (a_in,), 1
+    lead = len(leaf_shape) - nd
+    return P(*([None] * lead), *spec)
+
+
+def _strip_fsdp(spec: P) -> P:
+    """Serving layout: drop the FSDP axes (weights replicate over data,
+    shard TP-only) so decode never re-gathers weights per token."""
+    def strip(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(x for x in a if x not in FSDP)
+            return kept if kept else None
+        return None if a in FSDP else a
+
+    return P(*[strip(a) for a in spec])
+
+
+def param_shardings(cfg: ModelConfig, params_shapes, mesh,
+                    serving_tp_only: bool = False,
+                    tp_only_max_bytes: float = 12e9):
+    """pytree of NamedSharding matching a params (shape) pytree.
+
+    ``serving_tp_only``: beyond-paper serving layout — weights shard TP-only
+    (replicated over the data axis) when the total TP-sharded footprint per
+    chip stays under ``tp_only_max_bytes``; oversized models (grok-1 bf16)
+    keep the 2-D layout. Eliminates the per-token FSDP all-gather that
+    dominates the decode collective term.
+    """
+    use_tp_only = False
+    if serving_tp_only:
+        total = sum(
+            l.size * getattr(l.dtype, "itemsize", 2)
+            for l in jax.tree_util.tree_leaves(params_shapes))
+        tp = _axis_size(mesh, TP)
+        use_tp_only = total / tp <= tp_only_max_bytes
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        spec = param_spec(pstr, leaf.shape, cfg)
+        if use_tp_only:
+            spec = _strip_fsdp(spec)
+        spec = resolve_spec(spec, mesh, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch_shapes, mesh):
+    """Shard the batch dim over (pod, data); everything else replicated."""
+
+    def visit(leaf):
+        spec = P(FSDP, *([None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, resolve_spec(spec, mesh, leaf.shape))
+
+    return jax.tree.map(visit, batch_shapes)
+
+
+_CACHE_SPECS = {
+    # decode KV cache: batch->data, sequence->model (distributed softmax)
+    "k": P(None, FSDP, TP, None, None),
+    "v": P(None, FSDP, TP, None, None),
+    "k_scale": P(None, FSDP, TP, None, None),
+    "v_scale": P(None, FSDP, TP, None, None),
+    # rwkv6: state heads -> model
+    "state": P(None, FSDP, TP, None, None),
+    "xp_tm": P(None, FSDP, None),
+    "xp_cm": P(None, FSDP, None),
+    # hymba mamba state: inner channels -> model
+    "ssm": P(None, FSDP, TP, None),
+    "conv": P(None, FSDP, None, TP),
+}
+
+
+def cache_shardings(cache_shapes, mesh):
+    def visit(path, leaf):
+        # keystr looks like "['k']" — take the last quoted dict key
+        m = re.findall(r"'([^']+)'", jax.tree_util.keystr(path))
+        key = m[-1] if m else ""
+        spec = _CACHE_SPECS.get(key, P(*([None] * len(leaf.shape))))
+        return NamedSharding(mesh, resolve_spec(spec, mesh, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU against ref.py):
+  quant_matmul — fused dequant-int matmul + low-rank correction (serving)
+  r1_sketch    — tiled power-iteration GEMV/GEMM chain (quantization)
+  group_quant  — fused group quantize + bit-pack (BLC inner loop)
+"""

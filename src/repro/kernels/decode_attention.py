@@ -1,0 +1,95 @@
+"""Pallas flash-decode kernel: grouped-query single-token attention over a
+long KV cache — the serving-side hot loop that pairs with quant_matmul.
+
+One program per (batch, kv-head): the (G, hd) query group tile stays in
+VMEM while the (S, hd) K/V cache streams through in ``bk`` blocks with an
+online softmax — one HBM pass over the cache per token, no (B, S, H, hd)
+repeat_kv materialization (the same insight as models.layers.
+decode_attention_gqa, here with explicit VMEM control for TPU).
+
+Supports the int8 KV cache (kv_int8 lever): codes and per-entry scales
+stream together and dequantize in VREGs — cache HBM traffic stays 1 byte/
+element end-to-end.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, len_ref, o_ref,
+            *, bk, sk, scale, quantized):
+    # q (1, KV=1-slice, G, hd); k/v (1, sk, 1, hd); scales (1, sk, 1, 1)
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
+    g, hd = q.shape
+    length = len_ref[0]
+    nk = sk // bk
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k_blk = k_ref[0, pl.ds(kb * bk, bk), 0, :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(kb * bk, bk), 0, :].astype(jnp.float32)
+        if quantized:
+            k_blk = k_blk * ks_ref[0, pl.ds(kb * bk, bk), 0, :].astype(jnp.float32)
+            v_blk = v_blk * vs_ref[0, pl.ds(kb * bk, bk), 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bk)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((g, hd), jnp.float32)
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode_gqa(q, k_cache, v_cache, length, k_scale=None, v_scale=None,
+                     bk: int = 512, interpret: bool = False):
+    """q: (B, 1, H, hd); caches: (B, S, KV, hd) (bf16, or int8 with
+    (B, S, KV, 1) scales). length: scalar int32 valid prefix. Returns
+    (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    sk, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    bk = min(bk, sk)
+    assert sk % bk == 0
+    quantized = k_scale is not None
+    if not quantized:  # dummy scale operands keep one kernel signature
+        k_scale = jnp.ones((b, sk, kv, 1), jnp.bfloat16)
+        v_scale = jnp.ones((b, sk, kv, 1), jnp.bfloat16)
+    scale = 1.0 / (hd ** 0.5)
+    q4 = q.reshape(b, kv, g, hd)
+    length_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, sk=sk, scale=scale,
+                          quantized=quantized),
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, sk, 1, hd), lambda bi, ki: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, sk, 1, hd), lambda bi, ki: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, sk, 1, 1), lambda bi, ki: (bi, 0, ki, 0)),
+            pl.BlockSpec((1, sk, 1, 1), lambda bi, ki: (bi, 0, ki, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # length scalar
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, ki: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(q4, k_cache, v_cache, k_scale, v_scale, length_arr)
+    return out.reshape(b, 1, h, hd)

@@ -1,0 +1,95 @@
+"""Pallas TPU flash attention (forward) — the prefill/serving compute hot
+spot of every attention arch in the zoo.
+
+Not a paper contribution (FLRQ is weight quantization), but the fused
+quant_matmul kernel feeds attention directly, and at 32k prefill the
+attention inner loop is the dominant MXU consumer — so the framework ships
+a TPU-native kernel with the same online-softmax algorithm as the pure-JAX
+``models.layers.flash_attention`` (which remains the oracle and the CPU
+path).
+
+Tiling: grid (B, H, S_q/bq) with an inner fori_loop over k blocks; the
+(bq, hd) query tile, running max/denominator and the f32 accumulator stay
+in VMEM for the whole row of k blocks — one HBM pass over K/V per q tile.
+Causal masking skips fully-masked k blocks via the loop upper bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, sk, causal, scale):
+    # refs: q (1, 1, bq, hd); k/v (1, 1, sk, hd); o (1, 1, bq, hd)
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    hd = q.shape[-1]
+    nk = sk // bk
+    if causal:
+        # highest k block that intersects [qi*bq, qi*bq + bq)
+        nk_eff = jnp.minimum(nk, (qi + 1) * bq // bk + 1)
+    else:
+        nk_eff = nk
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k_blk = k_ref[0, 0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        v_blk = v_ref[0, 0, pl.ds(kb * bk, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk_eff, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_tpu(q, k, v, causal: bool = True,
+                        bq: int = 256, bk: int = 512,
+                        interpret: bool = False):
+    """q/k/v: (B, S, H, hd) with kv already head-matched. Returns (B, S, H,
+    hd). S must divide by the block sizes (models pad)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    scale = 1.0 / (hd ** 0.5)
+    # layout: (B, H, S, hd) so the kernel works on contiguous (S, hd) tiles
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, sk=sk, causal=causal,
+                          scale=scale),
+        grid=(b, h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,82 @@
+"""Pallas kernel: group-wise quantize + bit-pack in one pass.
+
+BLC re-quantizes the residual every epoch (paper Alg. 2 step 3), so the
+quantize+pack inner loop is on the quantization-time critical path. One
+pass over W per call: per-128-group min/max reduction, scale/zp, round,
+clamp, and nibble-packing all in VREGs; W is read exactly once from HBM.
+
+Supports bits ∈ {2, 4, 8} (the 3-bit pack crosses byte boundaries — it
+stays on the jnp path, ``ref.group_quant_ref``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, packed_ref, scale_ref, zp_ref, *, bits, group,
+            symmetric, clip_ratio):
+    w = w_ref[...].astype(jnp.float32)
+    bm, bk = w.shape
+    g = w.reshape(bm, bk // group, group)
+    qmax_sym = (1 << (bits - 1)) - 1
+    levels = (1 << bits) - 1
+    if symmetric:
+        amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True) * clip_ratio
+        scale = jnp.where(amax <= 0, 1.0, amax / qmax_sym)
+        zp = jnp.zeros_like(scale)
+        q = jnp.clip(jnp.round(g / scale), -(qmax_sym + 1), qmax_sym)
+        codes = (q + (1 << (bits - 1))).astype(jnp.uint32)
+    else:
+        wmax = jnp.max(g, axis=-1, keepdims=True) * clip_ratio
+        wmin = jnp.min(g, axis=-1, keepdims=True) * clip_ratio
+        scale = (wmax - wmin) / levels
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.round(-wmin / scale)
+        codes = jnp.clip(jnp.round(g / scale) + zp, 0, levels).astype(jnp.uint32)
+    scale_ref[...] = scale
+    zp_ref[...] = zp
+    per = 8 // bits
+    c = codes.reshape(bm, bk // per, per)
+    byte = jnp.zeros((bm, bk // per), jnp.uint32)
+    for i in range(per):
+        byte = byte | (c[..., i] << (bits * i))
+    packed_ref[...] = byte.astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group", "symmetric", "bm", "bk",
+                              "interpret"))
+def group_quant(w, *, bits: int, group: int = 128, symmetric: bool = False,
+                clip_ratio: float = 1.0, bm: int = 256, bk: int = 1024,
+                interpret: bool = False):
+    """w: (m, n) -> (packed (m, n//group, group*bits/8) uint8,
+    scale (m, n//group, 1) f32, zp (m, n//group, 1) f32)."""
+    assert bits in (2, 4, 8), "3-bit packing crosses bytes; use ref path"
+    m, n = w.shape
+    bm = min(bm, m)
+    bk = min(bk, n)
+    assert bk % group == 0 and m % bm == 0 and n % bk == 0
+    per = 8 // bits
+    packed, scale, zp = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group=group,
+                          symmetric=symmetric, clip_ratio=clip_ratio),
+        grid=(m // bm, n // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk // per), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // group, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bm, bk // group, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n // per), jnp.uint8),
+            jax.ShapeDtypeStruct((m, n // group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, n // group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)
+    pg = group * bits // 8
+    return packed.reshape(m, n // group, pg), scale, zp

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers for the Pallas kernels: accept the framework's
+high-level types (QuantizedLinear, weight matrices), pick block sizes,
+handle padding/fallbacks, and route to ref implementations where a
+configuration is outside kernel support.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..quant.qtensor import QuantizedLinear
+from . import group_quant as gq
+from . import quant_matmul as qm
+from . import r1_sketch as rs
+from . import ref
+
+
+def quant_matmul(qt: QuantizedLinear, x, out_dtype=None,
+                 interpret: bool = False):
+    """y = FLRQ-apply(qt, x) via the fused kernel. x: (..., n) -> (..., m)."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    t = 1
+    for d in lead:
+        t *= d
+    x2 = x.reshape(t, qt.n)
+    kwargs = dict(bits=qt.bits, group=qt.group_size, symmetric=qt.symmetric,
+                  out_dtype=out_dtype)
+    # kernel constraints: t % bt == 0 with bt<=128; pad T up
+    bt = min(128, t) if t % min(128, t) == 0 else 1
+    pad_t = (-t) % 128 if t > 128 else 0
+    if qt.bits == 3:
+        y2 = ref.quant_matmul_ref(x2, qt.packed, qt.scale, qt.zp, qt.u, qt.v,
+                                  qt.act_scale_inv, **kwargs)
+    else:
+        if pad_t:
+            x2 = jnp.pad(x2, ((0, pad_t), (0, 0)))
+        y2 = qm.quant_matmul_fused(
+            x2, qt.packed, qt.scale, qt.zp, qt.u, qt.v, qt.act_scale_inv,
+            interpret=interpret, **kwargs)
+        if pad_t:
+            y2 = y2[:t]
+    return y2.reshape(*lead, qt.m)
+
+
+def sketch_power_iter(a, s, it: int = 2, interpret: bool = False):
+    """Kernel-backed (p, k) for one R1-Sketch step; pads A to tile
+    multiples when needed."""
+    m, n = a.shape
+    pm, pn = (-m) % 256, (-n) % 512
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+        s = jnp.pad(s, ((0, pn),) if s.ndim == 1 else ((0, pn), (0, 0)))
+    p, k = rs.power_iter(a, s, it=it, interpret=interpret)
+    if s.ndim == 1:
+        return p[:m], k[:n]
+    return p[:m], k[:n]
+
+
+def quantize_pack(w, bits: int, group: int = 128, symmetric: bool = False,
+                  clip_ratio: float = 1.0, interpret: bool = False):
+    """(packed, scale, zp) via the fused group-quant kernel (jnp ref for
+    3-bit)."""
+    if bits == 3:
+        return ref.group_quant_ref(w, bits=bits, group=group,
+                                   symmetric=symmetric, clip_ratio=clip_ratio)
+    return gq.group_quant(w, bits=bits, group=group, symmetric=symmetric,
+                          clip_ratio=clip_ratio, interpret=interpret)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernels for the R1-Sketch power-iteration chain.
+
+TPU adaptation (DESIGN.md §3): the paper's GPU GEMV (BLAS-2) chain becomes
+bandwidth-centric on TPU — the sketch reads A once per contraction, so the
+kernels below focus on (a) streaming A through VMEM in MXU-aligned tiles
+with the vector operand pinned in VMEM, and (b) a *batched* variant where
+the "vector" is (n, b) with b ∈ {1..16} — the beyond-paper block sketch —
+which turns the same kernel into a skinny GEMM that feeds the MXU.
+
+Two kernels (each one pass over A):
+    sketch_gemv   : y (m, b) = A (m, n) @ x (n, b)
+    sketch_gemv_t : z (n, b) = Aᵀ @ y      — A streamed in its native
+                    layout; no transposed copy of A is ever materialized.
+
+``power_iter`` chains them (2·it + 2 passes, the paper's cost) with the
+normalization fused between passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), x_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "interpret"))
+def sketch_gemv(a, x, *, bm: int = 256, bk: int = 512, interpret: bool = False):
+    """y = A @ x. a: (m, n); x: (n, b) with small b (1 for the paper's
+    rank-1 sketch, 8/16 for the block variant)."""
+    m, n = a.shape
+    b = x.shape[1]
+    bm = min(bm, m)
+    bk = min(bk, n)
+    assert m % bm == 0 and n % bk == 0
+    nk = n // bk
+    return pl.pallas_call(
+        functools.partial(_gemv_kernel, nk=nk),
+        grid=(m // bm, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, b), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, b), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, b), jnp.float32)],
+        interpret=interpret,
+    )(a, x)
+
+
+def _gemv_t_kernel(a_ref, y_ref, o_ref, acc_ref, *, nk):
+    k = pl.program_id(1)  # here k walks the *m* dim of A
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # contraction over the row dim: (bm, bn)ᵀ @ (bm, b) -> (bn, b)
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), y_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "interpret"))
+def sketch_gemv_t(a, y, *, bn: int = 512, bk: int = 256, interpret: bool = False):
+    """z = Aᵀ @ y without materializing Aᵀ. a: (m, n); y: (m, b)."""
+    m, n = a.shape
+    b = y.shape[1]
+    bn = min(bn, n)
+    bk = min(bk, m)
+    assert n % bn == 0 and m % bk == 0
+    nk = m // bk
+    return pl.pallas_call(
+        functools.partial(_gemv_t_kernel, nk=nk),
+        grid=(n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, k: (k, i)),
+            pl.BlockSpec((bk, b), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, b), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, b), jnp.float32)],
+        interpret=interpret,
+    )(a, y)
+
+
+def power_iter(a, s, it: int = 2, interpret: bool = False):
+    """Kernel-backed equivalent of core.r1_sketch power iteration:
+    returns (p, k) with p normalized, k = Aᵀp. s: (n,) or (n, b)."""
+    sb = s[:, None] if s.ndim == 1 else s
+    p = sketch_gemv(a, sb.astype(a.dtype), interpret=interpret)
+    p = p / jnp.maximum(jnp.linalg.norm(p, axis=0, keepdims=True), 1e-20)
+    for _ in range(it):
+        z = sketch_gemv_t(a, p, interpret=interpret)
+        p = sketch_gemv(a, z, interpret=interpret)
+        p = p / jnp.maximum(jnp.linalg.norm(p, axis=0, keepdims=True), 1e-20)
+    k = sketch_gemv_t(a, p, interpret=interpret)
+    if s.ndim == 1:
+        return p[:, 0], k[:, 0]
+    return p, k

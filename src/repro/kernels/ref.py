@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each ``*_ref`` takes exactly the same arguments as its kernel counterpart
+and computes the answer with plain jnp ops — no tiling, no packing tricks
+beyond what the data format requires.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..quant import packing
+
+
+def quant_matmul_ref(x, packed, scale, zp, u, v, act_scale_inv,
+                     *, bits, group=128, symmetric=False, out_dtype=None,
+                     **_):
+    """Oracle for kernels.quant_matmul.quant_matmul_fused."""
+    out_dtype = out_dtype or x.dtype
+    m, ng, _ = packed.shape
+    n = ng * group
+    codes = packing.unpack(packed, bits, group)  # (m, ng, group)
+    offs = (1 << (bits - 1)) if symmetric else 0
+    wq = ((codes - offs).astype(jnp.float32) - zp.astype(jnp.float32)) \
+        * scale.astype(jnp.float32)
+    wq = wq.reshape(m, n)
+    xs = x.astype(jnp.float32) * act_scale_inv.astype(jnp.float32)[None, :]
+    y = xs @ wq.T
+    if u.shape[1] > 0:
+        y = y + (xs @ v.astype(jnp.float32).T) @ u.astype(jnp.float32).T
+    return y.astype(out_dtype)
+
+
+def group_quant_ref(w, *, bits, group=128, symmetric=False, clip_ratio=1.0):
+    """Oracle for kernels.group_quant: returns (packed, scale, zp)."""
+    from ..core.quantize import QuantSpec, compute_qparams, quantize_codes
+
+    spec = QuantSpec(bits, group, symmetric)
+    scale, zp = compute_qparams(w, spec, clip_ratio)
+    codes = quantize_codes(w, spec, scale, zp)
+    offs = (1 << (bits - 1)) if symmetric else 0
+    return packing.pack(codes + offs, bits), scale, zp
+
+
+def sketch_gemv_ref(a, x):
+    """Oracle for kernels.r1_sketch.sketch_gemv: y = A @ x."""
+    return (a.astype(jnp.float32) @ x.astype(jnp.float32)).astype(a.dtype)
+
+
+def sketch_gemv_t_ref(a, y):
+    """Oracle for kernels.r1_sketch.sketch_gemv_t: x = A^T @ y."""
+    return (a.astype(jnp.float32).T @ y.astype(jnp.float32)).astype(a.dtype)
+
+
+def power_iter_ref(a, s, it=2):
+    """Oracle for the fused power-iteration chain (normalized, as in
+    core.r1_sketch.rank1_sketch)."""
+    a32 = a.astype(jnp.float32)
+    p = a32 @ s.astype(jnp.float32)
+    p = p / jnp.maximum(jnp.linalg.norm(p), 1e-20)
+    for _ in range(it):
+        p = a32 @ (a32.T @ p)
+        p = p / jnp.maximum(jnp.linalg.norm(p), 1e-20)
+    k = a32.T @ p
+    return p, k

@@ -1,0 +1,286 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, print memory/cost analysis, and dump the
+roofline terms to JSON.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun.json
+
+Every failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system, not in the harness.
+"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (no `from __future__ import annotations` here — it would have to precede
+# the os.environ lines, which must stay first.)
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, cell_status, get_config
+from ..distributed import roofline as rl
+from ..distributed import sharding
+from ..models import LM
+from ..train.optimizer import AdamWConfig
+from ..core.flrq import FLRQConfig
+from ..quant.stacked import abstract_quantized_params
+from ..train.step import TrainState, make_train_step, train_state_shapes
+from .mesh import make_production_mesh
+from .specs import decode_specs, prefill_specs, train_batch_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _state_shardings(model, mesh, state_shapes):
+    p_sh = sharding.param_shardings(model.cfg, state_shapes.params, mesh)
+    rep = sharding.replicated(mesh)
+    return TrainState(
+        params=p_sh,
+        opt=type(state_shapes.opt)(
+            step=rep,
+            mu=sharding.param_shardings(model.cfg, state_shapes.opt.mu, mesh),
+            nu=sharding.param_shardings(model.cfg, state_shapes.opt.nu, mesh),
+        ),
+    )
+
+
+def apply_opts(cfg, opts: tuple):
+    """Apply beyond-paper perf levers to an arch config."""
+    if "grouped_decode" in opts:
+        cfg = dataclasses.replace(cfg, grouped_decode_attn=True)
+    if "grouped_moe" in opts and cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_impl="grouped")
+    if "expert_parallel" in opts and cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, expert_parallel=True)
+    if "remat_dots" in opts:
+        cfg = dataclasses.replace(cfg, remat_policy="dots")
+    if "kv_int8" in opts:
+        cfg = dataclasses.replace(cfg, kv_cache_bits=8)
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               model_override: Optional[LM] = None, mesh=None,
+               microbatches: int = 1, quantized: bool = False,
+               opts: tuple = ()):
+    """Build + lower one cell. Returns (lowered, n_devices, model_flops).
+
+    ``opts`` — beyond-paper perf levers (see EXPERIMENTS.md §Perf):
+      grouped_decode — GQA decode without repeat_kv
+      tp_serving     — TP-only weight layout for serving cells
+      bf16_grads     — bf16 gradient accumulation/communication
+    """
+    cfg = apply_opts(get_config(arch), opts)
+    shape = SHAPES[shape_name]
+    ok, why = cell_status(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped: {why}")
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = model_override or LM(cfg)
+    sharding.install(mesh)
+    key = jax.random.PRNGKey(0)
+    tp_serving = "tp_serving" in opts
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            state_shapes = train_state_shapes(model, key)
+            st_sh = _state_shardings(model, mesh, state_shapes)
+            batch = train_batch_specs(cfg, shape)
+            b_sh = sharding.batch_spec(batch, mesh)
+            step = make_train_step(model, AdamWConfig(),
+                                   microbatches=microbatches,
+                                   grad_shardings=st_sh.params,
+                                   compress="bf16" if "bf16_grads" in opts
+                                   else "none")
+            lowered = jax.jit(
+                step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, sharding.replicated(mesh)),
+                donate_argnums=(0,),  # state buffers update in place
+            ).lower(state_shapes, batch)
+        elif shape.kind == "prefill":
+            p_shapes = jax.eval_shape(model.init, key)
+            if quantized:
+                p_shapes = abstract_quantized_params(p_shapes, FLRQConfig(bits=4))
+            p_sh = sharding.param_shardings(cfg, p_shapes, mesh,
+                                            serving_tp_only=tp_serving)
+            batch = prefill_specs(cfg, shape)
+            b_sh = sharding.batch_spec(batch, mesh)
+            if cfg.family == "encoder":
+                def fwd(params, frames):
+                    x = frames.astype(cfg.dtype)
+                    h = model.stack.apply_train(
+                        params["layers"], x,
+                        model._positions(frames.shape[0], frames.shape[1]))
+                    return model._logits_last(params, h[:, -1:])
+
+                lowered = jax.jit(
+                    fwd, in_shardings=(p_sh, b_sh["frames"]),
+                ).lower(p_shapes, batch["frames"])
+            else:
+                lowered = jax.jit(
+                    model.prefill, in_shardings=(p_sh, b_sh["tokens"]),
+                ).lower(p_shapes, batch["tokens"])
+        else:  # decode
+            p_shapes = jax.eval_shape(model.init, key)
+            if quantized:
+                p_shapes = abstract_quantized_params(p_shapes, FLRQConfig(bits=4))
+            p_sh = sharding.param_shardings(cfg, p_shapes, mesh,
+                                            serving_tp_only=tp_serving)
+            specs = decode_specs(cfg, shape)
+            c_sh = sharding.cache_shardings(specs["cache"], mesh)
+            t_sh = sharding.batch_spec({"t": specs["tokens"]}, mesh)["t"]
+            rep = sharding.replicated(mesh)
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(p_sh, t_sh, c_sh, rep),
+                out_shardings=(rep, c_sh),
+                donate_argnums=(2,),  # KV cache updates in place
+            ).lower(p_shapes, specs["tokens"], specs["cache"], specs["length"])
+
+    mflops = rl.model_flops_for(cfg, shape)
+    return lowered, n_dev, mflops
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, microbatches: int = 1,
+             quantized: bool = False, opts: tuple = (),
+             mesh_override: str = None) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = apply_opts(get_config(arch), opts)
+    shape = SHAPES[shape_name]
+    ok, why = cell_status(cfg, shape)
+    row: Dict[str, Any] = dict(
+        arch=arch, shape=shape_name, multi_pod=multi_pod, status="SKIP",
+        reason=why, quantized=quantized, opts=list(opts),
+    )
+    if quantized and shape.kind == "train":
+        row["reason"] = "quantized cells are serving-only (PTQ)"
+        return row
+    if not ok:
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} "
+                  f"({'2x16x16' if multi_pod else '16x16'}): SKIP — {why}")
+        return row
+    try:
+        mesh = None
+        if mesh_override:
+            from .mesh import make_mesh
+            d, m = (int(x) for x in mesh_override.split("x"))
+            mesh = make_mesh((d, m), ("data", "model"))
+        lowered, n_dev, mflops = lower_cell(arch, shape_name, multi_pod,
+                                            microbatches=microbatches,
+                                            quantized=quantized, opts=opts,
+                                            mesh=mesh)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        roof = rl.analyze(compiled, n_dev, mflops, cfg=cfg, shape=shape,
+                          quantized=quantized)
+        row.update(
+            status="OK",
+            microbatches=microbatches,
+            seconds=round(time.time() - t0, 1),
+            memory=dict(
+                argument=getattr(mem, "argument_size_in_bytes", 0),
+                output=getattr(mem, "output_size_in_bytes", 0),
+                temp=getattr(mem, "temp_size_in_bytes", 0),
+                generated_code=getattr(mem, "generated_code_size_in_bytes", 0),
+            ),
+            roofline=roof.to_dict(),
+        )
+        if verbose:
+            m = row["memory"]
+            print(f"[dryrun] {arch} × {shape_name} "
+                  f"({'2x16x16' if multi_pod else '16x16'}): OK "
+                  f"{row['seconds']}s  "
+                  f"args={m['argument']/1e9:.2f}GB temp={m['temp']/1e9:.2f}GB  "
+                  f"t_comp={roof.t_compute*1e3:.1f}ms "
+                  f"t_mem={roof.t_memory*1e3:.1f}ms "
+                  f"t_coll={roof.t_collective*1e3:.1f}ms "
+                  f"bound={roof.bottleneck} "
+                  f"roofline_frac={roof.roofline_fraction:.3f}")
+    except Exception as e:  # failures are bugs — surface them loudly
+        row.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   seconds=round(time.time() - t0, 1))
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name}: FAIL — {e}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--quantized", action="store_true",
+                    help="FLRQ-W4 weights for serving cells (the paper's "
+                         "technique at production scale)")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh as DATAxMODEL, e.g. 4x4 (right-"
+                         "sizing experiments; default: production mesh)")
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=["grouped_decode", "tp_serving", "bf16_grads",
+                             "grouped_moe", "expert_parallel", "remat_dots",
+                             "kv_int8"],
+                    help="beyond-paper perf levers (repeatable)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s))
+
+    rows = []
+    for mp in pods:
+        for a, s in cells:
+            rows.append(run_cell(a, s, mp, microbatches=args.microbatches,
+                                 quantized=args.quantized,
+                                 opts=tuple(args.opt),
+                                 mesh_override=args.mesh))
+
+    n_fail = sum(r["status"] == "FAIL" for r in rows)
+    n_ok = sum(r["status"] == "OK" for r in rows)
+    n_skip = sum(r["status"] == "SKIP" for r in rows)
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    if args.out:
+        import pathlib
+        p = pathlib.Path(args.out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        existing = []
+        if p.exists():
+            existing = json.loads(p.read_text())
+        key = lambda r: (r["arch"], r["shape"], r["multi_pod"],
+                         r.get("quantized", False),
+                         tuple(r.get("opts", [])))
+        merged = {key(r): r for r in existing}
+        merged.update({key(r): r for r in rows})
+        p.write_text(json.dumps(list(merged.values()), indent=1))
+        print(f"[dryrun] wrote {p}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

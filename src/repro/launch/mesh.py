@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)              — 256 chips (TPU v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)       — 512 chips
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic re-mesh, tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1-D (data,) mesh — used by the
+    CPU training example and tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh):
+    """Axes batch shards over: ('pod','data') when pod exists, else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the kwargs for the lowered function of
+that cell:
+    train   -> {"batch": {...}}                  for train_step(state, batch)
+    prefill -> {"tokens": (B, S) int32}
+    decode  -> {"tokens": (B,), "cache": {...}, "length": ()}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ShapeSpec, get_config
+from ..models import LM
+from ..models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict[str, Any]:
+    b, s = spec.global_batch, spec.seq_len
+    if cfg.family == "encoder":
+        return {
+            "frames": SDS((b, s, cfg.d_model), cfg.dtype),
+            "labels": SDS((b, s), jnp.int32),
+            "mask": SDS((b, s), jnp.bool_),
+        }
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def prefill_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict[str, Any]:
+    b, s = spec.global_batch, spec.seq_len
+    if cfg.family == "encoder":
+        # encoder "prefill" = full forward over precomputed frame embeddings
+        return {"frames": SDS((b, s, cfg.d_model), cfg.dtype)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict[str, Any]:
+    b, s = spec.global_batch, spec.seq_len
+    model = LM(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "tokens": SDS((b,), jnp.int32),
+        "cache": cache,
+        "length": SDS((), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape: ShapeSpec) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_specs(cfg, shape)}
+    return decode_specs(cfg, shape)

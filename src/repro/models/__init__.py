@@ -1,0 +1,3 @@
+"""Architecture zoo (scan-over-layers, remat-able, sharding-annotated)."""
+from .config import ModelConfig, small_variant  # noqa: F401
+from .model import LM  # noqa: F401

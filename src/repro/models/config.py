@@ -1,0 +1,141 @@
+"""ModelConfig: one dataclass describing every assigned architecture.
+
+``family`` selects the layer body:
+  dense   — llama-style decoder (covers gemma2/internlm2/qwen3/mistral/qwen2-vl
+            via flags: softcaps, local+global attention, qk_norm, M-RoPE)
+  moe     — dense skeleton with a routed-expert FFN
+  rwkv6   — attention-free Finch blocks (token shift + data-dependent decay)
+  hymba   — parallel attention + Mamba(SSM) heads per layer
+  encoder — bidirectional encoder (HuBERT backbone, masked-unit loss)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # dense variants
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    local_window: int = 0          # >0: sliding-window size for local layers
+    global_every: int = 0          # gemma2: every 2nd layer is global
+    global_layers: Tuple[int, ...] = ()  # hymba: explicit global layer ids
+    mrope: bool = False            # qwen2-vl multimodal rope
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # moe
+    n_experts: int = 0
+    topk: int = 0
+    moe_impl: str = "capacity"     # "capacity" (GSPMD-safe) | "ragged"
+    capacity_factor: float = 1.25
+
+    # ssm / rwkv
+    ssm_state: int = 16
+    rwkv_head_dim: int = 64
+    d_inner: int = 0               # hymba mamba inner width (0 -> 2*d_model)
+
+    # modality stubs
+    frontend: str = "text"         # text | audio_stub | vision_stub
+
+    # runtime
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "full"     # full | dots (save matmul outs) | none
+    loss_chunk: int = 256
+    scan_layers: bool = True
+
+    # perf levers (beyond-paper; default off = paper-faithful baseline)
+    grouped_decode_attn: bool = False  # GQA decode without repeat_kv
+    expert_parallel: bool = False      # shard experts over the model axis
+    kv_cache_bits: int = 16            # 8 -> int8 KV cache (+per-entry scale)
+
+    # dry-run annotations
+    sub_quadratic: bool = False    # supports long_500k decode
+    is_encoder: bool = False       # no decode shapes
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner_resolved(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family in ("dense", "moe", "encoder"):
+            attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.family == "moe":
+                ffn = self.n_experts * 3 * d * f + d * self.n_experts
+            elif self.family == "encoder":
+                ffn = 2 * d * f
+            else:
+                ffn = 3 * d * f
+            return emb + L * (attn + ffn)
+        if self.family == "rwkv6":
+            tm = 5 * d * d + 2 * d * 64
+            cm = d * f + f * d + d * d
+            return emb + L * (tm + cm)
+        if self.family == "hymba":
+            di = self.d_inner_resolved
+            attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            mamba = d * 2 * di + di * self.ssm_state * 2 + di * d + 4 * di
+            return emb + L * (attn + mamba)
+        raise ValueError(self.family)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts only top-k experts."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ffn = self.topk * 3 * d * f + d * self.n_experts
+        return emb + L * (attn + ffn)
+
+
+def small_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    shrunk = dict(
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) or 2,
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        dtype=jnp.float32,
+        remat=False,
+        loss_chunk=64,
+        local_window=min(cfg.local_window, 32) if cfg.local_window else 0,
+        global_layers=(0,) if cfg.global_layers else (),
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        topk=min(cfg.topk, 2) if cfg.topk else 0,
+        d_inner=64 if cfg.family == "hymba" else 0,
+        ssm_state=8 if cfg.family in ("hymba",) else cfg.ssm_state,
+        name=cfg.name + "-smoke",
+    )
+    shrunk.update(overrides)
+    return dataclasses.replace(cfg, **shrunk)

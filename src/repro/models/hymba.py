@@ -1,0 +1,247 @@
+"""Hymba: hybrid-head blocks running GQA attention and a Mamba-style
+selective SSM *in parallel* on the same input, fusing their (per-path
+normalized) outputs by averaging — plus a standard SwiGLU MLP.
+
+Attention is sliding-window except on ``cfg.global_layers`` (the paper uses
+3 global layers: first, middle, last). The SSM path keeps O(state) memory,
+which is what makes hymba a ``long_500k`` architecture; the KV cache for
+local layers is ring-buffer-truncatable (we allocate full length for layer-
+stack uniformity; the ring-buffer variant is a recorded perf lever).
+
+Mamba path per layer:
+    (z, xm) = x @ W_in                      (each (B, S, Di))
+    xm      = causal_depthwise_conv(xm, 4)
+    dt      = softplus(xm @ W_dt + b_dt)    (B, S, Di)
+    Bc, Cc  = xm @ W_B, xm @ W_C            (B, S, N)
+    h_t     = exp(-dt_t · exp(A_log)) h_{t-1} + dt_t · (Bc_t ⊗ xm_t)
+    y_t     = (h_t · Cc_t) + D_skip ⊙ xm_t
+    out     = (y ⊙ silu(z)) @ W_out
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import (
+    constrain,
+    mm,
+    remat_wrap,
+    apply_rope,
+    decode_attention,
+    decode_attention_gqa,
+    flash_attention,
+    repeat_kv,
+    rms_norm,
+)
+
+_SPEC_BSD = P(("pod", "data"), None, None)
+
+
+def _init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+class HymbaStack:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.d_inner = cfg.d_inner_resolved
+        self.conv_k = 4
+
+    def init_layers(self, key):
+        cfg = self.cfg
+        L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+        Di, N = self.d_inner, cfg.ssm_state
+        qd, kvd = cfg.q_dim, cfg.kv_dim
+        ks = jax.random.split(key, 20)
+        return {
+            "in_norm": jnp.zeros((L, D), cfg.dtype),
+            # attention path
+            "wq": _init(ks[0], (L, D, qd), D, cfg.dtype),
+            "wk": _init(ks[1], (L, D, kvd), D, cfg.dtype),
+            "wv": _init(ks[2], (L, D, kvd), D, cfg.dtype),
+            "wo": _init(ks[3], (L, qd, D), qd, cfg.dtype),
+            "attn_out_norm": jnp.zeros((L, D), cfg.dtype),
+            # mamba path
+            "w_in": _init(ks[4], (L, D, 2 * Di), D, cfg.dtype),
+            "conv_w": _init(ks[5], (L, self.conv_k, Di), self.conv_k, cfg.dtype),
+            "conv_b": jnp.zeros((L, Di), cfg.dtype),
+            "w_dt": _init(ks[6], (L, Di, Di), Di, cfg.dtype),
+            "b_dt": jnp.full((L, Di), -4.0, cfg.dtype),  # softplus → small dt
+            "w_B": _init(ks[7], (L, Di, N), Di, cfg.dtype),
+            "w_C": _init(ks[8], (L, Di, N), Di, cfg.dtype),
+            "a_log": jnp.zeros((L, Di, N), cfg.dtype),   # A = -exp(a_log)
+            "d_skip": jnp.ones((L, Di), cfg.dtype),
+            "w_out": _init(ks[9], (L, Di, D), Di, cfg.dtype),
+            "mamba_out_norm": jnp.zeros((L, D), cfg.dtype),
+            # mlp
+            "mlp_norm": jnp.zeros((L, D), cfg.dtype),
+            "w_gate": _init(ks[10], (L, D, F), D, cfg.dtype),
+            "w_up": _init(ks[11], (L, D, F), D, cfg.dtype),
+            "w_down": _init(ks[12], (L, F, D), F, cfg.dtype),
+        }
+
+    # ------------------------------------------------------------- windows
+    def _layer_window(self, layer_idx, s_k):
+        cfg = self.cfg
+        if not cfg.local_window:
+            return None
+        is_global = jnp.isin(layer_idx, jnp.asarray(cfg.global_layers or (-1,)))
+        return jnp.where(is_global, jnp.int32(s_k + 1), jnp.int32(cfg.local_window))
+
+    # --------------------------------------------------------------- mamba
+    def _mamba_proj(self, pl, h, conv_state=None):
+        """Shared projection work. h: (B, S, D). Returns (z, xm, dt, Bc, Cc)
+        and the last conv_k-1 inputs (for decode carry)."""
+        zx = mm(h, pl["w_in"])
+        z, xm = jnp.split(zx, 2, axis=-1)
+        if conv_state is None:
+            pad = jnp.zeros((xm.shape[0], self.conv_k - 1, xm.shape[2]), xm.dtype)
+        else:
+            pad = conv_state
+        xm_pad = jnp.concatenate([pad, xm], axis=1)
+        new_conv = xm_pad[:, -(self.conv_k - 1):, :]
+        # depthwise causal conv: sum_k w[k] * x_{t-k}
+        w = pl["conv_w"].astype(jnp.float32)  # (K, Di)
+        xm32 = xm_pad.astype(jnp.float32)
+        s = xm.shape[1]
+        conv = sum(
+            xm32[:, i:i + s, :] * w[i][None, None, :] for i in range(self.conv_k)
+        ) + pl["conv_b"].astype(jnp.float32)
+        xm = jax.nn.silu(conv).astype(h.dtype)
+        dt = jax.nn.softplus(
+            mm(xm, pl["w_dt"]).astype(jnp.float32) + pl["b_dt"].astype(jnp.float32))
+        bc = mm(xm, pl["w_B"]).astype(jnp.float32)
+        cc = mm(xm, pl["w_C"]).astype(jnp.float32)
+        return z, xm, dt, bc, cc, new_conv
+
+    def _mamba_seq(self, pl, h, h0, conv0):
+        """Full-sequence selective scan. h0: (B, Di, N) initial state."""
+        z, xm, dt, bc, cc, new_conv = self._mamba_proj(pl, h, conv0)
+        a = -jnp.exp(pl["a_log"].astype(jnp.float32))  # (Di, N)
+
+        def step(hst, t):
+            xm_t, dt_t, b_t, c_t = t
+            decay = jnp.exp(dt_t[..., None] * a[None])        # (B, Di, N)
+            hst = decay * hst + (dt_t * xm_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", hst, c_t)
+            return hst, y
+
+        xs = (xm.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+              bc.transpose(1, 0, 2), cc.transpose(1, 0, 2))
+        h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+        y = ys.transpose(1, 0, 2) + pl["d_skip"].astype(jnp.float32) * xm.astype(jnp.float32)
+        y = (y.astype(h.dtype) * jax.nn.silu(z))
+        return mm(y, pl["w_out"]), h_fin.astype(h.dtype), new_conv
+
+    # ----------------------------------------------------------- attention
+    def _attn_seq(self, pl, h, positions, layer_idx):
+        cfg = self.cfg
+        b, s, _ = h.shape
+        q = mm(h, pl["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = mm(h, pl["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = mm(h, pl["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kr = repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+        vr = repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+        win = self._layer_window(layer_idx, s)
+        attn = flash_attention(q, kr, vr, causal=True, window=win)
+        return mm(attn.reshape(b, s, cfg.q_dim), pl["wo"]), k, v
+
+    # --------------------------------------------------------------- layer
+    def _layer_seq(self, pl, x, positions, layer_idx, h0, conv0):
+        cfg = self.cfg
+        h = rms_norm(x, pl["in_norm"])
+        attn_out, k, v = self._attn_seq(pl, h, positions, layer_idx)
+        mamba_out, h_fin, new_conv = self._mamba_seq(pl, h, h0, conv0)
+        fused = 0.5 * (rms_norm(attn_out, pl["attn_out_norm"]) +
+                       rms_norm(mamba_out, pl["mamba_out_norm"]))
+        x = constrain(x + fused, _SPEC_BSD)
+        hm = rms_norm(x, pl["mlp_norm"])
+        mlp = mm(jax.nn.silu(mm(hm, pl["w_gate"])) * mm(hm, pl["w_up"]), pl["w_down"])
+        return constrain(x + mlp, _SPEC_BSD), (k, v, h_fin, new_conv)
+
+    # ----------------------------------------------------------- interfaces
+    def _zero_inner(self, batch):
+        cfg = self.cfg
+        return (
+            jnp.zeros((batch, self.d_inner, cfg.ssm_state), cfg.dtype),
+            jnp.zeros((batch, self.conv_k - 1, self.d_inner), cfg.dtype),
+        )
+
+    def apply_train(self, layers, x, positions):
+        cfg = self.cfg
+        h0, conv0 = self._zero_inner(x.shape[0])
+
+        def body(h, xs):
+            pl, idx = xs
+            fn = remat_wrap(self._layer_seq, cfg)
+            h, _ = fn(pl, h, positions, idx, h0, conv0)
+            return h, None
+
+        h, _ = jax.lax.scan(body, x, (layers, jnp.arange(cfg.n_layers)))
+        return h
+
+    def init_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "v": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+            "ssm": jnp.zeros((L, batch, self.d_inner, cfg.ssm_state), cfg.dtype),
+            "conv": jnp.zeros((L, batch, self.conv_k - 1, self.d_inner), cfg.dtype),
+        }
+
+    def apply_prefill(self, layers, x, positions):
+        h0, conv0 = self._zero_inner(x.shape[0])
+
+        def body(h, xs):
+            pl, idx = xs
+            h, (k, v, h_fin, new_conv) = self._layer_seq(
+                pl, h, positions, idx, h0, conv0)
+            return h, (k, v, h_fin, new_conv)
+
+        h, (ks, vs, ssms, convs) = jax.lax.scan(
+            body, x, (layers, jnp.arange(self.cfg.n_layers)))
+        return h, {"k": ks, "v": vs, "ssm": ssms, "conv": convs}
+
+    def apply_decode(self, layers, x, cache, length):
+        cfg = self.cfg
+        b = x.shape[0]
+        positions = jnp.full((b, 1), length, jnp.int32)
+
+        def body(h, xs):
+            pl, idx, k_l, v_l, ssm_l, conv_l = xs
+            hn = rms_norm(h, pl["in_norm"])
+            # attention: append kv, attend over cache
+            q = mm(hn, pl["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            k = mm(hn, pl["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            v = mm(hn, pl["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, length, 0, 0))
+            v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, length, 0, 0))
+            win = self._layer_window(idx, k_l.shape[1])
+            if cfg.grouped_decode_attn:
+                attn = decode_attention_gqa(q, k_l, v_l, length + 1, window=win)
+            else:
+                kr = repeat_kv(k_l, cfg.n_heads // cfg.n_kv_heads)
+                vr = repeat_kv(v_l, cfg.n_heads // cfg.n_kv_heads)
+                attn = decode_attention(q, kr, vr, length + 1, window=win)
+            attn_out = mm(attn.reshape(b, 1, cfg.q_dim), pl["wo"])
+            # mamba: single-step
+            mamba_out, ssm_l, conv_l = self._mamba_seq(pl, hn, ssm_l, conv_l)
+            fused = 0.5 * (rms_norm(attn_out, pl["attn_out_norm"]) +
+                           rms_norm(mamba_out, pl["mamba_out_norm"]))
+            h = h + fused
+            hm = rms_norm(h, pl["mlp_norm"])
+            h = h + mm(jax.nn.silu(mm(hm, pl["w_gate"])) * mm(hm, pl["w_up"]), pl["w_down"])
+            return h, (k_l, v_l, ssm_l, conv_l)
+
+        h, (ks, vs, ssms, convs) = jax.lax.scan(
+            body, x,
+            (layers, jnp.arange(cfg.n_layers), cache["k"], cache["v"],
+             cache["ssm"], cache["conv"]))
+        return h, {"k": ks, "v": vs, "ssm": ssms, "conv": convs}

@@ -1,0 +1,158 @@
+"""LM facade: embedding/unembedding/loss plumbing around a family stack.
+
+Public surface used by the launcher, trainer, server and dry-run:
+
+    model = LM(cfg)
+    params = model.init(key)                       (or jax.eval_shape(model.init, key))
+    loss   = model.loss(params, batch)             batch from data pipeline
+    logits, cache = model.prefill(params, tokens)
+    logits, cache = model.decode_step(params, tok, cache, length)
+
+Batches:
+  text families : {"tokens": (B, S) int32}  — next-token LM loss (shift-in-loss)
+  encoder       : {"frames": (B, S, D) dtype, "labels": (B, S) int32,
+                   "mask": (B, S) bool}     — masked-unit prediction (HuBERT)
+  vision stub   : {"tokens": ...} text-only shapes; ``vision_stub_embeddings``
+                  provides precomputed patch embeddings for VLM examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .dense import DenseStack
+from .hymba import HymbaStack
+from .layers import chunked_softmax_xent, constrain, rms_norm, softcap
+from .rwkv6 import RWKV6Stack
+
+_STACKS = {
+    "dense": DenseStack,
+    "moe": DenseStack,
+    "encoder": DenseStack,
+    "rwkv6": RWKV6Stack,
+    "hymba": HymbaStack,
+}
+
+_SPEC_LOGITS = P(("pod", "data"), None, "model")
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stack = _STACKS[cfg.family](cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        k_emb, k_stack, k_out = jax.random.split(key, 3)
+        params = {
+            "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+                      * 0.02).astype(cfg.dtype),
+            "layers": self.stack.init_layers(k_stack),
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(k_out, (cfg.d_model, cfg.vocab), jnp.float32)
+                / jnp.sqrt(cfg.d_model)).astype(cfg.dtype)
+        return params
+
+    def _unembed(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["unembed"]
+
+    def _positions(self, b, s, offset=0):
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None] + offset, (b, s))
+        if self.cfg.mrope:
+            return jnp.broadcast_to(pos[:, None, :], (b, 3, s))  # text: t=h=w
+        return pos
+
+    def _embed_tokens(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.attn_softcap:  # gemma2 embedding normalizer
+            x = x * jnp.sqrt(self.cfg.d_model).astype(x.dtype)
+        return constrain(x, P(("pod", "data"), None, None))
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            x = batch["frames"].astype(cfg.dtype)
+            b, s, _ = x.shape
+            h = self.stack.apply_train(params["layers"], x, self._positions(b, s))
+            h = rms_norm(h, params["final_norm"])
+            return chunked_softmax_xent(
+                h, self._unembed(params), batch["labels"], batch["mask"],
+                chunk=cfg.loss_chunk, logits_spec=_SPEC_LOGITS)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens)
+        h = self.stack.apply_train(params["layers"], x, self._positions(b, s))
+        h = rms_norm(h, params["final_norm"])
+        # next-token: hidden[:, :-1] predicts tokens[:, 1:]
+        mask = batch.get("mask")
+        mask = jnp.ones((b, s - 1), jnp.float32) if mask is None else mask[:, 1:]
+        return chunked_softmax_xent(
+            h[:, :-1], self._unembed(params), tokens[:, 1:], mask,
+            chunk=cfg.loss_chunk, softcap_final=cfg.final_softcap,
+            logits_spec=_SPEC_LOGITS)
+
+    # --------------------------------------------------------------- serving
+    def _logits_last(self, params, h_last):
+        """h_last: (B, 1, D) -> (B, 1, V)."""
+        h = rms_norm(h_last, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                            self._unembed(params).astype(jnp.float32))
+        if self.cfg.final_softcap:
+            logits = softcap(logits, self.cfg.final_softcap)
+        return logits
+
+    def prefill(self, params, tokens):
+        """tokens: (B, S). Returns (last-position logits (B, 1, V), cache)."""
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens)
+        h, cache = self.stack.apply_prefill(
+            params["layers"], x, self._positions(b, s))
+        return self._logits_last(params, h[:, -1:]), cache
+
+    def init_cache(self, batch: int, seq: int):
+        return self.stack.init_cache(batch, seq)
+
+    def decode_step(self, params, tokens, cache, length):
+        """tokens: (B,) or (B, 1) int32; length: scalar int32 count of valid
+        cache entries. Returns (logits (B, 1, V), new cache)."""
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        x = self._embed_tokens(params, tokens)
+        h, cache = self.stack.apply_decode(params["layers"], x, cache, length)
+        return self._logits_last(params, h), cache
+
+
+# ---------------------------------------------------------------------------
+# Modality frontend stubs (per the brief: [audio]/[vlm] backbones only)
+# ---------------------------------------------------------------------------
+
+def audio_stub_embeddings(key, batch: int, frames: int, d_model: int, dtype):
+    """Stand-in for the HuBERT conv feature extractor: precomputed frame
+    embeddings."""
+    return jax.random.normal(key, (batch, frames, d_model), jnp.float32).astype(dtype)
+
+
+def vision_stub_embeddings(key, batch: int, patches: int, d_model: int, dtype):
+    """Stand-in for the Qwen2-VL ViT: precomputed patch embeddings (dynamic
+    resolution → variable `patches`)."""
+    return jax.random.normal(key, (batch, patches, d_model), jnp.float32).astype(dtype)
+
+
+def mrope_positions_for_image(batch: int, grid_t: int, grid_h: int, grid_w: int):
+    """(B, 3, T*H*W) M-RoPE position ids for an image/video patch grid."""
+    t = jnp.arange(grid_t).repeat(grid_h * grid_w)
+    h = jnp.tile(jnp.arange(grid_h).repeat(grid_w), grid_t)
+    w = jnp.tile(jnp.arange(grid_w), grid_t * grid_h)
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)
+    return jnp.broadcast_to(pos[None], (batch, 3, grid_t * grid_h * grid_w))

@@ -1,0 +1,158 @@
+"""Routed mixture-of-experts FFN (grok-1, qwen3-moe).
+
+Two dispatch implementations:
+
+  * ``capacity`` (default) — GShard-style fixed-capacity gather/scatter.
+    Fully dense einsums, GSPMD-partitions cleanly on a (data, model) mesh
+    (experts replicated over `model`, expert d_ff sharded over `model`,
+    token/capacity dims sharded over `data`). Tokens beyond an expert's
+    capacity are dropped (standard at scale; capacity_factor 1.25).
+
+  * ``ragged`` — dropless grouped matmul via ``jax.lax.ragged_dot`` after an
+    argsort-by-expert. Exact top-k semantics; used on CPU/single-device and
+    in correctness tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import constrain
+
+
+def _expert_mm(xg, w, eq: str):
+    """Expert einsum that also accepts FLRQ-quantized expert weights (a
+    QuantizedLinear pytree with a leading E axis): vmap the dequant+lowrank
+    apply over experts."""
+    from ..quant.qtensor import QuantizedLinear
+
+    if isinstance(w, QuantizedLinear):
+        from ..quant.apply import apply_lowrank_separate
+
+        e_axis = 1 if xg.ndim == 4 else 0  # (B,E,c,D) or (E,c,D)
+        def one(x_e, w_e):
+            return apply_lowrank_separate(w_e, x_e, out_dtype=x_e.dtype)
+
+        return jax.vmap(one, in_axes=(e_axis, 0), out_axes=e_axis)(xg, w)
+    return jnp.einsum(eq, xg, w)
+
+
+def router_topk(x_flat, w_router, topk: int):
+    """x_flat: (T, D); returns (weights (T,k), idx (T,k)) with renormalized
+    softmax gates (f32 routing as is standard)."""
+    logits = x_flat.astype(jnp.float32) @ w_router.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, topk)
+    vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+    return vals, idx
+
+
+def moe_ffn_capacity(x, w_router, w_gate, w_up, w_down, topk: int,
+                     capacity_factor: float = 1.25):
+    """x: (B, S, D). Expert weights: (E, D, F) / (E, F, D)."""
+    b, s, d = x.shape
+    e = w_router.shape[1]
+    t = b * s
+    xf = x.reshape(t, d)
+    vals, idx = router_topk(xf, w_router, topk)
+
+    # combine weights as a dense (T, E) map (zero where not routed)
+    comb = jnp.zeros((t, e), jnp.float32)
+    comb = comb.at[jnp.arange(t)[:, None], idx].add(vals)
+
+    cap = int(max(1, round(t * topk * capacity_factor / e)))
+    cap = min(cap, t)
+    # per-expert: top-`cap` tokens by gate weight
+    gates_e, tok_e = jax.lax.top_k(comb.T, cap)          # (E, cap)
+    xg = jnp.take(xf, tok_e, axis=0)                     # (E, cap, D)
+    xg = constrain(xg, P(None, ("pod", "data"), None))
+    h = jax.nn.silu(_expert_mm(xg, w_gate, "ecd,edf->ecf")) * _expert_mm(
+        xg, w_up, "ecd,edf->ecf")
+    h = constrain(h, P(None, ("pod", "data"), "model"))
+    ye = _expert_mm(h, w_down, "ecf,efd->ecd")           # (E, cap, D)
+    ye = ye * gates_e[..., None].astype(ye.dtype)
+    y = jnp.zeros((t, d), ye.dtype).at[tok_e.reshape(-1)].add(
+        ye.reshape(-1, d))
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_ffn_ragged(x, w_router, w_gate, w_up, w_down, topk: int):
+    """Dropless dispatch via sort + ragged grouped matmul."""
+    b, s, d = x.shape
+    e = w_router.shape[1]
+    t = b * s
+    xf = x.reshape(t, d)
+    vals, idx = router_topk(xf, w_router, topk)
+
+    flat_e = idx.reshape(-1)                              # (T*k,)
+    order = jnp.argsort(flat_e)
+    inv = jnp.argsort(order)
+    xr = jnp.repeat(xf, topk, axis=0)[order]              # (T*k, D) sorted
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+
+    h = jax.nn.silu(jax.lax.ragged_dot(xr, w_gate, group_sizes)) * \
+        jax.lax.ragged_dot(xr, w_up, group_sizes)
+    y = jax.lax.ragged_dot(h, w_down, group_sizes)        # (T*k, D)
+    y = y[inv].reshape(t, topk, d) * vals[..., None].astype(y.dtype)
+    return jnp.sum(y, axis=1).reshape(b, s, d).astype(x.dtype)
+
+
+def moe_ffn_grouped(x, w_router, w_gate, w_up, w_down, topk: int,
+                    capacity_factor: float = 1.25,
+                    expert_parallel: bool = False):
+    """Group-limited (per-batch-row) capacity dispatch — the beyond-paper
+    collective fix. The flat ``capacity`` impl top-ks and gathers over the
+    *global* token axis, which under a batch-sharded mesh forces an
+    all-gather of every token's activations per layer (measured 6.5 s/step
+    collective on qwen3-moe train_4k). Routing each batch row against
+    row-local capacity keeps every gather/scatter shard-local — the only
+    remaining MoE collectives are the expert-weight FSDP gathers. Same
+    drop semantics as GShard group dispatch (groups = batch rows)."""
+    b, s, d = x.shape
+    e = w_router.shape[1]
+    cap = int(max(1, round(s * topk * capacity_factor / e)))
+    cap = min(cap, s)
+
+    def per_row(xr):  # (S, D) — everything below is row-local
+        vals, idx = router_topk(xr, w_router, topk)
+        comb = jnp.zeros((s, e), jnp.float32)
+        comb = comb.at[jnp.arange(s)[:, None], idx].add(vals)
+        gates_e, tok_e = jax.lax.top_k(comb.T, cap)       # (E, cap)
+        xg = jnp.take(xr, tok_e, axis=0)                  # (E, cap, D)
+        return xg, gates_e, tok_e
+
+    xg, gates_e, tok_e = jax.vmap(per_row)(x)             # (B, E, cap, D)
+    if expert_parallel:
+        xg = constrain(xg, P(("pod", "data"), "model", None, None))
+    else:
+        xg = constrain(xg, P(("pod", "data"), None, None, None))
+    h = jax.nn.silu(_expert_mm(xg, w_gate, "becd,edf->becf")) * _expert_mm(
+        xg, w_up, "becd,edf->becf")
+    if expert_parallel:
+        h = constrain(h, P(("pod", "data"), "model", None, None))
+    else:
+        h = constrain(h, P(("pod", "data"), None, None, "model"))
+    ye = _expert_mm(h, w_down, "becf,efd->becd")
+    # keep the combine in the activation dtype — a f32 gate multiply would
+    # double every downstream collective's wire bytes
+    ye = ye * gates_e[..., None].astype(ye.dtype)
+
+    def scatter_row(ye_r, tok_r):  # row-local scatter-add
+        return jnp.zeros((s, d), ye_r.dtype).at[tok_r.reshape(-1)].add(
+            ye_r.reshape(-1, d))
+
+    y = jax.vmap(scatter_row)(ye, tok_e)
+    return y.astype(x.dtype)
+
+
+def moe_ffn(x, w_router, w_gate, w_up, w_down, topk: int,
+            impl: str = "capacity", capacity_factor: float = 1.25,
+            expert_parallel: bool = False):
+    if impl == "ragged":
+        return moe_ffn_ragged(x, w_router, w_gate, w_up, w_down, topk)
+    if impl == "grouped":
+        return moe_ffn_grouped(x, w_router, w_gate, w_up, w_down, topk,
+                               capacity_factor, expert_parallel)
+    return moe_ffn_capacity(x, w_router, w_gate, w_up, w_down, topk,
+                            capacity_factor)

@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" stack (attention-free, data-dependent decay).
+
+Per layer: time-mix (WKV) + channel-mix, both with token-shift. The WKV
+recurrence per head (hd = 64):
+
+    kv_t = k_t ⊗ v_t                               (hd_k, hd_v)
+    y_t  = r_t · (S_{t-1} + diag(u) kv_t)
+    S_t  = diag(w_t) S_{t-1} + kv_t
+
+with data-dependent decay  w_t = exp(-exp(w_base + LoRA(x_t)))  ∈ (0, 1).
+
+All projections are GEMMs computed for the whole sequence in parallel; only
+the O(hd²) state update scans over time. Decode carries (S, x_prev) — O(1)
+per token, which is why rwkv6 is a ``long_500k`` architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import constrain, mm, remat_wrap, rms_norm
+
+_SPEC_BSD = P(("pod", "data"), None, None)
+_LORA_R = 64
+
+
+def _init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+class RWKV6Stack:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.d_model % cfg.rwkv_head_dim == 0
+        self.n_heads = cfg.d_model // cfg.rwkv_head_dim
+
+    def init_layers(self, key):
+        cfg = self.cfg
+        L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+        ks = jax.random.split(key, 14)
+        return {
+            "ln1": jnp.zeros((L, D), cfg.dtype),
+            "ln2": jnp.zeros((L, D), cfg.dtype),
+            "mu": jnp.full((L, 5, D), 0.5, cfg.dtype),     # r,k,v,w,g shift mix
+            "wr": _init(ks[0], (L, D, D), D, cfg.dtype),
+            "wk": _init(ks[1], (L, D, D), D, cfg.dtype),
+            "wv": _init(ks[2], (L, D, D), D, cfg.dtype),
+            "wg": _init(ks[3], (L, D, D), D, cfg.dtype),
+            "wo": _init(ks[4], (L, D, D), D, cfg.dtype),
+            "w_base": jnp.full((L, D), -1.0, cfg.dtype),
+            "w_lora_a": _init(ks[5], (L, D, _LORA_R), D, cfg.dtype),
+            "w_lora_b": jnp.zeros((L, _LORA_R, D), cfg.dtype),
+            "u_bonus": jnp.zeros((L, D), cfg.dtype),
+            "ln_x": jnp.zeros((L, D), cfg.dtype),
+            "mu_cm": jnp.full((L, 2, D), 0.5, cfg.dtype),  # channel-mix shift
+            "wk_cm": _init(ks[6], (L, D, F), D, cfg.dtype),
+            "wv_cm": _init(ks[7], (L, F, D), F, cfg.dtype),
+            "wr_cm": _init(ks[8], (L, D, D), D, cfg.dtype),
+        }
+
+    # ---------------------------------------------------------------- parts
+    def _heads(self, x):
+        b, s, d = x.shape
+        return x.reshape(b, s, self.n_heads, self.cfg.rwkv_head_dim)
+
+    def _time_mix_seq(self, pl, x, s0, x_prev0):
+        """Full-sequence time-mix. x: (B, S, D); s0: (B, H, hd, hd) initial
+        state; x_prev0: (B, D) token before x[0]. Returns (y, s_T, x_last)."""
+        cfg = self.cfg
+        b, s, d = x.shape
+        hd = cfg.rwkv_head_dim
+        xz = jnp.concatenate([x_prev0[:, None, :], x[:, :-1]], axis=1)
+        mu = pl["mu"].astype(jnp.float32)  # (5, D)
+        x32, xz32 = x.astype(jnp.float32), xz.astype(jnp.float32)
+
+        def mix(i):
+            return (x32 + mu[i] * (xz32 - x32)).astype(x.dtype)
+
+        r = self._heads(mm(mix(0), pl["wr"]))
+        k = self._heads(mm(mix(1), pl["wk"]))
+        v = self._heads(mm(mix(2), pl["wv"]))
+        w_dd = (mix(3).astype(jnp.float32) @ pl["w_lora_a"].astype(jnp.float32)
+                ) @ pl["w_lora_b"].astype(jnp.float32)
+        w = jnp.exp(-jnp.exp(pl["w_base"].astype(jnp.float32) + w_dd))
+        w = self._heads(w)  # (B, S, H, hd) in (0,1)
+        g = jax.nn.silu(mm(mix(4), pl["wg"]))
+        u = pl["u_bonus"].astype(jnp.float32).reshape(self.n_heads, hd)
+
+        def step(S, t):
+            r_t, k_t, v_t, w_t = t
+            kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                            v_t.astype(jnp.float32))
+            y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                           S + u[None, :, :, None] * kv)
+            S = w_t.astype(jnp.float32)[..., None] * S + kv
+            return S, y
+
+        xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+        s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+        y = rms_norm(y, pl["ln_x"]) * g
+        return mm(y, pl["wo"]), s_fin.astype(x.dtype), x[:, -1]
+
+    def _channel_mix_seq(self, pl, x, x_prev0):
+        xz = jnp.concatenate([x_prev0[:, None, :], x[:, :-1]], axis=1)
+        mu = pl["mu_cm"].astype(jnp.float32)
+        x32, xz32 = x.astype(jnp.float32), xz.astype(jnp.float32)
+        xk = (x32 + mu[0] * (xz32 - x32)).astype(x.dtype)
+        xr = (x32 + mu[1] * (xz32 - x32)).astype(x.dtype)
+        k = jnp.square(jax.nn.relu(mm(xk, pl["wk_cm"])))
+        return jax.nn.sigmoid(mm(xr, pl["wr_cm"])) * mm(k, pl["wv_cm"]), x[:, -1]
+
+    def _layer_seq(self, pl, x, s0, xp_tm, xp_cm):
+        h = rms_norm(x, pl["ln1"])
+        y, s_fin, xl_tm = self._time_mix_seq(pl, h, s0, xp_tm)
+        x = constrain(x + y, _SPEC_BSD)
+        h = rms_norm(x, pl["ln2"])
+        y, xl_cm = self._channel_mix_seq(pl, h, xp_cm)
+        return constrain(x + y, _SPEC_BSD), s_fin, xl_tm, xl_cm
+
+    # ----------------------------------------------------------- interfaces
+    def _zero_states(self, batch):
+        cfg = self.cfg
+        hd = cfg.rwkv_head_dim
+        return (
+            jnp.zeros((batch, self.n_heads, hd, hd), cfg.dtype),
+            jnp.zeros((batch, cfg.d_model), cfg.dtype),
+            jnp.zeros((batch, cfg.d_model), cfg.dtype),
+        )
+
+    def apply_train(self, layers, x, positions):
+        cfg = self.cfg
+        b = x.shape[0]
+        s0, xp, xc = self._zero_states(b)
+
+        def body(h, pl):
+            fn = remat_wrap(self._layer_seq, cfg)
+            h, _, _, _ = fn(pl, h, s0, xp, xc)
+            return h, None
+
+        h, _ = jax.lax.scan(body, x, layers)
+        return h
+
+    def init_cache(self, batch: int, seq: int):
+        cfg = self.cfg
+        hd = cfg.rwkv_head_dim
+        L = cfg.n_layers
+        return {
+            "state": jnp.zeros((L, batch, self.n_heads, hd, hd), cfg.dtype),
+            "xp_tm": jnp.zeros((L, batch, cfg.d_model), cfg.dtype),
+            "xp_cm": jnp.zeros((L, batch, cfg.d_model), cfg.dtype),
+        }
+
+    def apply_prefill(self, layers, x, positions):
+        b = x.shape[0]
+        s0, xp, xc = self._zero_states(b)
+
+        def body(h, pl):
+            h, s_fin, xl_tm, xl_cm = self._layer_seq(pl, h, s0, xp, xc)
+            return h, (s_fin, xl_tm, xl_cm)
+
+        h, (states, xts, xcs) = jax.lax.scan(body, x, layers)
+        return h, {"state": states, "xp_tm": xts, "xp_cm": xcs}
+
+    def apply_decode(self, layers, x, cache, length):
+        """x: (B, 1, D). O(1) per token: single-step recurrence per layer."""
+        del length
+
+        def body(h, xs):
+            pl, S, xp_tm, xp_cm = xs
+            h2, s_fin, xl_tm, xl_cm = self._layer_seq(
+                pl, h, S.astype(jnp.float32), xp_tm, xp_cm)
+            return h2, (s_fin, xl_tm, xl_cm)
+
+        h, (states, xts, xcs) = jax.lax.scan(
+            body, x, (layers, cache["state"], cache["xp_tm"], cache["xp_cm"]))
+        return h, {"state": states, "xp_tm": xts, "xp_cm": xcs}

@@ -1,0 +1,3 @@
+"""Quantized-weight runtime representation (packing, pytree, apply)."""
+from .qtensor import QuantizedLinear, from_parts, dequantize  # noqa: F401
+from .apply import apply, apply_lowrank_separate, apply_kernel  # noqa: F401

@@ -1,0 +1,46 @@
+"""Applying a QuantizedLinear: y = deq(W_q)·xs + U(V·xs), xs = α⁻¹⊙x.
+
+Two paths:
+  * ``apply``        — pure-jnp reference (used everywhere on CPU and as the
+    oracle for the Pallas kernel).
+  * ``apply_kernel`` — routes to the fused Pallas kernel
+    (``repro.kernels.ops.quant_matmul``) on TPU; falls back to ``apply``
+    when the kernel doesn't support the configuration.
+
+Convention: x has shape (..., n) and the result (..., m) — matching
+``x @ W.T`` for a (m=out, n=in) weight.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .qtensor import QuantizedLinear, dequantize
+
+
+def apply(qt: QuantizedLinear, x, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    w = dequantize(qt, dtype=jnp.float32)  # (m, n) incl. low-rank + act scale
+    y = jnp.einsum("...n,mn->...m", x.astype(jnp.float32), w)
+    return y.astype(out_dtype)
+
+
+def apply_lowrank_separate(qt: QuantizedLinear, x, out_dtype=None):
+    """Serving-shaped computation: never materializes deq + UV together.
+    This is the FLOP/byte structure the fused kernel implements."""
+    out_dtype = out_dtype or x.dtype
+    from .qtensor import dequantize_qpart
+
+    xs = x.astype(jnp.float32) * qt.act_scale_inv.astype(jnp.float32)
+    wq = dequantize_qpart(qt, dtype=jnp.float32)
+    y = jnp.einsum("...n,mn->...m", xs, wq)
+    if qt.rank > 0:
+        t = jnp.einsum("...n,rn->...r", xs, qt.v.astype(jnp.float32))
+        y = y + jnp.einsum("...r,mr->...m", t, qt.u.astype(jnp.float32))
+    return y.astype(out_dtype)
+
+
+def apply_kernel(qt: QuantizedLinear, x, out_dtype=None, interpret: bool = False):
+    """Fused Pallas path (interpret=True on CPU for validation)."""
+    from ..kernels import ops as kernel_ops
+
+    return kernel_ops.quant_matmul(qt, x, out_dtype=out_dtype, interpret=interpret)

@@ -1,0 +1,75 @@
+"""Bit-packing of integer quantization codes into uint8 words.
+
+Codes arrive as int32 in the *unsigned* code domain (0 .. 2^bits - 1; the
+symmetric case is offset by 2^(bits-1) before packing). Supported widths:
+2, 3, 4, 8 bits. Packing is along the last axis; for b ∈ {2,4,8} each byte
+holds 8/b codes; for b = 3, every 8 codes become 3 bytes.
+
+These layouts are what the Pallas ``quant_matmul`` kernel consumes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 3, 4, 8)
+
+
+def packed_size(n: int, bits: int) -> int:
+    if bits == 3:
+        assert n % 8 == 0
+        return (n // 8) * 3
+    per = 8 // bits
+    assert n % per == 0
+    return n // per
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def pack(codes: jax.Array, bits: int) -> jax.Array:
+    """(..., n) int codes -> (..., packed_size(n, bits)) uint8."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits={bits} not in {SUPPORTED_BITS}")
+    c = codes.astype(jnp.uint32)
+    if bits == 8:
+        return c.astype(jnp.uint8)
+    if bits == 3:
+        *lead, n = c.shape
+        g = c.reshape(*lead, n // 8, 8)
+        # 8 codes * 3 bits = 24 bits -> 3 bytes, little-endian bit order.
+        word = jnp.zeros(g.shape[:-1], jnp.uint32)
+        for i in range(8):
+            word = word | (g[..., i] << (3 * i))
+        b0 = (word & 0xFF).astype(jnp.uint8)
+        b1 = ((word >> 8) & 0xFF).astype(jnp.uint8)
+        b2 = ((word >> 16) & 0xFF).astype(jnp.uint8)
+        return jnp.stack([b0, b1, b2], axis=-1).reshape(*lead, (n // 8) * 3)
+    per = 8 // bits
+    *lead, n = c.shape
+    g = c.reshape(*lead, n // per, per)
+    byte = jnp.zeros(g.shape[:-1], jnp.uint32)
+    for i in range(per):
+        byte = byte | (g[..., i] << (bits * i))
+    return byte.astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("bits", "n"))
+def unpack(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """(..., packed) uint8 -> (..., n) int32 codes (unsigned domain)."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits={bits} not in {SUPPORTED_BITS}")
+    p = packed.astype(jnp.uint32)
+    if bits == 8:
+        return p.astype(jnp.int32)
+    *lead, _ = p.shape
+    if bits == 3:
+        b = p.reshape(*lead, n // 8, 3)
+        word = b[..., 0] | (b[..., 1] << 8) | (b[..., 2] << 16)
+        outs = [(word >> (3 * i)) & 0x7 for i in range(8)]
+        return jnp.stack(outs, axis=-1).reshape(*lead, n).astype(jnp.int32)
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    b = p.reshape(*lead, n // per)
+    outs = [(b >> (bits * i)) & mask for i in range(per)]
+    return jnp.stack(outs, axis=-1).reshape(*lead, n).astype(jnp.int32)

@@ -1,0 +1,107 @@
+"""QuantizedLinear: the runtime representation of an FLRQ-quantized matrix.
+
+    W ≈ ( deq(codes) + U @ V ) @ diag(act_scale_inv)
+
+so  y = W x  is served as
+
+    xs = act_scale_inv ⊙ x
+    y  = deq(codes) @ xs + U @ (V @ xs)
+
+Registered as a JAX pytree so it shards/jits/checkpoints like any other
+parameter. All static metadata (bits, group size, logical shape) lives in
+the aux data, all arrays are leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantize import QuantSpec
+from . import packing
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedLinear:
+    packed: jax.Array           # (m, n_groups, packed_group) uint8
+    scale: jax.Array            # (m, n_groups, 1) f32
+    zp: jax.Array               # (m, n_groups, 1) f32
+    u: jax.Array                # (m, r) low-rank left factor (bf16/f32)
+    v: jax.Array                # (r, n) low-rank right factor
+    act_scale_inv: jax.Array    # (n,) inverse activation scaling (ones if off)
+    bits: int = dataclasses.field(metadata=dict(static=True), default=4)
+    group_size: int = dataclasses.field(metadata=dict(static=True), default=128)
+    symmetric: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    m: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def spec(self) -> QuantSpec:
+        return QuantSpec(self.bits, self.group_size, self.symmetric)
+
+    @property
+    def rank(self) -> int:
+        return self.u.shape[1]
+
+    # --- storage accounting (paper Eq. 9 / Tables 3, 19-20) ----------------
+    def storage_bits(self) -> int:
+        lowrank = 16 * self.rank * (self.m + self.n)
+        scales = 32 * 2 * self.m * (self.n // self.group_size)
+        return self.bits * self.m * self.n + lowrank + scales
+
+    def extra_avg_bits(self) -> float:
+        """Average extra bits per weight from the low-rank factors."""
+        return 16.0 * self.rank * (self.m + self.n) / (self.m * self.n)
+
+
+def from_parts(
+    w_q_codes: jax.Array,       # (m, ng, g) int32 unsigned-domain codes
+    scale: jax.Array,
+    zp: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    spec: QuantSpec,
+    act_scale_inv: Optional[jax.Array] = None,
+    store_dtype=jnp.bfloat16,
+) -> QuantizedLinear:
+    m, ng, g = w_q_codes.shape
+    n = ng * g
+    offs = (1 << (spec.bits - 1)) if spec.symmetric else 0
+    packed = packing.pack(w_q_codes + offs, spec.bits)
+    if act_scale_inv is None:
+        act_scale_inv = jnp.ones((n,), store_dtype)
+    return QuantizedLinear(
+        packed=packed,
+        scale=scale.astype(jnp.float32),
+        zp=zp.astype(jnp.float32),
+        u=u.astype(store_dtype),
+        v=v.astype(store_dtype),
+        act_scale_inv=act_scale_inv.astype(store_dtype),
+        bits=spec.bits,
+        group_size=spec.group_size,
+        symmetric=spec.symmetric,
+        m=m,
+        n=n,
+    )
+
+
+def dequantize(qt: QuantizedLinear, dtype=jnp.float32) -> jax.Array:
+    """Materialize the effective full-precision matrix (m, n), including the
+    low-rank correction and activation scaling."""
+    codes = packing.unpack(qt.packed, qt.bits, qt.group_size)
+    offs = (1 << (qt.bits - 1)) if qt.symmetric else 0
+    wq = ((codes - offs).astype(jnp.float32) - qt.zp) * qt.scale
+    wq = wq.reshape(qt.m, qt.n)
+    w = wq + qt.u.astype(jnp.float32) @ qt.v.astype(jnp.float32)
+    return (w * qt.act_scale_inv.astype(jnp.float32)[None, :]).astype(dtype)
+
+
+def dequantize_qpart(qt: QuantizedLinear, dtype=jnp.float32) -> jax.Array:
+    """Only deq(codes) (m, n) — what the Pallas kernel reconstructs on-chip."""
+    codes = packing.unpack(qt.packed, qt.bits, qt.group_size)
+    offs = (1 << (qt.bits - 1)) if qt.symmetric else 0
+    wq = ((codes - offs).astype(jnp.float32) - qt.zp) * qt.scale
+    return wq.reshape(qt.m, qt.n).astype(dtype)

@@ -1,0 +1,148 @@
+"""Quantizing whole *stacked* model parameter trees for serving.
+
+Model stacks store layer weights stacked as (L, in, out) (MoE: (L, E, in,
+out)) so lax.scan slices them per layer. FLRQ selects a *different* rank per
+layer (the paper's point), but a scanned executable needs uniform shapes —
+the production answer is rank bucketing: quantize each layer independently,
+then zero-pad every layer's (U, V) to the per-tensor max rank and stack.
+Zero columns contribute nothing numerically; storage accounting keeps the
+true per-layer ranks.
+
+``quantize_model_stacked``  — real quantization (CPU-sized models, examples)
+``abstract_quantized_params`` — ShapeDtypeStruct tree of the same layout at
+full production scale, for the quantized-serving dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.flrq import FLRQConfig, LayerStats, quantize_matrix
+from .qtensor import QuantizedLinear
+from . import packing
+
+# stacked params we quantize: every big 2-D matrix inside 'layers'
+_QUANT_PAT = re.compile(
+    r"wq$|wk$|wv$|wo$|w_gate$|w_up$|w_down$|w_in$|w_out$|"
+    r"\bwr$|\bwg$|wk_cm$|wv_cm$|wr_cm$|w_dt$")
+
+
+def should_quantize(path: str, shape) -> bool:
+    if "layers" not in path:
+        return False
+    if not _QUANT_PAT.search(path.replace("'", "").replace("]", "")):
+        return False
+    a, b = shape[-2], shape[-1]
+    return a >= 128 and b >= 128 and a % 128 == 0
+
+
+def _stack_qts(qts, store_dtype):
+    """Pad ranks to max and stack a list of per-layer QuantizedLinear."""
+    rmax = max(max(q.rank for q in qts), 1)
+
+    def pad_u(q):
+        u = np.asarray(q.u.astype(jnp.float32))
+        return np.pad(u, ((0, 0), (0, rmax - u.shape[1])))
+
+    def pad_v(q):
+        v = np.asarray(q.v.astype(jnp.float32))
+        return np.pad(v, ((0, rmax - v.shape[0]), (0, 0)))
+
+    q0 = qts[0]
+    return QuantizedLinear(
+        packed=jnp.stack([q.packed for q in qts]),
+        scale=jnp.stack([q.scale for q in qts]),
+        zp=jnp.stack([q.zp for q in qts]),
+        u=jnp.asarray(np.stack([pad_u(q) for q in qts])).astype(store_dtype),
+        v=jnp.asarray(np.stack([pad_v(q) for q in qts])).astype(store_dtype),
+        act_scale_inv=jnp.stack([q.act_scale_inv for q in qts]),
+        bits=q0.bits, group_size=q0.group_size, symmetric=q0.symmetric,
+        m=q0.m, n=q0.n,
+    )
+
+
+def quantize_model_stacked(
+    params,
+    calib_acts: Optional[Dict[str, jax.Array]],
+    cfg: FLRQConfig,
+    progress=None,
+):
+    """Returns (serving params tree with QuantizedLinear leaves, stats)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    stats: Dict[str, list] = {}
+
+    def visit(path, leaf):
+        nonlocal key
+        pstr = jax.tree_util.keystr(path)
+        if not (hasattr(leaf, "ndim") and leaf.ndim in (3, 4)
+                and should_quantize(pstr, leaf.shape)):
+            return leaf
+        lead = leaf.shape[:-2]
+        flat = leaf.reshape((-1,) + leaf.shape[-2:])
+        qts, lstats = [], []
+        xc = calib_acts.get(pstr) if calib_acts else None
+        for i in range(flat.shape[0]):
+            key, sub = jax.random.split(key)
+            # transpose: model (in, out) -> quantizer (out=m, in=n)
+            qt, st = quantize_matrix(flat[i].T, xc, cfg, sub,
+                                     name=f"{pstr}[{i}]")
+            qts.append(qt)
+            lstats.append(st)
+            if progress:
+                progress(f"{pstr}[{i}]", st)
+        stats[pstr] = lstats
+        stacked = _stack_qts(qts, cfg.store_dtype)
+        if len(lead) == 2:  # MoE (L, E, ...) — restack leading dims
+            def reshape_lead(x):
+                return x.reshape(lead + x.shape[1:])
+            stacked = dataclasses.replace(
+                stacked,
+                packed=reshape_lead(stacked.packed),
+                scale=reshape_lead(stacked.scale),
+                zp=reshape_lead(stacked.zp),
+                u=reshape_lead(stacked.u),
+                v=reshape_lead(stacked.v),
+                act_scale_inv=reshape_lead(stacked.act_scale_inv),
+            )
+        return stacked
+
+    qtree = jax.tree_util.tree_map_with_path(visit, params)
+    return qtree, stats
+
+
+def abstract_quantized_params(params_shapes, cfg: FLRQConfig,
+                              nominal_rank: int = 40):
+    """ShapeDtypeStruct tree for quantized serving at full scale (dry-run
+    only — no weights exist). ``nominal_rank``: the paper's ~40 average
+    rank (Table 3/4) padded per tensor."""
+    SDS = jax.ShapeDtypeStruct
+    spec = cfg.spec()
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if not (hasattr(leaf, "shape") and len(leaf.shape) in (3, 4)
+                and should_quantize(pstr, leaf.shape)):
+            return leaf
+        lead = leaf.shape[:-2]
+        n_in, m_out = leaf.shape[-2], leaf.shape[-1]  # model (in, out)
+        m, n = m_out, n_in
+        ng = n // cfg.group_size
+        pg = packing.packed_size(cfg.group_size, cfg.bits)
+        r = min(nominal_rank, m, n)
+        return QuantizedLinear(
+            packed=SDS(lead + (m, ng, pg), jnp.uint8),
+            scale=SDS(lead + (m, ng, 1), jnp.float32),
+            zp=SDS(lead + (m, ng, 1), jnp.float32),
+            u=SDS(lead + (m, r), cfg.store_dtype),
+            v=SDS(lead + (r, n), cfg.store_dtype),
+            act_scale_inv=SDS(lead + (n,), cfg.store_dtype),
+            bits=cfg.bits, group_size=cfg.group_size,
+            symmetric=cfg.symmetric, m=m, n=n,
+        )
+
+    return jax.tree_util.tree_map_with_path(visit, params_shapes)

@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 real CPU
+device; only launch/dryrun.py forces 512 placeholder devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def llm_like_matrix():
+    """Weight with decaying spectrum + outlier rows (LLM-like structure —
+    what FLRQ's rank selection exploits)."""
+    k = jax.random.PRNGKey(7)
+    m, n = 256, 512
+    base = jax.random.normal(k, (m, n)) * 0.02
+    sv = 2.0 ** -jnp.arange(12)
+    u = jax.random.normal(jax.random.PRNGKey(1), (m, 12))
+    v = jax.random.normal(jax.random.PRNGKey(2), (12, n))
+    return base + (u * sv) @ v * 0.5
+
+
+@pytest.fixture(scope="session")
+def calib_acts():
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (64, 512))
+    outlier = 1 + 5.0 * (jax.random.uniform(jax.random.PRNGKey(4), (512,)) < 0.02)
+    return x * outlier

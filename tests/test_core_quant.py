@@ -1,0 +1,191 @@
+"""Unit tests: quantization primitives, R1-Sketch, R1-FLR, BLC, FLRQ."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FLRConfig,
+    QuantSpec,
+    blc,
+    flexible_rank_select,
+    flexible_rank_select_py,
+    lowrank_error,
+    pseudo_quantize,
+    rank1_sketch,
+    recon_error,
+    rsvd,
+    sketch_lowrank,
+    sketch_lowrank_block,
+    truncated_svd,
+)
+from repro.core.flrq import FLRQConfig, quantize_matrix
+from repro.core.quantize import awq_scale, channel_mean_abs, search_clip_ratio
+
+
+# ---------------------------------------------------------------- quantize
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_pseudo_quantize_error_bound(llm_like_matrix, bits, symmetric):
+    spec = QuantSpec(bits, 128, symmetric)
+    w = llm_like_matrix
+    wq = pseudo_quantize(w, spec)
+    # max error <= scale/2 per element; scale <= range/levels
+    g = np.asarray(w).reshape(256, -1, 128)
+    rng = g.max(-1) - g.min(-1)
+    if symmetric:
+        rng = 2 * np.abs(g).max(-1)
+    max_scale = rng / ((1 << bits) - 1) if not symmetric else rng / (2 * ((1 << (bits - 1)) - 1))
+    err = np.abs(np.asarray(wq - w)).reshape(256, -1, 128).max(-1)
+    assert (err <= max_scale * 0.5 + 1e-6).all()
+
+
+def test_quantize_monotone_in_bits(llm_like_matrix):
+    errs = [float(recon_error(llm_like_matrix,
+                              pseudo_quantize(llm_like_matrix, QuantSpec(b, 128))))
+            for b in (2, 3, 4, 8)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_clip_search_never_worse_than_unclipped(llm_like_matrix, calib_acts):
+    spec = QuantSpec(3, 128)
+    x = calib_acts.T
+    c = search_clip_ratio(llm_like_matrix, x, spec)
+    e1 = recon_error(llm_like_matrix, pseudo_quantize(llm_like_matrix, spec, c), x)
+    e0 = recon_error(llm_like_matrix, pseudo_quantize(llm_like_matrix, spec, 1.0), x)
+    assert float(e1) <= float(e0) + 1e-7
+
+
+def test_awq_scale_properties(calib_acts):
+    alpha = awq_scale(channel_mean_abs(calib_acts))
+    assert alpha.shape == (512,)
+    assert bool(jnp.all(alpha > 0))
+    # geometric mean ~ 1 (magnitude preserving)
+    assert abs(float(jnp.mean(jnp.log(alpha)))) < 0.3
+
+
+# ---------------------------------------------------------------- r1 sketch
+def test_rank1_sketch_exact_on_rank1(key):
+    u = jax.random.normal(key, (64,))
+    v = jax.random.normal(jax.random.PRNGKey(9), (128,))
+    a = jnp.outer(u, v)
+    u1, v1 = rank1_sketch(a, key, it=2)
+    assert float(lowrank_error(a, u1[:, None], v1[None, :])) < 1e-5
+
+
+def test_sketch_matches_svd_quality(llm_like_matrix, key):
+    for r in (4, 8, 16):
+        us, vs = sketch_lowrank(llm_like_matrix, key, r, it=2)
+        ut, vt = truncated_svd(llm_like_matrix, r)
+        e_s = float(lowrank_error(llm_like_matrix, us, vs))
+        e_t = float(lowrank_error(llm_like_matrix, ut, vt))
+        assert e_s <= e_t * 1.05 + 1e-6  # paper: same accuracy as (R)SVD
+
+
+def test_block_sketch_matches(llm_like_matrix, key):
+    ub, vb = sketch_lowrank_block(llm_like_matrix, key, 16, block=8, it=2)
+    ut, vt = truncated_svd(llm_like_matrix, 16)
+    assert float(lowrank_error(llm_like_matrix, ub, vb)) <= \
+        float(lowrank_error(llm_like_matrix, ut, vt)) * 1.05 + 1e-6
+
+
+def test_rsvd_matches_svd(llm_like_matrix, key):
+    ur, vr = rsvd(llm_like_matrix, key, 16, it=2)
+    ut, vt = truncated_svd(llm_like_matrix, 16)
+    assert float(lowrank_error(llm_like_matrix, ur, vr)) <= \
+        float(lowrank_error(llm_like_matrix, ut, vt)) * 1.02 + 1e-6
+
+
+def test_sketch_it_convergence(llm_like_matrix, key):
+    """Paper Table 7: accuracy improves with it, converged by it≈2."""
+    errs = []
+    for it in (0, 1, 2, 4):
+        u, v = sketch_lowrank(llm_like_matrix, key, 8, it=it)
+        errs.append(float(lowrank_error(llm_like_matrix, u, v)))
+    assert errs[2] <= errs[0] + 1e-6
+    assert abs(errs[3] - errs[2]) < 0.02  # converged at it=2
+
+
+# ---------------------------------------------------------------- R1-FLR
+def test_flr_py_and_lax_agree(llm_like_matrix, key):
+    cfg = FLRConfig(bits=4, max_rank=32)
+    u1, v1, r1, _ = flexible_rank_select_py(llm_like_matrix, key, cfg)
+    res = flexible_rank_select(llm_like_matrix, key, cfg)
+    assert r1 == int(res.rank)
+    if r1 > 0:
+        # different PRNG split orders → slightly different sketch vectors;
+        # the *approximation quality* must agree
+        e1 = float(jnp.linalg.norm(llm_like_matrix - u1 @ v1))
+        e2 = float(jnp.linalg.norm(
+            llm_like_matrix - res.u[:, :r1] @ res.v[:r1, :]))
+        assert abs(e1 - e2) / e1 < 0.02
+
+
+def test_flr_respects_memory_budget(llm_like_matrix, key):
+    m, n = llm_like_matrix.shape
+    for x in (0.05, 0.2, 0.4):
+        cfg = FLRConfig(bits=4, x=x, max_rank=64, t=0.0)
+        _, _, r, _ = flexible_rank_select_py(llm_like_matrix, key, cfg)
+        k = 16 * r * (m + n) / (4 * m * n)
+        assert k <= x + 0.05  # paper Eq. 9 budget
+
+
+def test_flr_rank_grows_with_budget(llm_like_matrix, key):
+    ranks = [flexible_rank_select_py(
+        llm_like_matrix, key, FLRConfig(bits=2, x=x, max_rank=64, t=0.0))[2]
+        for x in (0.05, 0.2, 0.4)]
+    assert ranks == sorted(ranks)  # paper Table 19
+
+
+# ---------------------------------------------------------------- BLC
+def test_blc_monotone_best_error(llm_like_matrix, calib_acts, key):
+    spec = QuantSpec(2, 128)
+    res = blc(llm_like_matrix, calib_acts.T, key, spec, rank=8, epochs=6)
+    # best-so-far error: final best <= init
+    assert float(res.err) <= float(res.err_trace[0]) + 1e-7
+
+
+def test_blc_improves_over_no_blc(llm_like_matrix, calib_acts, key):
+    """Paper Table 10: BLC helps most at 2-bit."""
+    cfg_no = FLRQConfig(bits=2, use_blc=False, max_rank=32)
+    cfg_yes = FLRQConfig(bits=2, use_blc=True, blc_epochs=6, max_rank=32)
+    _, st_no = quantize_matrix(llm_like_matrix, calib_acts, cfg_no, key)
+    _, st_yes = quantize_matrix(llm_like_matrix, calib_acts, cfg_yes, key)
+    assert st_yes.err_after <= st_no.err_after + 1e-6
+
+
+# ---------------------------------------------------------------- FLRQ e2e
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_flrq_beats_rtn(llm_like_matrix, calib_acts, bits, key):
+    cfg = FLRQConfig(bits=bits, blc_epochs=2, max_rank=32)
+    _, st = quantize_matrix(llm_like_matrix, calib_acts, cfg, key)
+    assert st.err_after <= st.err_before + 1e-6
+    if bits == 2:
+        assert st.err_after < st.err_before * 0.5  # big win at 2-bit
+
+
+def test_flrq_roundtrip_apply(llm_like_matrix, calib_acts, key):
+    from repro.quant import apply as qapply
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=32)
+    qt, _ = quantize_matrix(llm_like_matrix, calib_acts, cfg, key)
+    x = jax.random.normal(key, (16, 512))
+    y = qapply(qt, x)
+    y_ref = x @ llm_like_matrix.T
+    rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 0.05
+
+
+def test_flrq_gptq_composition_beats_both(llm_like_matrix, calib_acts, key):
+    """Beyond-paper: R1-FLR low-rank + GPTQ residual quantization corrects
+    orthogonal error modes — composition <= min(FLRQ, GPTQ) error."""
+    from repro.core.flrq_gptq import flrq_gptq_quantize
+    from repro.core.gptq import gptq_quantize
+
+    cfg = FLRQConfig(bits=3, max_rank=24)
+    what_g, _ = gptq_quantize(llm_like_matrix, calib_acts, 3)
+    e_gptq = float(recon_error(llm_like_matrix, what_g, calib_acts.T))
+    what_c, st = flrq_gptq_quantize(llm_like_matrix, calib_acts, cfg, key)
+    assert st.err_after <= e_gptq * 1.02
+    assert st.err_after <= st.err_before  # robustness gate holds

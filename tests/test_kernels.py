@@ -1,0 +1,144 @@
+"""Per-kernel shape/dtype sweeps against the ref.py oracles (interpret
+mode on CPU, per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.group_quant import group_quant
+from repro.kernels.quant_matmul import quant_matmul_fused
+from repro.kernels.r1_sketch import power_iter, sketch_gemv, sketch_gemv_t
+
+
+# ------------------------------------------------------------ quant_matmul
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(128, 512, 128), (256, 1024, 128),
+                                   (128, 256, 384)])
+@pytest.mark.parametrize("rank", [0, 16])
+def test_quant_matmul_sweep(bits, shape, rank, key):
+    m, n, t = shape
+    rng = np.random.default_rng(bits + m + rank)
+    packed = jnp.asarray(
+        rng.integers(0, 256, (m, n // 128, 128 * bits // 8)), jnp.uint8)
+    scale = jnp.asarray(rng.random((m, n // 128, 1)) * 0.02 + 1e-3, jnp.float32)
+    zp = jnp.asarray(rng.integers(0, 1 << bits, (m, n // 128, 1)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((m, rank)) * 0.05, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((rank, n)) * 0.05, jnp.float32)
+    asi = jnp.asarray(rng.random(n) + 0.5, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((t, n)), jnp.float32)
+    y_k = quant_matmul_fused(x, packed, scale, zp, u, v, asi,
+                             bits=bits, interpret=True)
+    y_r = ref.quant_matmul_ref(x, packed, scale, zp, u, v, asi, bits=bits)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_dtypes(dtype, key):
+    from repro.core.flrq import FLRQConfig, quantize_matrix
+    m, n = 128, 512
+    w = jax.random.normal(key, (m, n)) * 0.05
+    qt, _ = quantize_matrix(w, None, FLRQConfig(bits=4, blc_epochs=1,
+                                                max_rank=8), key)
+    x = jax.random.normal(key, (64, n)).astype(dtype)
+    y_k = ops.quant_matmul(qt, x, interpret=True)
+    y_r = ref.quant_matmul_ref(x.astype(jnp.float32), qt.packed, qt.scale,
+                               qt.zp, qt.u, qt.v, qt.act_scale_inv, bits=4)
+    assert y_k.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y_k, np.float32), np.asarray(y_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_quant_matmul_3bit_falls_back(key):
+    from repro.core.flrq import FLRQConfig, quantize_matrix
+    w = jax.random.normal(key, (128, 256)) * 0.05
+    qt, _ = quantize_matrix(w, None, FLRQConfig(bits=3, blc_epochs=1,
+                                                max_rank=8), key)
+    x = jax.random.normal(key, (8, 256))
+    y = ops.quant_matmul(qt, x, interpret=True)  # routes to ref path
+    y_r = ref.quant_matmul_ref(x, qt.packed, qt.scale, qt.zp, qt.u, qt.v,
+                               qt.act_scale_inv, bits=3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=1e-5)
+
+
+# ------------------------------------------------------------- group_quant
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("symmetric", [False, True])
+@pytest.mark.parametrize("mn", [(256, 1024), (128, 256)])
+def test_group_quant_sweep(bits, symmetric, mn, key):
+    m, n = mn
+    w = jax.random.normal(key, (m, n), jnp.float32)
+    pk, sc, zp = group_quant(w, bits=bits, symmetric=symmetric, interpret=True)
+    pk2, sc2, zp2 = ref.group_quant_ref(w, bits=bits, symmetric=symmetric)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(zp), np.asarray(zp2), atol=1)
+    # codes may differ by ±1 ulp at exact rounding boundaries; compare deq
+    from repro.quant import packing
+    offs = (1 << (bits - 1)) if symmetric else 0
+    d1 = (packing.unpack(pk, bits, 128) - offs - zp) * sc
+    d2 = (packing.unpack(pk2, bits, 128) - offs - zp2) * sc2
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               atol=float(sc.max()) * 1.01)
+
+
+# ---------------------------------------------------------------- r1 sketch
+@pytest.mark.parametrize("mn", [(256, 512), (512, 1024), (256, 1536)])
+@pytest.mark.parametrize("b", [1, 8])
+def test_sketch_gemv_sweep(mn, b, key):
+    m, n = mn
+    a = jax.random.normal(key, (m, n), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, b), jnp.float32)
+    y = sketch_gemv(a, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(a @ x),
+                               rtol=2e-4, atol=2e-3)
+    yb = jax.random.normal(jax.random.PRNGKey(2), (m, b), jnp.float32)
+    z = sketch_gemv_t(a, yb, interpret=True)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(a.T @ yb),
+                               rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("it", [0, 1, 2])
+def test_power_iter_matches_ref(it, key):
+    a = jax.random.normal(key, (256, 512), jnp.float32)
+    s = jax.random.normal(jax.random.PRNGKey(5), (512,), jnp.float32)
+    p_k, k_k = power_iter(a, s, it=it, interpret=True)
+    p_r, k_r = ref.power_iter_ref(a, s, it=it)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k_k), np.asarray(k_r),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_kernel_sketch_plugs_into_rank1(key):
+    """ops.sketch_power_iter yields the same rank-1 factors as core."""
+    from repro.core.r1_sketch import rank1_sketch
+    a = jax.random.normal(key, (300, 700), jnp.float32)  # padded path
+    p, k = ops.sketch_power_iter(a, jax.random.normal(key, (700,)), it=2,
+                                 interpret=True)
+    kn = jnp.linalg.norm(k)
+    u_kernel = p * kn
+    v_kernel = k / kn
+    a1 = jnp.outer(u_kernel, v_kernel)
+    u, v = rank1_sketch(a, key, it=2)
+    # same dominant subspace (sign may flip): compare projections
+    e_kernel = float(jnp.linalg.norm(a - a1))
+    e_core = float(jnp.linalg.norm(a - jnp.outer(u, v)))
+    assert abs(e_kernel - e_core) / e_core < 0.05
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize("shape,causal", [
+    ((2, 512, 4, 64), True), ((1, 1024, 2, 128), True),
+    ((2, 256, 4, 64), False)])
+def test_flash_attention_kernel(shape, causal, key):
+    from repro.kernels.flash_attention import flash_attention_tpu
+    from repro.models.layers import flash_attention
+    b, s, h, hd = shape
+    q = jax.random.normal(key, shape, jnp.float32)
+    k_ = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32)
+    o_k = flash_attention_tpu(q, k_, v, causal=causal, interpret=True)
+    o_r = flash_attention(q, k_, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-5)

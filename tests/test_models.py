@@ -1,0 +1,191 @@
+"""Per-arch smoke tests (reduced same-family configs, one fwd/train step on
+CPU, output shapes + no NaNs) and prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, PAPER_PROXIES, get_smoke_config
+from repro.models import LM
+from repro.models.layers import rms_norm, softcap
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    if cfg.family == "encoder":
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model)),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "mask": jnp.ones((B, S), bool),
+        }
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(arch, key):
+    """One forward + one gradient step per assigned architecture."""
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gn) and float(gn) > 0, arch
+    # sgd step changes the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2 = model.loss(params2, batch)
+    assert jnp.isfinite(loss2)
+    assert float(loss2) != float(loss)
+
+
+def _full_logits(model, params, tokens):
+    cfg = model.cfg
+    x = model._embed_tokens(params, tokens)
+    h = model.stack.apply_train(params["layers"], x,
+                                model._positions(*tokens.shape))
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                        model._unembed(params).astype(jnp.float32))
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ARCHS)
+                                  if ARCHS[a].family != "encoder"])
+def test_prefill_decode_matches_forward(arch, key):
+    cfg = get_smoke_config(arch)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_impl="ragged")  # exact dispatch
+    model = LM(cfg)
+    params = model.init(key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    ref = _full_logits(model, params, tokens)
+    pre, cache = model.prefill(params, tokens[:, :S - 1])
+    np.testing.assert_allclose(np.asarray(pre[:, 0]), np.asarray(ref[:, S - 2]),
+                               rtol=1e-3, atol=2e-2)
+    full = model.init_cache(B, S)
+    cache = jax.tree.map(
+        lambda f, g: jax.lax.dynamic_update_slice(
+            f, g.astype(f.dtype), (0,) * f.ndim) if f.shape != g.shape else g,
+        full, cache)
+    dec, _ = model.decode_step(params, tokens[:, S - 1], cache,
+                               jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(ref[:, S - 1]),
+                               rtol=1e-3, atol=2e-2)
+
+
+def test_moe_capacity_approximates_ragged(key):
+    """With generous capacity, GShard dispatch ≈ exact dropless dispatch."""
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    cfg_r = dataclasses.replace(cfg, moe_impl="ragged")
+    cfg_c = dataclasses.replace(cfg, moe_impl="capacity", capacity_factor=4.0)
+    m_r, m_c = LM(cfg_r), LM(cfg_c)
+    params = m_r.init(key)
+    batch = _batch(cfg, key)
+    l_r = float(m_r.loss(params, batch))
+    l_c = float(m_c.loss(params, batch))
+    assert abs(l_r - l_c) / l_r < 0.05
+
+
+def test_gemma2_softcap_and_local_window(key):
+    cfg = get_smoke_config("gemma2-9b")
+    assert cfg.attn_softcap and cfg.local_window
+    model = LM(cfg)
+    params = model.init(key)
+    loss = model.loss(params, _batch(cfg, key))
+    assert jnp.isfinite(loss)
+
+
+def test_rwkv6_state_decode_is_o1(key):
+    """rwkv6 cache size is independent of sequence length."""
+    cfg = get_smoke_config("rwkv6-1.6b")
+    model = LM(cfg)
+    c1 = jax.eval_shape(lambda: model.init_cache(2, 128))
+    c2 = jax.eval_shape(lambda: model.init_cache(2, 4096))
+    s1 = sum(np.prod(x.shape) for x in jax.tree.leaves(c1))
+    s2 = sum(np.prod(x.shape) for x in jax.tree.leaves(c2))
+    assert s1 == s2
+
+
+def test_vlm_mrope_positions(key):
+    from repro.models.model import mrope_positions_for_image
+    pos = mrope_positions_for_image(2, 1, 4, 6)
+    assert pos.shape == (2, 3, 24)
+    assert int(pos[0, 1].max()) == 3 and int(pos[0, 2].max()) == 5
+
+
+def test_paper_proxy_losses(key):
+    for name, cfg in PAPER_PROXIES.items():
+        model = LM(cfg)
+        params = model.init(key)
+        loss = model.loss(params, _batch(cfg, key))
+        assert jnp.isfinite(loss), name
+
+
+# ------------------------------------------------------------- perf levers
+def test_grouped_decode_attn_matches_baseline(key):
+    """Beyond-paper grouped GQA decode is numerically identical."""
+    cfg = get_smoke_config("qwen3-4b")
+    m0, m1 = LM(cfg), LM(dataclasses.replace(cfg, grouped_decode_attn=True))
+    params = m0.init(key)
+    tokens = jax.random.randint(key, (B, 16), 0, cfg.vocab)
+    _, cache = m0.prefill(params, tokens[:, :15])
+    full = m0.init_cache(B, 16)
+    cache = jax.tree.map(
+        lambda f, g: jax.lax.dynamic_update_slice(
+            f, g.astype(f.dtype), (0,) * f.ndim) if f.shape != g.shape else g,
+        full, cache)
+    l0, _ = m0.decode_step(params, tokens[:, 15], cache, jnp.int32(15))
+    l1, _ = m1.decode_step(params, tokens[:, 15], cache, jnp.int32(15))
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_int8_kv_cache_decode_close(key):
+    """int8 KV cache decode stays within ~2% of the bf16-cache logits."""
+    cfg = get_smoke_config("qwen3-4b")
+    m8 = LM(dataclasses.replace(cfg, kv_cache_bits=8,
+                                grouped_decode_attn=True))
+    m0 = LM(cfg)
+    params = m0.init(key)
+    tokens = jax.random.randint(key, (B, 8), 0, cfg.vocab)
+    c0 = m0.init_cache(B, 8)
+    c8 = m8.init_cache(B, 8)
+    assert c8["k"].dtype == jnp.int8 and "k_scale" in c8
+    l0, c0 = m0.decode_step(params, tokens[:, 0], c0, jnp.int32(0))
+    l8, c8 = m8.decode_step(params, tokens[:, 0], c8, jnp.int32(0))
+    for i in range(1, 5):
+        l0, c0 = m0.decode_step(params, tokens[:, i], c0, jnp.int32(i))
+        l8, c8 = m8.decode_step(params, tokens[:, i], c8, jnp.int32(i))
+    rel = float(jnp.linalg.norm(l0 - l8) / jnp.linalg.norm(l0))
+    assert rel < 0.05, rel
+
+
+def test_moe_grouped_and_ep_match_ragged(key):
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    batch = _batch(cfg, key)
+    m_r = LM(dataclasses.replace(cfg, moe_impl="ragged"))
+    params = m_r.init(key)
+    l_r = float(m_r.loss(params, batch))
+    for ep in (False, True):
+        m_g = LM(dataclasses.replace(cfg, moe_impl="grouped",
+                                     capacity_factor=4.0, expert_parallel=ep))
+        l_g = float(m_g.loss(params, batch))
+        assert abs(l_g - l_r) / l_r < 0.02, (ep, l_g, l_r)
+
+
+def test_remat_dots_same_loss(key):
+    cfg = get_smoke_config("mistral-nemo-12b", remat=True)
+    batch = _batch(cfg, key)
+    m_full = LM(dataclasses.replace(cfg, remat_policy="full"))
+    m_dots = LM(dataclasses.replace(cfg, remat_policy="dots"))
+    params = m_full.init(key)
+    l1 = float(m_full.loss(params, batch))
+    l2 = float(m_dots.loss(params, batch))
+    assert abs(l1 - l2) < 1e-5

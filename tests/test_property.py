@@ -1,0 +1,121 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import QuantSpec, pseudo_quantize, compute_qparams, \
+    quantize_codes, dequantize_codes
+from repro.quant import packing
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    m=st.integers(1, 8),
+    ng=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**_SETTINGS)
+def test_pack_unpack_roundtrip(bits, m, ng, seed):
+    """unpack(pack(c)) == c for all code tensors in range."""
+    rng = np.random.default_rng(seed)
+    n = ng * 128
+    codes = rng.integers(0, (1 << bits), size=(m, n)).astype(np.int32)
+    packed = packing.pack(jnp.asarray(codes), bits)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape[-1] == packing.packed_size(n, bits)
+    out = packing.unpack(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    symmetric=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    scale_pow=st.integers(-8, 8),
+)
+@settings(**_SETTINGS)
+def test_quantize_idempotent(bits, symmetric, seed, scale_pow):
+    """Quantizing an already-quantized matrix is a fixed point."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((4, 256)) * 2.0**scale_pow,
+                    jnp.float32)
+    spec = QuantSpec(bits, 128, symmetric)
+    w1 = pseudo_quantize(w, spec)
+    w2 = pseudo_quantize(w1, spec)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**_SETTINGS)
+def test_codes_in_range(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
+    spec = QuantSpec(bits, 128, False)
+    scale, zp = compute_qparams(w, spec)
+    codes = quantize_codes(w, spec, scale, zp)
+    assert int(codes.min()) >= 0 and int(codes.max()) <= (1 << bits) - 1
+    # dequant error bounded by scale
+    deq = dequantize_codes(codes, spec, scale, zp)
+    err = jnp.abs(deq - w).reshape(4, 2, 128)
+    bound = scale.reshape(4, 2, 1) * 0.55 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rank=st.integers(1, 6),
+    it=st.integers(0, 3),
+)
+@settings(max_examples=15, deadline=None)
+def test_sketch_error_decreases_with_rank(seed, rank, it):
+    """Peeling r+1 components never increases residual vs peeling r."""
+    from repro.core.r1_sketch import sketch_lowrank
+    from repro.core.rsvd import lowrank_error
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (48, 96))
+    key2 = jax.random.PRNGKey(seed + 1)
+    e_r = float(lowrank_error(a, *sketch_lowrank(a, key2, rank, it=it)))
+    e_r1 = float(lowrank_error(a, *sketch_lowrank(a, key2, rank + 1, it=it)))
+    assert e_r1 <= e_r + 5e-3
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([256, 384, 512]))
+@settings(max_examples=10, deadline=None)
+def test_gradient_compression_bounded_error(seed, n):
+    """int8 compression roundtrip error ≤ amax/127 per element."""
+    from repro.train.step import compress_grads
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal(n), jnp.float32)}
+    out = compress_grads(g, "int8", dp_size=16)
+    amax = float(jnp.max(jnp.abs(g["w"])))
+    assert float(jnp.max(jnp.abs(out["w"] - g["w"]))) <= amax / 127 * 0.51 + 1e-9
+
+
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    t=st.sampled_from([1, 3, 16]),
+)
+@settings(max_examples=10, deadline=None)
+def test_quant_matmul_kernel_matches_ref(bits, seed, t):
+    """Pallas kernel (interpret) == jnp oracle across shapes/bits."""
+    from repro.kernels import ops, ref
+    from repro.core.flrq import FLRQConfig, quantize_matrix
+    key = jax.random.PRNGKey(seed)
+    m, n = 128, 256
+    w = jax.random.normal(key, (m, n)) * 0.05
+    qt, _ = quantize_matrix(w, None, FLRQConfig(
+        bits=bits, blc_epochs=1, max_rank=8, use_scaling=False), key)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, n))
+    y_k = np.asarray(ops.quant_matmul(qt, x, interpret=True))
+    y_r = np.asarray(ref.quant_matmul_ref(
+        x, qt.packed, qt.scale, qt.zp, qt.u, qt.v, qt.act_scale_inv,
+        bits=bits))
+    np.testing.assert_allclose(y_k, y_r, rtol=1e-4, atol=1e-4)

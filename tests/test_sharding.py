@@ -1,0 +1,138 @@
+"""Sharding rules + small-mesh dry-run (multi-device lowering is exercised
+on 8 forced host devices in a subprocess; the full 512-device sweep lives
+in launch/dryrun.py)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, all_cells, cell_status, get_config
+from repro.distributed import sharding as shd
+from repro.distributed.roofline import (
+    Roofline,
+    analytic_flops,
+    collective_stats,
+    min_hbm_bytes,
+    model_flops_for,
+)
+
+
+def test_param_rules_cover_all_archs():
+    """Every parameter of every full-size arch gets a valid spec, and big
+    matrices actually shard on both axes."""
+    for arch, cfg in ARCHS.items():
+        from repro.models import LM
+        shapes = jax.eval_shape(LM(cfg).init, jax.random.PRNGKey(0))
+
+        def visit(path, leaf):
+            pstr = jax.tree_util.keystr(path)
+            spec = shd.param_spec(pstr, leaf.shape, cfg)
+            assert len(spec) == len(leaf.shape), (arch, pstr)
+            if leaf.size > 64e6:  # big tensors must shard
+                assert any(a is not None for a in spec), (arch, pstr)
+            return leaf
+
+        jax.tree_util.tree_map_with_path(visit, shapes)
+
+
+def test_resolve_spec_divisibility_guard():
+    mesh = jax.make_mesh((1,), ("data",))
+    # axis not in mesh -> dropped
+    assert shd.resolve_spec(P("model"), mesh, (25,)) == P(None)
+    # non-divisible dim -> dropped (simulated via a size-1 'data' axis is
+    # always divisible, so check the arithmetic directly)
+    mesh_sizes = shd._axis_size(mesh, ("data",))
+    assert mesh_sizes == 1
+
+
+def test_cell_enumeration_is_40():
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if not c[2]]
+    # hubert decode_32k+long_500k (2) + 7 other non-sub-quadratic long_500k
+    assert len(skips) == 9
+    for _, _, ok, why in cells:
+        assert ok or why
+
+
+def test_collective_parser():
+    hlo = """
+  %all-gather.4 = f32[36,2560,9728]{1,0,2} all-gather(%x), channel_id=55, replica_groups=[16,16]<=[256], dimensions={2}
+  %ar = bf16[1024]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+"""
+    st = collective_stats(hlo, 256)
+    assert st.count == 2
+    ag = 36 * 2560 * 9728 * 4 * 15 / 16
+    ar = 2 * 1024 * 2 * 3 / 4
+    assert abs(st.by_kind["all-gather"] - ag) / ag < 1e-6
+    assert abs(st.by_kind["all-reduce"] - ar) / ar < 1e-6
+
+
+def test_analytic_flops_sane():
+    """6·N·D within 2× for a dense train cell (attention adds the rest)."""
+    cfg = get_config("qwen3-4b")
+    shape = SHAPES["train_4k"]
+    got = analytic_flops(cfg, shape, include_remat=False)
+    approx = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert 0.5 < got / approx < 2.0
+
+
+def test_min_bytes_quantized_smaller():
+    cfg = get_config("mistral-nemo-12b")
+    shape = SHAPES["decode_32k"]
+    assert min_hbm_bytes(cfg, shape, quantized=True) < \
+        min_hbm_bytes(cfg, shape, quantized=False)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=1e15, hbm_bytes=1e12, wire_bytes=1e9, n_devices=256,
+                 model_flops=5e14, min_bytes=5e11)
+    assert r.t_compute > 0 and r.t_memory > 0 and r.t_collective > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    assert 0 < r.roofline_fraction <= 1.01
+
+
+_SUBPROC = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["DRYRUN_XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_mesh
+import repro.configs as C
+import dataclasses
+# shrink shapes so an 8-device CPU mesh can lower quickly
+C.SHAPES = {
+  "train_4k": C.ShapeSpec("train_4k", 128, 8, "train"),
+  "decode_32k": C.ShapeSpec("decode_32k", 256, 8, "decode"),
+}
+mesh = make_mesh((2, 4), ("data", "model"))
+out = {}
+for arch in ["qwen3-4b", "rwkv6-1.6b"]:
+    cfg = C.get_config(arch)
+    C.ARCHS[arch] = dataclasses.replace(
+        cfg, n_layers=2, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=512, vocab=2048)
+    for shape in ["train_4k", "decode_32k"]:
+        lowered, n_dev, _ = lower_cell(arch, shape, mesh=mesh)
+        lowered.compile()
+        out[f"{arch}/{shape}"] = "OK"
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_subprocess():
+    """Real multi-device (8 forced CPU devices) lower+compile."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert all(v == "OK" for v in out.values())
