@@ -1,12 +1,17 @@
-"""Shared benchmark helpers: synthetic LLM-like weights, timing, CSV."""
+"""Shared benchmark helpers: synthetic LLM-like weights, timing, CSV, and
+the BENCH_*.json metric trajectory."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def llm_weight(key, m, n, rank_structure=16, outlier_frac=0.003):
@@ -45,3 +50,25 @@ def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw):
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_bench_json(bench: str, record: dict):
+    """Append ``record`` to BENCH_<bench>.json at the repo root — a JSON
+    list forming the metric trajectory across PRs (each run appends one
+    timestamped entry; regressions show up as a visible downward step)."""
+    path = os.path.join(_REPO_ROOT, f"BENCH_{bench}.json")
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            history = loaded if isinstance(loaded, list) else [loaded]
+        except json.JSONDecodeError:
+            # Preserve the unreadable trajectory instead of clobbering it.
+            os.replace(path, path + ".corrupt")
+    entry = dict(record)
+    entry["ts"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    history.append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"# wrote {os.path.basename(path)} ({len(history)} entries)")

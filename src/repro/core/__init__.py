@@ -1,7 +1,24 @@
 """FLRQ core: the paper's contribution as composable JAX modules."""
 from .quantize import QuantSpec, pseudo_quantize, recon_error, awq_scale  # noqa: F401
-from .r1_sketch import rank1_sketch, sketch_lowrank, sketch_lowrank_block  # noqa: F401
+from .r1_sketch import (  # noqa: F401
+    rank1_sketch,
+    resolve_backend,
+    sketch_lowrank,
+    sketch_lowrank_block,
+    sketch_lowrank_block_masked,
+)
 from .rsvd import rsvd, truncated_svd, lowrank_error  # noqa: F401
-from .flr import FLRConfig, flexible_rank_select, flexible_rank_select_py  # noqa: F401
-from .blc import blc, BLCResult  # noqa: F401
-from .flrq import FLRQConfig, quantize_matrix, quantize_model, model_report  # noqa: F401
+from .flr import (  # noqa: F401
+    FLRConfig,
+    flexible_rank_select,
+    flexible_rank_select_batched,
+    flexible_rank_select_py,
+)
+from .blc import blc, blc_batched, BLCResult  # noqa: F401
+from .flrq import (  # noqa: F401
+    FLRQConfig,
+    model_report,
+    quantize_matrix,
+    quantize_model,
+    quantize_stack,
+)

@@ -14,12 +14,24 @@ another component no longer pays:
 slope is the per-step relative amax decrease (amax_{r-1} - amax_r)/amax_0,
 matching the paper's ``getSlope``.
 
-Two implementations:
+Three implementations:
   * ``flexible_rank_select``      — jitted lax.while_loop into fixed-size
-    buffers, returns (U, V, rank, stats). Used inside jit pipelines/BLC.
+    buffers, returns (U, V, rank, stats). The stopping rule evaluates
+    entirely on device (no host syncs), and the loop body is *batch-safe*:
+    once a matrix stops, further (masked) iterations are no-ops, so the
+    whole function can be ``vmap``-ed over a stack of layers.
+  * ``flexible_rank_select_batched`` — exactly that vmap: one XLA launch
+    selects ranks for all L layers of a stacked (L, m, n) tensor; the
+    while_loop runs until every layer has stopped. This is the default
+    engine of ``repro.quant.stacked``.
   * ``flexible_rank_select_py``   — python-driven loop (one jitted peel per
     step, stops immediately — zero wasted peels, the paper's "discrete"
-    advantage). Used by the offline model quantizer and timing benchmarks.
+    advantage — at the cost of a host sync per peel). Kept as the reference
+    oracle and for the timing benchmarks.
+
+The jitted variants consume the *same* PRNG key chain as the python one
+(sequential ``split``), so all three produce identical peels and therefore
+identical ranks on the same input.
 """
 from __future__ import annotations
 
@@ -41,6 +53,7 @@ class FLRConfig:
     it: int = 2            # power iterations per sketch (paper default)
     d_fp: int = 16         # storage precision of the low-rank factors
     max_rank: int = 128    # hard cap (truncated-SVD comparison uses 128/256)
+    backend: str = "xla"   # sketch backend: "xla" | "pallas" | "auto"
 
 
 class FLRResult(NamedTuple):
@@ -59,53 +72,96 @@ def _qk(amax0, amax, rank, m, n, cfg: FLRConfig):
     return q, k
 
 
+def split_chain(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
+    """(subkeys (n, 2), advanced key) via the sequential split chain
+    (``key, sub = split(key)`` per step). The ONE definition of the
+    per-step PRNG discipline: the jitted FLR peels with it, the python
+    oracle follows the same chain inline, and the stacked drivers use it
+    per layer (as ``flrq.layer_key_chain``) — all of which must stay
+    bit-identical for the engines to agree."""
+    ks = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        ks.append(sub)
+    return jnp.stack(ks), key
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def flexible_rank_select(w: jax.Array, key: jax.Array, cfg: FLRConfig) -> FLRResult:
     """Fully-jitted R1-FLR. Buffers are sized ``cfg.max_rank``; the loop
     exits early via lax.while_loop so no wasted peels are *computed* (only
-    allocated)."""
+    allocated). The stopping decision never leaves the device.
+
+    The body is masked-idempotent once ``done`` is set, which makes the
+    function safe to ``vmap``: batching turns the while_loop condition into
+    "any layer still running", and finished layers ride along unchanged.
+    """
     m, n = w.shape
     max_r = min(cfg.max_rank, m, n)
     amax0 = jnp.max(jnp.abs(w)).astype(jnp.float32)
-    keys = jax.random.split(key, max_r)
+    keys, _ = split_chain(key, max_r)
 
     u_buf = jnp.zeros((m, max_r), w.dtype)
     v_buf = jnp.zeros((max_r, n), w.dtype)
     trace = jnp.full((max_r + 1,), amax0, jnp.float32)
 
     def cond(state):
-        i, _, _, _, _, done = state
+        i, _, _, _, _, _, done = state
         return (~done) & (i < max_r)
 
     def body(state):
-        i, resid, u_buf, v_buf, trace, _ = state
-        u1, v1 = rank1_sketch(resid, keys[i], it=cfg.it)
+        i, resid, u_buf, v_buf, trace, rank, done = state
+        u1, v1 = rank1_sketch(resid, keys[i], it=cfg.it, backend=cfg.backend)
         resid_next = resid - jnp.outer(u1, v1).astype(resid.dtype)
         amax = jnp.max(jnp.abs(resid_next)).astype(jnp.float32)
-        rank = (i + 1).astype(jnp.float32)
-        q, k = _qk(amax0, amax, rank, m, n, cfg)
+        q, k = _qk(amax0, amax, (i + 1).astype(jnp.float32), m, n, cfg)
         slope = (trace[i] - amax) / jnp.maximum(amax0, 1e-20)
         stop = (k >= q) | (k > 1.0 + cfg.x) | (slope < cfg.t)
-        # Accept the peel only if it pays.
-        u_buf = jnp.where(stop, u_buf, u_buf.at[:, i].set(u1))
-        v_buf = jnp.where(stop, v_buf, v_buf.at[i, :].set(v1))
-        trace = trace.at[i + 1].set(jnp.where(stop, trace[i], amax))
-        resid_next = jnp.where(stop, resid, resid_next)
-        return (i + 1, resid_next, u_buf, v_buf, trace, stop)
+        # Accept the peel only if it pays — and never after `done` (a lane
+        # that stopped in an earlier iteration must stay frozen under vmap,
+        # trace included, so batched results are bit-identical to looping
+        # the single-matrix call).
+        take = (~done) & (~stop)
+        u_buf = jnp.where(take, u_buf.at[:, i].set(u1), u_buf)
+        v_buf = jnp.where(take, v_buf.at[i, :].set(v1), v_buf)
+        trace = jnp.where(
+            done, trace, trace.at[i + 1].set(jnp.where(stop, trace[i], amax)))
+        resid = jnp.where(take, resid_next, resid)
+        rank = jnp.where(take, i + 1, rank)
+        return (i + 1, resid, u_buf, v_buf, trace, rank, done | stop)
 
-    i, resid, u_buf, v_buf, trace, done = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), w, u_buf, v_buf, trace, jnp.bool_(False))
-    )
-    rank = jnp.where(done, i - 1, i).astype(jnp.int32)
+    state = (jnp.int32(0), w, u_buf, v_buf, trace, jnp.int32(0),
+             jnp.bool_(False))
+    _, _, u_buf, v_buf, trace, rank, _ = jax.lax.while_loop(cond, body, state)
     q, k = _qk(amax0, trace[rank], rank.astype(jnp.float32), m, n, cfg)
     return FLRResult(u_buf, v_buf, rank, trace, q, k)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def flexible_rank_select_batched(
+    w: jax.Array, keys: jax.Array, cfg: FLRConfig
+) -> FLRResult:
+    """R1-FLR for a whole (L, m, n) layer stack in ONE XLA launch.
+
+    ``keys``: (L, 2) per-layer PRNG keys. Returns an FLRResult whose fields
+    carry a leading L dim (u: (L, m, max_r), rank: (L,), ...). The vmapped
+    while_loop iterates until the *slowest-stopping* layer is done; layers
+    that stopped earlier are masked no-ops, so per-layer results are
+    identical to calling ``flexible_rank_select`` in a loop — without the
+    L × rank kernel dispatches and with zero host syncs.
+    """
+    return jax.vmap(lambda wi, ki: flexible_rank_select(wi, ki, cfg))(w, keys)
 
 
 def flexible_rank_select_py(
     w: jax.Array, key: jax.Array, cfg: FLRConfig
 ) -> Tuple[jax.Array, jax.Array, int, list]:
     """Python-driven R1-FLR (paper Alg. 1 verbatim): stops the moment the
-    rule fires, returning exactly-(m, r)/(r, n) factors and the amax trace."""
+    rule fires, returning exactly-(m, r)/(r, n) factors and the amax trace.
+
+    Each peel round-trips ``amax`` to the host (the ``float()`` calls) —
+    that is the per-peel sync the batched engine exists to avoid; this
+    implementation is kept as the reference oracle."""
     m, n = w.shape
     max_r = min(cfg.max_rank, m, n)
     resid = w
@@ -114,7 +170,7 @@ def flexible_rank_select_py(
     us, vs = [], []
     for i in range(max_r):
         key, sub = jax.random.split(key)
-        u1, v1 = rank1_sketch(resid, sub, it=cfg.it)
+        u1, v1 = rank1_sketch(resid, sub, it=cfg.it, backend=cfg.backend)
         resid_next = resid - jnp.outer(u1, v1).astype(resid.dtype)
         amax = float(jnp.max(jnp.abs(resid_next)))
         rank = i + 1

@@ -1,5 +1,6 @@
-"""FLRQ orchestration: per-matrix quantizer and whole-model driver
-(paper Alg. 2: scaling → R1-FLR → clipping → BLC → pack).
+"""FLRQ orchestration: per-matrix quantizer, batched per-stack quantizer,
+and whole-model driver (paper Alg. 2: scaling → R1-FLR → clipping → BLC →
+pack).
 
 The per-matrix pipeline:
 
@@ -11,22 +12,37 @@ The per-matrix pipeline:
   4. the winner is packed into a QuantizedLinear (α⁻¹ folded into the
      runtime input scaling).
 
-``quantize_model`` maps this over every 2-D parameter of a model pytree
-that matches the quantization predicate (min size, not embeddings/norms),
-producing a parallel pytree of QuantizedLinear + a stats report that the
-benchmarks and EXPERIMENTS.md consume.
+``quantize_stack`` runs the same pipeline for all L layers of a stacked
+(L, m, n) tensor as ONE jitted device program (vmapped R1-FLR with the
+device-side stopping rule, batched BLC with per-layer rank masking, batched
+clip search / qparams / bit-packing) — no per-peel host syncs, no per-layer
+dispatch storms. This is the engine behind the default path of
+``repro.quant.stacked.quantize_model_stacked``.
+
+``quantize_model`` maps the per-matrix pipeline over every 2-D parameter of
+a model pytree that matches the quantization predicate (min size, not
+embeddings/norms), producing a parallel pytree of QuantizedLinear + a stats
+report that the benchmarks and EXPERIMENTS.md consume.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .blc import blc as _run_blc
-from .flr import FLRConfig, flexible_rank_select_py
+from .blc import blc_batched as _run_blc_batched
+from .flr import (
+    FLRConfig,
+    flexible_rank_select_batched,
+    flexible_rank_select_py,
+    split_chain,
+)
 from .quantize import (
     QuantSpec,
     awq_scale,
@@ -54,10 +70,12 @@ class FLRQConfig:
     use_blc: bool = True
     seed: int = 0
     store_dtype: Any = jnp.bfloat16
+    backend: str = "xla"         # sketch backend: "xla" | "pallas" | "auto"
 
     def flr(self) -> FLRConfig:
         return FLRConfig(
-            bits=self.bits, x=self.x, t=self.t, it=self.it, max_rank=self.max_rank
+            bits=self.bits, x=self.x, t=self.t, it=self.it,
+            max_rank=self.max_rank, backend=self.backend,
         )
 
     def spec(self) -> QuantSpec:
@@ -146,6 +164,7 @@ def _quantize_matrix_once(
         res = _run_blc(
             ws, xs_obj, k_blc, spec, rank,
             epochs=cfg.recommended_blc_epochs(), it=cfg.it,
+            backend=cfg.backend,
         )
         u, v, clip = res.u, res.v, res.clip
         wq_deq = res.w_q
@@ -178,6 +197,177 @@ def _quantize_matrix_once(
         clip=float(clip),
         seconds=time.perf_counter() - t0,
     )
+    return qt, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched per-stack engine (all L layers of a stacked tensor in one program)
+# ---------------------------------------------------------------------------
+
+# Per-layer PRNG discipline = the per-peel discipline (one definition,
+# flr.split_chain): quantize_stack consumes it and the stacked driver
+# advances its cross-tensor chain with it, keeping both engines in sync.
+layer_key_chain = split_chain
+
+@partial(jax.jit, static_argnames=("cfg", "use_scaling", "has_calib"))
+def _quantize_stack_jit(
+    w_stack: jax.Array,   # (L, m, n) f32, quantizer orientation (m=out)
+    xt: jax.Array,        # (tokens, n) calibration acts (tokens may be 0)
+    keys: jax.Array,      # (L, 2) per-layer PRNG keys
+    cfg: FLRQConfig,
+    use_scaling: bool,
+    has_calib: bool,
+):
+    """The whole FLRQ pipeline for a layer stack as ONE device program:
+    batched scaling → vmapped R1-FLR (device-side stopping) → batched BLC
+    (rank-masked blocked re-sketch) or batched clip search → batched
+    qparams/codes/bit-packing. Returns a dict of L-leading arrays."""
+    L, m, n = w_stack.shape
+    spec = cfg.spec()
+    w32 = w_stack.astype(jnp.float32)
+    xt = xt.astype(jnp.float32)
+
+    # --- (1) activation scaling (shared: the stack sees one calib batch) ---
+    if use_scaling and has_calib:
+        alpha = awq_scale(channel_mean_abs(xt))
+    else:
+        alpha = jnp.ones((n,), jnp.float32)
+    ws = w32 * alpha[None, None, :]
+    if has_calib:
+        xs_obj = (xt / alpha[None, :]).T      # (n, tokens), scaled space
+        x_err = xt.T                          # unscaled-space error objective
+    else:
+        xs_obj = jnp.eye(n, dtype=jnp.float32)  # Frobenius objective
+        x_err = None
+
+    # --- baseline error (plain RTN per layer, for the stats report) --------
+    err_before = jax.vmap(
+        lambda wl: recon_error(wl, pseudo_quantize(wl, spec), x_err))(w32)
+
+    # --- per-layer keys: same split discipline as quantize_matrix ----------
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)  # (L, 3, 2)
+    k_flr, k_blc = k3[:, 1], k3[:, 2]
+
+    # --- (2) flexible rank selection: one launch for the whole stack -------
+    flr = flexible_rank_select_batched(ws, k_flr, cfg.flr())
+    ranks = flr.rank                           # (L,) int32
+    max_r = flr.u.shape[-1]                    # static buffer width
+
+    # --- (3)+(4) BLC (or single-shot clip+quant if disabled) ---------------
+    if cfg.use_blc:
+        res = _run_blc_batched(
+            ws, xs_obj, k_blc, spec, ranks, max_r,
+            epochs=cfg.recommended_blc_epochs(), it=cfg.it,
+            backend=cfg.backend,
+        )
+        u, v, clip, err_after = res.u, res.v, res.clip, res.err
+    else:
+        u, v = flr.u.astype(jnp.float32), flr.v.astype(jnp.float32)
+        resid = ws - u @ v
+
+        def one(resid_l):
+            c = search_clip_ratio(resid_l, xs_obj, spec)
+            return c, pseudo_quantize(resid_l, spec, c)
+
+        clip, wq = jax.vmap(one)(resid)
+        err_after = jax.vmap(
+            lambda wl, wh: recon_error(wl, wh, xs_obj))(ws, wq + u @ v)
+
+    # --- pack ---------------------------------------------------------------
+    resid_final = ws - u @ v
+    scale, zp = jax.vmap(
+        lambda r, c: compute_qparams(r, spec, c))(resid_final, clip)
+    codes = jax.vmap(
+        lambda r, s, z: quantize_codes(r, spec, s, z))(resid_final, scale, zp)
+    packed = qtensor.pack_codes(codes, spec)
+    return dict(
+        packed=packed, scale=scale, zp=zp, u=u, v=v,
+        act_scale_inv=jnp.broadcast_to(1.0 / alpha, (L, n)),
+        ranks=ranks, clip=clip,
+        err_before=err_before, err_after=err_after,
+    )
+
+
+def quantize_stack(
+    w_stack: jax.Array,
+    x_calib: Optional[jax.Array],
+    cfg: FLRQConfig,
+    key: Optional[jax.Array] = None,
+    name: str = "w",
+    *,
+    keys: Optional[jax.Array] = None,
+) -> Tuple[qtensor.QuantizedLinear, List[LayerStats]]:
+    """Quantize an (L, m, n) stack of matrices in one (or, when the
+    robustness gate trips, two) jitted launches. ``x_calib``: (tokens, n)
+    calibration activations shared by the stack, or None.
+
+    Mirrors ``quantize_matrix`` semantics per layer — including the
+    robustness gate: layers whose scaled pipeline lands above their own RTN
+    floor are re-quantized without scaling (as a second *batched* launch
+    over the whole stack) and the better result is kept per layer.
+
+    PRNG: pass either ``key`` (consumed as ``layer_key_chain(key, L)``) or
+    precomputed per-layer ``keys`` (L, 2) — the latter lets a driver thread
+    one chain across many stacks without re-deriving it.
+
+    Returns a stacked QuantizedLinear (U/V padded to the realized max rank;
+    zero columns are numerically inert) and per-layer LayerStats.
+    """
+    t0 = time.perf_counter()
+    L, m, n = w_stack.shape
+    if x_calib is None:
+        x_calib = jnp.zeros((0, n), jnp.float32)
+    has_calib = x_calib.shape[0] > 0
+
+    if (key is None) == (keys is None):
+        raise ValueError("pass exactly one of `key` or `keys`")
+    if keys is None:
+        keys, _ = layer_key_chain(key, L)
+
+    out = _quantize_stack_jit(
+        w_stack, x_calib, keys, cfg, cfg.use_scaling and has_calib, has_calib)
+    if cfg.use_scaling and has_calib:
+        gate = np.asarray(out["err_after"]) > np.asarray(out["err_before"])
+        if gate.any():
+            out2 = _quantize_stack_jit(
+                w_stack, x_calib, keys, cfg, False, has_calib)
+            redo = gate & (np.asarray(out2["err_after"])
+                           < np.asarray(out["err_after"]))
+            if redo.any():
+                sel = jnp.asarray(redo)
+
+                def pick(a, b):
+                    return jnp.where(sel.reshape((L,) + (1,) * (a.ndim - 1)),
+                                     b, a)
+
+                out = jax.tree.map(pick, out, out2)
+
+    ranks = np.asarray(out["ranks"])
+    rmax = max(int(ranks.max()), 1)
+    spec = cfg.spec()
+    qt = qtensor.QuantizedLinear(
+        packed=out["packed"],
+        scale=out["scale"],
+        zp=out["zp"],
+        u=out["u"][:, :, :rmax].astype(cfg.store_dtype),
+        v=out["v"][:, :rmax, :].astype(cfg.store_dtype),
+        act_scale_inv=out["act_scale_inv"].astype(cfg.store_dtype),
+        bits=spec.bits, group_size=spec.group_size,
+        symmetric=spec.symmetric, m=m, n=n,
+    )
+    dt = time.perf_counter() - t0
+    err_b = np.asarray(out["err_before"])
+    err_a = np.asarray(out["err_after"])
+    clips = np.asarray(out["clip"])
+    stats = [
+        LayerStats(
+            name=f"{name}[{i}]", shape=(m, n), rank=int(ranks[i]),
+            err_before=float(err_b[i]), err_after=float(err_a[i]),
+            extra_bits=qtensor.extra_avg_bits(int(ranks[i]), m, n),
+            clip=float(clips[i]), seconds=dt / L,
+        )
+        for i in range(L)
+    ]
     return qt, stats
 
 

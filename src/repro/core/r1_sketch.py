@@ -14,15 +14,24 @@ and  A ≈ A_L A_R^T + residual.  Peeling this repeatedly from the residual
 builds an incremental low-rank approximation whose rank can be decided
 *while* sketching — the property R1-FLR exploits.
 
-Three implementations live here:
+Implementations:
   * ``rank1_sketch``        one rank-1 step (jitted building block)
   * ``sketch_lowrank``      fixed-rank peel via lax.scan (jittable end-to-end)
   * ``sketch_lowrank_block``  beyond-paper blocked variant (block power
     iteration + QR): sketches ``block`` directions per pass, turning GEMV
-    into GEMM for the MXU. Same peel semantics at block=1.
+    into GEMM for the MXU. Same peel semantics at block=1; handles
+    rank % block != 0 with one trailing partial block.
+  * ``sketch_lowrank_block_masked``  fixed ``max_rank`` buffers with a
+    *traced* effective rank: components with index >= rank are zeroed.
+    This is what lets the batched BLC vmap one program over layers whose
+    R1-FLR-selected ranks differ.
 
-A Pallas TPU kernel version of the inner step is in
-``repro.kernels.r1_sketch`` (VMEM-resident A tile across all 2it+2 GEMVs).
+Backends: every sketch entry point takes ``backend``:
+  * ``"xla"``    (default) plain jnp contractions;
+  * ``"pallas"`` force the Pallas TPU kernels from ``repro.kernels.r1_sketch``
+    (the 2·it+2 contraction chain streams A through VMEM once per pass);
+    off-TPU this runs in interpret mode — numerics-equivalent, slow;
+  * ``"auto"``   Pallas on TPU when the shape tiles, else XLA.
 """
 from __future__ import annotations
 
@@ -34,41 +43,84 @@ import jax.numpy as jnp
 
 _EPS = 1e-20
 
+BACKENDS = ("xla", "pallas", "auto")
 
-@partial(jax.jit, static_argnames=("it",))
-def rank1_sketch(a: jax.Array, key: jax.Array, it: int = 2) -> Tuple[jax.Array, jax.Array]:
+
+def _kernel_shape_ok(m: int, n: int) -> bool:
+    """The Pallas sketch kernels tile A as (min(256,m), min(512,n)) blocks
+    (and the transposed pass as (min(256,m), min(512,n))) — both dims must
+    divide evenly."""
+    return (m % min(256, m) == 0) and (n % min(512, n) == 0)
+
+
+def resolve_backend(backend: str, shape) -> str:
+    """Map a user backend choice to a concrete execution mode:
+    "xla" | "pallas" | "pallas_interpret" (forced Pallas off-TPU)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend={backend!r} not in {BACKENDS}")
+    if backend == "xla":
+        return "xla"
+    m, n = int(shape[0]), int(shape[1])
+    if not _kernel_shape_ok(m, n):
+        if backend == "pallas":
+            raise ValueError(
+                f"backend='pallas' but shape ({m}, {n}) does not tile the "
+                "sketch kernels; use backend='auto' for automatic fallback")
+        return "xla"
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "pallas":
+        return "pallas" if on_tpu else "pallas_interpret"
+    return "pallas" if on_tpu else "xla"  # auto
+
+
+def _power_iter(a32: jax.Array, s: jax.Array, it: int, mode: str):
+    """(p, k) with p the normalized power-iterate and k = Aᵀp. ``s`` may be
+    (n,) or (n, b). Cost: 2·it + 2 passes over A in every mode."""
+    if mode == "xla":
+        p = a32 @ s
+        # The A_L/A_R formulas (Eq. 7) are invariant to the scale of P, so we
+        # renormalize between power iterations — without this, ||P|| grows as
+        # sigma_1^(2it+1) and overflows f32 for large / activation-scaled
+        # matrices.
+        p = p / jnp.maximum(jnp.linalg.norm(p, axis=0, keepdims=s.ndim == 2),
+                            _EPS)
+        for _ in range(it):  # unrolled: `it` is tiny and static
+            p = a32 @ (a32.T @ p)
+            p = p / jnp.maximum(
+                jnp.linalg.norm(p, axis=0, keepdims=s.ndim == 2), _EPS)
+        return p, a32.T @ p
+    from ..kernels.r1_sketch import power_iter as kernel_power_iter
+    return kernel_power_iter(a32, s, it=it, interpret=mode == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("it", "backend"))
+def rank1_sketch(
+    a: jax.Array, key: jax.Array, it: int = 2, backend: str = "xla"
+) -> Tuple[jax.Array, jax.Array]:
     """One R1-Sketch step. Returns (u, v) with a ≈ outer(u, v) + residual.
 
     Cost: exactly 2*it + 2 matrix-vector products (paper: "6 GEMV" at it=2).
     """
     a32 = a.astype(jnp.float32)
     s = jax.random.normal(key, (a.shape[1],), jnp.float32)
-    p = a32 @ s
-    # The A_L/A_R formulas (Eq. 7) are invariant to the scale of P, so we
-    # renormalize between power iterations — without this, ||P|| grows as
-    # sigma_1^(2it+1) and overflows f32 for large / activation-scaled
-    # matrices.
-    p = p / jnp.maximum(jnp.linalg.norm(p), _EPS)
-    for _ in range(it):  # unrolled: `it` is tiny and static
-        p = a32 @ (a32.T @ p)
-        p = p / jnp.maximum(jnp.linalg.norm(p), _EPS)
-    k = a32.T @ p  # with ||P|| = 1:  A_L = ||K|| * P,  A_R = K / ||K||
+    mode = resolve_backend(backend, a.shape)
+    p, k = _power_iter(a32, s, it, mode)
     kn = jnp.maximum(jnp.linalg.norm(k), _EPS)
-    u = p * kn
+    u = p * kn  # with ||P|| = 1:  A_L = ||K|| * P,  A_R = K / ||K||
     v = k / kn
     return u.astype(a.dtype), v.astype(a.dtype)
 
 
-@partial(jax.jit, static_argnames=("rank", "it"))
+@partial(jax.jit, static_argnames=("rank", "it", "backend"))
 def sketch_lowrank(
-    a: jax.Array, key: jax.Array, rank: int, it: int = 2
+    a: jax.Array, key: jax.Array, rank: int, it: int = 2, backend: str = "xla"
 ) -> Tuple[jax.Array, jax.Array]:
     """Peel ``rank`` rank-1 components. Returns (U (m,r), V (r,n)) such that
     a ≈ U @ V. Fully jittable (lax.scan over the peel)."""
     keys = jax.random.split(key, rank)
 
     def body(residual, k):
-        u, v = rank1_sketch(residual, k, it=it)
+        u, v = rank1_sketch(residual, k, it=it, backend=backend)
         residual = residual - jnp.outer(u, v).astype(residual.dtype)
         return residual, (u, v)
 
@@ -76,37 +128,117 @@ def sketch_lowrank(
     return jnp.transpose(us), vs  # (m, r), (r, n)
 
 
-@partial(jax.jit, static_argnames=("rank", "block", "it"))
-def sketch_lowrank_block(
-    a: jax.Array, key: jax.Array, rank: int, block: int = 8, it: int = 2
-) -> Tuple[jax.Array, jax.Array]:
-    """Beyond-paper: block power iteration (randomized subspace iteration)
-    peeling ``block`` directions per pass. GEMM-shaped for the MXU; QR keeps
-    the block orthonormal. Produces (U (m,r), V (r,n)); rank must be a
-    multiple of block."""
-    if rank % block:
-        raise ValueError(f"rank={rank} must be a multiple of block={block}")
-    n_steps = rank // block
-    keys = jax.random.split(key, n_steps)
-
-    def body(residual, k):
-        r32 = residual.astype(jnp.float32)
-        s = jax.random.normal(k, (residual.shape[1], block), jnp.float32)
+def _block_step(residual, k, block: int, it: int, mode: str):
+    """One block power-iteration peel: returns (u (m, block), v (block, n))
+    spanning the dominant ``block``-dim subspace of the residual."""
+    r32 = residual.astype(jnp.float32)
+    s = jax.random.normal(k, (residual.shape[1], block), jnp.float32)
+    if mode == "xla":
         p = r32 @ s
         for _ in range(it):
             p, _ = jnp.linalg.qr(p)  # stabilize between power iterations
             p = r32 @ (r32.T @ p)
         q, _ = jnp.linalg.qr(p)  # (m, block) orthonormal basis
         b = q.T @ r32  # (block, n)
-        u = q.astype(residual.dtype)
-        v = b.astype(residual.dtype)
+    else:
+        from ..kernels.r1_sketch import sketch_gemv, sketch_gemv_t
+        interp = mode == "pallas_interpret"
+        p = sketch_gemv(r32, s, interpret=interp)
+        for _ in range(it):
+            p, _ = jnp.linalg.qr(p)  # skinny QR stays in XLA (cheap)
+            p = sketch_gemv(r32, sketch_gemv_t(r32, p, interpret=interp),
+                            interpret=interp)
+        q, _ = jnp.linalg.qr(p)
+        b = sketch_gemv_t(r32, q, interpret=interp).T
+    return q.astype(residual.dtype), b.astype(residual.dtype)
+
+
+@partial(jax.jit, static_argnames=("rank", "block", "it", "backend"))
+def sketch_lowrank_block(
+    a: jax.Array, key: jax.Array, rank: int, block: int = 8, it: int = 2,
+    backend: str = "xla",
+) -> Tuple[jax.Array, jax.Array]:
+    """Beyond-paper: block power iteration (randomized subspace iteration)
+    peeling ``block`` directions per pass. GEMM-shaped for the MXU; QR keeps
+    the block orthonormal. Produces (U (m,r), V (r,n)). A trailing partial
+    block handles rank % block != 0."""
+    block = min(block, rank) if rank else block
+    n_full, rem = divmod(rank, block)
+    keys = jax.random.split(key, n_full + 1)
+    mode = resolve_backend(backend, a.shape)
+
+    def body(residual, k):
+        u, v = _block_step(residual, k, block, it, mode)
         residual = residual - (u @ v).astype(residual.dtype)
         return residual, (u, v)
 
-    _, (us, vs) = jax.lax.scan(body, a, keys)
-    u = jnp.transpose(us, (1, 0, 2)).reshape(a.shape[0], rank)
-    v = vs.reshape(rank, a.shape[1])
+    resid, (us, vs) = jax.lax.scan(body, a, keys[:n_full])
+    u = jnp.transpose(us, (1, 0, 2)).reshape(a.shape[0], n_full * block)
+    v = vs.reshape(n_full * block, a.shape[1])
+    if rem:
+        # Partial blocks narrower than the kernel lane width run via XLA.
+        u_r, v_r = _block_step(resid, keys[n_full], rem, it, "xla")
+        u = jnp.concatenate([u, u_r], axis=1)
+        v = jnp.concatenate([v, v_r], axis=0)
     return u, v
+
+
+@partial(jax.jit, static_argnames=("max_rank", "block", "it", "backend"))
+def sketch_lowrank_block_masked(
+    a: jax.Array, key: jax.Array, rank: jax.Array, max_rank: int,
+    block: int = 8, it: int = 2, backend: str = "xla",
+) -> Tuple[jax.Array, jax.Array]:
+    """Blocked sketch into fixed (m, max_rank)/(max_rank, n) buffers with a
+    *traced* effective ``rank``: U columns / V rows with index >= rank are
+    zero, and the residual only has the first ``rank`` components removed.
+
+    This makes the whole sketch shape-uniform across layers whose R1-FLR
+    ranks differ, so the batched BLC can ``vmap`` it over a layer stack.
+    """
+    m, n = a.shape
+    if max_rank <= 0:
+        return jnp.zeros((m, 0), a.dtype), jnp.zeros((0, n), a.dtype)
+    block = min(block, max_rank)
+    n_steps = -(-max_rank // block)  # ceil
+    keys = jax.random.split(key, n_steps)
+    mode = resolve_backend(backend, a.shape)
+    rank = jnp.asarray(rank, jnp.int32)
+
+    u_buf = jnp.zeros((m, n_steps * block), a.dtype)
+    v_buf = jnp.zeros((n_steps * block, n), a.dtype)
+
+    def cond(state):
+        # Stop at this layer's own rank — a while_loop (not a scan) so a
+        # layer whose R1-FLR rank is far below max_rank does not pay for
+        # max_rank worth of block sketches. Under vmap the loop runs until
+        # the deepest-rank layer of the stack is done; finished layers are
+        # masked no-ops.
+        _, j, _, _ = state
+        return j * block < rank
+
+    def body(state):
+        residual, j, u_buf, v_buf = state
+        u, v = _block_step(residual, keys[j], block, it, mode)
+        # Rotate the block onto its principal axes (small SVD of the
+        # (block, n) factor; u @ v is unchanged) so that masking a partial
+        # block keeps the *dominant* directions — raw QR columns are not
+        # energy-ordered and truncating them drops arbitrary directions.
+        ub, sv, vt = jnp.linalg.svd(v.astype(jnp.float32),
+                                    full_matrices=False)
+        u = (u.astype(jnp.float32) @ ub).astype(u.dtype)
+        v = (sv[:, None] * vt).astype(v.dtype)
+        col = j * block + jnp.arange(block)
+        keep = (col < rank).astype(u.dtype)
+        u = u * keep[None, :]
+        v = v * keep[:, None]
+        u_buf = jax.lax.dynamic_update_slice(u_buf, u, (0, j * block))
+        v_buf = jax.lax.dynamic_update_slice(v_buf, v, (j * block, 0))
+        residual = residual - (u @ v).astype(residual.dtype)
+        return (residual, j + 1, u_buf, v_buf)
+
+    _, _, u_buf, v_buf = jax.lax.while_loop(
+        cond, body, (a, jnp.int32(0), u_buf, v_buf))
+    return u_buf[:, :max_rank], v_buf[:max_rank, :]
 
 
 def sketch_apply(u: jax.Array, v: jax.Array, x: jax.Array) -> jax.Array:

@@ -30,6 +30,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# JAX renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
 
 def _unpack_block(codes_u8, bits: int, bk: int):
     """(bm, bk*bits/8) uint8 -> (bm, bk) int32 (unsigned code domain)."""
@@ -144,7 +148,7 @@ def quant_matmul_fused(
             pltpu.VMEM((bt, bm), jnp.float32),   # acc
             pltpu.VMEM((bt, rank_pad), jnp.float32),  # t
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -41,6 +41,15 @@ from .specs import decode_specs, prefill_specs, train_batch_specs
 SDS = jax.ShapeDtypeStruct
 
 
+def _mesh_context(mesh):
+    """Activate ``mesh`` as the ambient mesh, across jax API generations:
+    jax.set_mesh (new) → jax.sharding.use_mesh → Mesh-as-context-manager
+    (0.4.x: ``with mesh:`` sets the thread-local physical mesh)."""
+    setter = getattr(jax, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
 def _state_shardings(model, mesh, state_shapes):
     p_sh = sharding.param_shardings(model.cfg, state_shapes.params, mesh)
     rep = sharding.replicated(mesh)
@@ -92,7 +101,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
     key = jax.random.PRNGKey(0)
     tp_serving = "tp_serving" in opts
 
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         if shape.kind == "train":
             state_shapes = train_state_shapes(model, key)
             st_sh = _state_shardings(model, mesh, state_shapes)

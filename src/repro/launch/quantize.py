@@ -41,6 +41,16 @@ def main(argv=None):
                     help="0 = paper defaults (1 at 3/4-bit, 20 at 2-bit)")
     ap.add_argument("--calib-segments", type=int, default=32)
     ap.add_argument("--no-scaling", action="store_true")
+    ap.add_argument("--engine", choices=("batched", "sequential"),
+                    default="batched",
+                    help="batched = one jitted program per stacked tensor "
+                         "(default); sequential = per-layer reference "
+                         "oracle (same algorithm, per-peel host syncs)")
+    ap.add_argument("--backend", choices=("xla", "pallas", "auto"),
+                    default="xla",
+                    help="sketch backend (default xla; the Pallas kernels "
+                         "are interpret-verified on CPU but not yet "
+                         "validated on real TPU — opt in with auto/pallas)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -66,11 +76,11 @@ def main(argv=None):
     qcfg = FLRQConfig(
         bits=args.bits, x=args.x_budget, max_rank=args.max_rank,
         blc_epochs=args.blc_epochs or (1 if args.bits > 2 else 20),
-        use_scaling=not args.no_scaling,
+        use_scaling=not args.no_scaling, backend=args.backend,
     )
     t0 = time.time()
     qparams, stats = quantize_model_stacked(
-        params, acts, qcfg,
+        params, acts, qcfg, engine=args.engine,
         progress=lambda name, st: print(
             f"  {name}: rank={st.rank} err {st.err_before:.4f}->"
             f"{st.err_after:.4f} ({st.seconds:.1f}s)"))

@@ -54,7 +54,23 @@ class QuantizedLinear:
 
     def extra_avg_bits(self) -> float:
         """Average extra bits per weight from the low-rank factors."""
-        return 16.0 * self.rank * (self.m + self.n) / (self.m * self.n)
+        return extra_avg_bits(self.rank, self.m, self.n)
+
+
+def extra_avg_bits(rank: int, m: int, n: int, d_fp: int = 16) -> float:
+    """Average extra bits per weight from rank-``rank`` factors stored at
+    ``d_fp`` bits (paper Eq. 9 storage accounting — single definition)."""
+    return float(d_fp) * rank * (m + n) / (m * n)
+
+
+def pack_codes(w_q_codes: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Integer codes → packed uint8. THE code-domain convention: asymmetric
+    codes are already unsigned; symmetric codes are signed and shifted by
+    2^(bits-1) into the unsigned packing domain. Every packer/unpacker
+    (from_parts, dequantize*, the batched stack engine) goes through the
+    offset defined here."""
+    offs = (1 << (spec.bits - 1)) if spec.symmetric else 0
+    return packing.pack(w_q_codes + offs, spec.bits)
 
 
 def from_parts(
@@ -69,8 +85,7 @@ def from_parts(
 ) -> QuantizedLinear:
     m, ng, g = w_q_codes.shape
     n = ng * g
-    offs = (1 << (spec.bits - 1)) if spec.symmetric else 0
-    packed = packing.pack(w_q_codes + offs, spec.bits)
+    packed = pack_codes(w_q_codes, spec)
     if act_scale_inv is None:
         act_scale_inv = jnp.ones((n,), store_dtype)
     return QuantizedLinear(

@@ -3,10 +3,25 @@
 Model stacks store layer weights stacked as (L, in, out) (MoE: (L, E, in,
 out)) so lax.scan slices them per layer. FLRQ selects a *different* rank per
 layer (the paper's point), but a scanned executable needs uniform shapes —
-the production answer is rank bucketing: quantize each layer independently,
-then zero-pad every layer's (U, V) to the per-tensor max rank and stack.
-Zero columns contribute nothing numerically; storage accounting keeps the
-true per-layer ranks.
+the production answer is rank bucketing: zero-pad every layer's (U, V) to
+the per-tensor max rank. Zero columns contribute nothing numerically;
+storage accounting keeps the true per-layer ranks.
+
+Two engines:
+
+``engine="batched"`` (default) — ``repro.core.flrq.quantize_stack``: all L
+layers of a stacked tensor go through scaling → vmapped R1-FLR → batched
+BLC → batched packing as ONE jitted device program. No per-peel host
+syncs, no per-layer dispatch loop; rank padding falls out of the fixed
+FLR buffers.
+
+``engine="sequential"`` — the reference oracle: a python loop of
+``quantize_matrix`` per layer (each layer's R1-FLR syncs ``amax`` to the
+host after every peel), then pad-and-stack. Same PRNG key chain as the
+batched engine, so the two agree layer-for-layer up to sketch-order
+stochasticity. Note both engines share the blocked BLC re-sketch
+(``core.blc``, block=8 default); pass ``block=1`` there for the paper's
+literal rank-1 peel.
 
 ``quantize_model_stacked``  — real quantization (CPU-sized models, examples)
 ``abstract_quantized_params`` — ShapeDtypeStruct tree of the same layout at
@@ -22,7 +37,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.flrq import FLRQConfig, LayerStats, quantize_matrix
+from ..core.flrq import (
+    FLRQConfig,
+    LayerStats,
+    layer_key_chain,
+    quantize_matrix,
+    quantize_stack,
+)
 from .qtensor import QuantizedLinear
 from . import packing
 
@@ -30,6 +51,8 @@ from . import packing
 _QUANT_PAT = re.compile(
     r"wq$|wk$|wv$|wo$|w_gate$|w_up$|w_down$|w_in$|w_out$|"
     r"\bwr$|\bwg$|wk_cm$|wv_cm$|wr_cm$|w_dt$")
+
+ENGINES = ("batched", "sequential")
 
 
 def should_quantize(path: str, shape) -> bool:
@@ -71,8 +94,16 @@ def quantize_model_stacked(
     calib_acts: Optional[Dict[str, jax.Array]],
     cfg: FLRQConfig,
     progress=None,
+    engine: str = "batched",
 ):
-    """Returns (serving params tree with QuantizedLinear leaves, stats)."""
+    """Returns (serving params tree with QuantizedLinear leaves, stats).
+
+    ``engine="batched"`` quantizes each stacked tensor's L layers in one
+    jitted launch; ``engine="sequential"`` is the per-layer reference
+    oracle (kept for parity testing and as the paper-verbatim fallback).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine={engine!r} not in {ENGINES}")
     key = jax.random.PRNGKey(cfg.seed)
     stats: Dict[str, list] = {}
 
@@ -84,19 +115,28 @@ def quantize_model_stacked(
             return leaf
         lead = leaf.shape[:-2]
         flat = leaf.reshape((-1,) + leaf.shape[-2:])
-        qts, lstats = [], []
         xc = calib_acts.get(pstr) if calib_acts else None
-        for i in range(flat.shape[0]):
-            key, sub = jax.random.split(key)
+        if engine == "batched":
             # transpose: model (in, out) -> quantizer (out=m, in=n)
-            qt, st = quantize_matrix(flat[i].T, xc, cfg, sub,
-                                     name=f"{pstr}[{i}]")
-            qts.append(qt)
-            lstats.append(st)
+            w_stack = jnp.swapaxes(flat, -1, -2)
+            layer_keys, key = layer_key_chain(key, flat.shape[0])
+            stacked, lstats = quantize_stack(w_stack, xc, cfg, name=pstr,
+                                             keys=layer_keys)
             if progress:
-                progress(f"{pstr}[{i}]", st)
+                for st in lstats:
+                    progress(st.name, st)
+        else:
+            qts, lstats = [], []
+            for i in range(flat.shape[0]):
+                key, sub = jax.random.split(key)
+                qt, st = quantize_matrix(flat[i].T, xc, cfg, sub,
+                                         name=f"{pstr}[{i}]")
+                qts.append(qt)
+                lstats.append(st)
+                if progress:
+                    progress(f"{pstr}[{i}]", st)
+            stacked = _stack_qts(qts, cfg.store_dtype)
         stats[pstr] = lstats
-        stacked = _stack_qts(qts, cfg.store_dtype)
         if len(lead) == 2:  # MoE (L, E, ...) — restack leading dims
             def reshape_lead(x):
                 return x.reshape(lead + x.shape[1:])
