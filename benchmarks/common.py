@@ -36,6 +36,16 @@ def calib_activations(key, tokens, n, outlier_frac=0.01):
 
 def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw):
     """Median wall time in seconds; blocks on jax outputs."""
+    (_, med), out = time_fn_min(fn, *args, repeats=repeats, warmup=warmup,
+                                **kw)
+    return med, out
+
+
+def time_fn_min(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """((min, median) wall time in seconds, out). The min is the
+    noise-robust statistic — on shared machines the median of a few
+    repeats can swing ±50% with interference, while the fastest repeat
+    tracks the true cost; regression gates should compare mins."""
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
@@ -45,7 +55,7 @@ def time_fn(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)), out
+    return (float(np.min(ts)), float(np.median(ts))), out
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -1,0 +1,114 @@
+"""Benchmark-regression gate (CI): re-run the stacked-engine benchmark and
+fail if wall time regresses beyond a tolerance band against the recorded
+reference — ReFrame-style performance references, with the best of the
+last few matching BENCH_quant_time.json entries as the reference value.
+
+    PYTHONPATH=src python -m benchmarks.gate [--tol 0.25] [--metric batched_s]
+
+Reference matching: an entry is comparable only if its proxy workload
+descriptor, backend AND host family (``quant_time.host_family``: "ci" /
+"local" / $BENCH_HOST) match the current run — a benchmark whose workload
+changed this PR gets a fresh baseline instead of a bogus comparison, a GPU
+trajectory never gates a CPU run, and CI-runner wall times never gate
+against developer-machine baselines (CI persists its own trajectory via
+actions/cache; see .github/workflows/ci.yml). When no comparable reference
+exists, the gate records the new baseline and passes with a notice.
+
+Exit codes: 0 pass, 1 regression, 2 harness error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_reference(bench: str, proxy: dict, backend: str, host: str,
+                   metric: str, window: int = 5):
+    """Performance reference: the BEST (minimum-``metric``) of the last
+    ``window`` trajectory entries matching the workload descriptor, backend
+    and host family — or None.
+
+    Best-of-window instead of latest-entry closes the slow-creep ratchet
+    (every run appends to the trajectory, so with a latest-entry reference
+    a sequence of just-under-tolerance slowdowns would compound silently);
+    the bounded window still lets genuine machine-generation drift age
+    out. Host matching keeps CI-runner wall times from being gated against
+    developer-machine baselines (entries predating the host tag count as
+    "local")."""
+    path = os.path.join(_REPO_ROOT, f"BENCH_{bench}.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            history = json.load(f)
+    except json.JSONDecodeError:
+        return None
+    if not isinstance(history, list):
+        history = [history]
+    matches = [e for e in history
+               if e.get("proxy") == proxy and e.get("backend") == backend
+               and e.get("host", "local") == host and metric in e]
+    if not matches:
+        return None
+    return min(matches[-window:], key=lambda e: float(e[metric]))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed fractional slowdown vs reference "
+                         "(0.25 = fail beyond +25%%)")
+    ap.add_argument("--metric", default="batched_min_s",
+                    help="wall-time metric to gate on (default: min-of-"
+                         "repeats — the noise-robust statistic)")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    from . import quant_time
+
+    # Resolve the reference BEFORE running — the run appends a new entry
+    # to the trajectory, which must not gate itself.
+    proxy = dict(layers=quant_time.STACK_L,
+                 tensors={k: list(v) for k, v in
+                          quant_time.STACK_TENSORS.items()})
+    import jax
+    backend = jax.default_backend()
+    host = quant_time.host_family()
+    ref = load_reference("quant_time", proxy, backend, host, args.metric)
+
+    record = quant_time.run_stacked(repeats=args.repeats,
+                                    include_sequential=False)
+    if args.metric not in record:
+        print(f"[gate] FAIL: metric {args.metric!r} not in record {record}")
+        return 2
+    got = float(record[args.metric])
+
+    if ref is None:
+        print(f"[gate] no comparable reference for backend={backend} "
+              f"host={host} workload={proxy['tensors']} — recorded new "
+              f"baseline {args.metric}={got:.4f}s, passing")
+        return 0
+
+    ref_val = float(ref[args.metric])
+    limit = ref_val * (1.0 + args.tol)
+    if got > limit:
+        # One re-measure before failing: a single noisy window on a shared
+        # runner must not fail the build — a real regression reproduces.
+        print(f"[gate] over limit ({got:.4f}s > {limit:.4f}s) — "
+              f"re-measuring once to rule out interference")
+        record = quant_time.run_stacked(repeats=args.repeats,
+                                        include_sequential=False)
+        got = min(got, float(record[args.metric]))
+    verdict = "PASS" if got <= limit else "FAIL"
+    print(f"[gate] {verdict}: {args.metric}={got:.4f}s vs reference "
+          f"{ref_val:.4f}s (ts={ref.get('ts', '?')}, tolerance "
+          f"+{args.tol:.0%} -> limit {limit:.4f}s)")
+    return 0 if got <= limit else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,14 +18,27 @@ from repro.core.baselines import awq_like, lqer_like, rtn
 from repro.core.flrq import FLRQConfig, quantize_matrix
 from repro.core.gptq import gptq_quantize
 
-from .common import calib_activations, emit, emit_bench_json, llm_weight, time_fn
+from .common import (calib_activations, emit, emit_bench_json, llm_weight,
+                     time_fn, time_fn_min)
+
+def host_family() -> str:
+    """Performance-reference grouping key: wall times are only comparable
+    within the same class of machine, so trajectory entries are tagged and
+    the regression gate never compares a CI runner against a developer
+    laptop. Override with BENCH_HOST for named fleets."""
+    import os
+    return os.environ.get("BENCH_HOST") or (
+        "ci" if os.environ.get("CI") else "local")
+
 
 M, N = 1024, 2048
 
-# stacked proxy model: L transformer-ish layers, three stacked weight
-# families at CPU-feasible sizes (model layout: (L, in, out))
+# stacked proxy model: L transformer-ish layers, five stacked weight
+# families at CPU-feasible sizes (model layout: (L, in, out)). wq/wk/wv
+# share the quantizer shape (256, 256) — the same-shape fusion group.
 STACK_L = 8
-STACK_TENSORS = {"wq": (256, 256), "w_up": (256, 512), "w_down": (512, 256)}
+STACK_TENSORS = {"wq": (256, 256), "wk": (256, 256), "wv": (256, 256),
+                 "w_up": (256, 512), "w_down": (512, 256)}
 
 
 def run():
@@ -58,45 +71,68 @@ def run():
     run_stacked()
 
 
-def run_stacked():
-    """Whole-model stacked quantization: batched layer-parallel engine vs
-    the sequential per-layer reference, through the real driver
-    (``quantize_model_stacked``) on a proxy params tree of three stacked
-    weight families × STACK_L layers."""
+def run_stacked(repeats: int = 3, include_sequential: bool = True):
+    """Whole-model stacked quantization: batched layer-parallel engine
+    (fused and unfused) vs the sequential per-layer reference, through the
+    real driver (``quantize_model_stacked``) on a proxy params tree of five
+    stacked weight families × STACK_L layers. Returns the record appended
+    to the BENCH_quant_time.json trajectory (the CI regression gate's
+    performance reference)."""
     from repro.quant.stacked import quantize_model_stacked
 
     params = {"layers": {}}
     calib = {}
+    # One calibration batch per input width — mirrors
+    # data.pipeline.collect_layer_activations, which hands every matrix fed
+    # by the same stream the same activation array (so the wq/wk/wv fusion
+    # group shares its batch, like a real transformer block).
+    calib_by_width = {}
     for t_i, (name, (d_in, d_out)) in enumerate(STACK_TENSORS.items()):
         w = jnp.stack([
             llm_weight(jax.random.PRNGKey(100 * t_i + i), d_out, d_in)
             for i in range(STACK_L)])
         params["layers"][name] = jnp.swapaxes(w, -1, -2)  # model (L, in, out)
-        calib[f"['layers']['{name}']"] = calib_activations(
-            jax.random.PRNGKey(1000 + t_i), 64, d_in)
+        if d_in not in calib_by_width:
+            calib_by_width[d_in] = calib_activations(
+                jax.random.PRNGKey(1000 + d_in), 64, d_in)
+        calib[f"['layers']['{name}']"] = calib_by_width[d_in]
     cfg = FLRQConfig(bits=4, max_rank=48, blc_epochs=1)
 
-    def run_engine(engine):
+    def run_engine(engine, fuse=True):
         def fn():
-            q, _ = quantize_model_stacked(params, calib, cfg, engine=engine)
+            q, _ = quantize_model_stacked(params, calib, cfg, engine=engine,
+                                          fuse_stacks=fuse)
             return jax.tree.leaves(q)
         return fn
 
-    t_b, _ = time_fn(run_engine("batched"), repeats=3)
-    t_s, _ = time_fn(run_engine("sequential"), repeats=3)
-    speedup = t_s / t_b
+    (t_b_min, t_b), _ = time_fn_min(run_engine("batched", fuse=True),
+                                    repeats=repeats)
+    (t_u_min, t_u), _ = time_fn_min(run_engine("batched", fuse=False),
+                                    repeats=repeats)
     shape_tag = f"{len(STACK_TENSORS)}tensors_L{STACK_L}"
-    emit("quant_time.stack.batched", t_b * 1e6,
-         f"{shape_tag} {speedup:.2f}x vs sequential")
-    emit("quant_time.stack.sequential", t_s * 1e6, shape_tag)
-    emit_bench_json("quant_time", dict(
+    record = dict(
         proxy=dict(layers=STACK_L,
                    tensors={k: list(v) for k, v in STACK_TENSORS.items()}),
         batched_s=round(t_b, 4),
-        sequential_s=round(t_s, 4),
-        speedup=round(speedup, 2),
+        batched_min_s=round(t_b_min, 4),
+        batched_unfused_s=round(t_u, 4),
+        batched_unfused_min_s=round(t_u_min, 4),
         backend=jax.default_backend(),
-    ))
+        host=host_family(),
+    )
+    if include_sequential:
+        t_s, _ = time_fn(run_engine("sequential"), repeats=repeats)
+        record.update(sequential_s=round(t_s, 4),
+                      speedup=round(t_s / t_b, 2))
+        emit("quant_time.stack.batched", t_b * 1e6,
+             f"{shape_tag} {t_s / t_b:.2f}x vs sequential")
+        emit("quant_time.stack.sequential", t_s * 1e6, shape_tag)
+    else:
+        emit("quant_time.stack.batched", t_b * 1e6, shape_tag)
+    emit("quant_time.stack.batched_unfused", t_u * 1e6,
+         f"{shape_tag} fusion {t_u / t_b:.2f}x")
+    emit_bench_json("quant_time", record)
+    return record
 
 
 if __name__ == "__main__":

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Self-contained lint gate (stdlib only — runs identically on a laptop
+and in CI; no pinned third-party linter to drift against).
+
+Checks every tracked .py file for:
+  * syntax errors (compile())
+  * tabs in indentation, trailing whitespace, CR/LF line endings
+  * lines over 120 characters
+  * leftover debugger hooks (breakpoint / pdb.set_trace calls)
+  * merge-conflict markers
+
+    python ci/lint.py [paths...]     # default: the whole repo
+
+Exit codes: 0 clean, 1 findings.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+MAX_LINE = 120
+DEBUGGER = re.compile(r"(?<!\w)(breakpoint\(\)|pdb\.set_trace\(\))")
+CONFLICT = re.compile(r"^(<{7} |={7}$|>{7} )")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".cache", "node_modules",
+             ".hypothesis"}
+
+
+def py_files(roots):
+    for root in roots:
+        if os.path.isfile(root):
+            yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+            for f in filenames:
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+def lint_file(path) -> list:
+    findings = []
+    with open(path, "rb") as f:
+        raw = f.read()
+    if b"\r" in raw:
+        findings.append((path, 0, "CR/LF line endings"))
+    text = raw.decode("utf-8", errors="replace")
+    try:
+        compile(text, path, "exec")
+    except SyntaxError as e:
+        findings.append((path, e.lineno or 0, f"syntax error: {e.msg}"))
+        return findings
+    for i, line in enumerate(text.splitlines(), 1):
+        indent = line[: len(line) - len(line.lstrip())]
+        if "\t" in indent:
+            findings.append((path, i, "tab in indentation"))
+        if line != line.rstrip():
+            findings.append((path, i, "trailing whitespace"))
+        if len(line) > MAX_LINE:
+            findings.append((path, i, f"line too long ({len(line)} > {MAX_LINE})"))
+        if DEBUGGER.search(line):
+            findings.append((path, i, "debugger hook left in"))
+        if CONFLICT.match(line):
+            findings.append((path, i, "merge-conflict marker"))
+    return findings
+
+
+def main(argv=None) -> int:
+    roots = (argv or sys.argv[1:]) or ["."]
+    findings = []
+    n = 0
+    for path in sorted(set(py_files(roots))):
+        n += 1
+        findings.extend(lint_file(path))
+    for path, line, msg in findings:
+        print(f"{path}:{line}: {msg}")
+    status = "clean" if not findings else f"{len(findings)} finding(s)"
+    print(f"[lint] {n} files checked: {status}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -144,8 +144,11 @@ def blc_batched(
 ) -> BLCResult:
     """BLC for a whole (L, m, n) layer stack in ONE jitted program.
 
-    ``x``: (n, b) calibration batch shared by every layer of the stack (the
-    stacked tensors of one weight family see the same activations).
+    ``x``: the calibration batch — (n, b) shared by every layer of the
+    stack (the stacked tensors of one weight family see the same
+    activations), or (L, n, b) *per-layer* objectives (what the same-shape
+    stack fusion produces when it concatenates weight families that see
+    different activations into one launch).
     ``keys``: (L, 2); ``ranks``: (L,) traced per-layer R1-FLR ranks;
     ``max_rank``: static buffer width >= max(ranks).
 
@@ -156,8 +159,9 @@ def blc_batched(
     x32 = x.astype(jnp.float32)
     grid = jnp.asarray(clip_grid, jnp.float32)
     ranks = jnp.asarray(ranks, jnp.int32)
+    per_lane_x = x32.ndim == 3
 
-    def one_layer(w_l, key_l, rank_l):
+    def one_layer(w_l, x_l, key_l, rank_l):
         ks = jax.random.split(key_l, epochs + 1)
 
         def sketch(r, k):
@@ -165,15 +169,15 @@ def blc_batched(
                 r, k, rank_l, max_rank, block=block, it=it, backend=backend)
 
         u0, v0 = sketch(w_l, ks[0])
-        wq0, clip0 = _best_clip_quant(w_l - u0 @ v0, x32, spec, grid)
-        err0 = recon_error(w_l, wq0 + u0 @ v0, x32)
+        wq0, clip0 = _best_clip_quant(w_l - u0 @ v0, x_l, spec, grid)
+        err0 = recon_error(w_l, wq0 + u0 @ v0, x_l)
 
         def epoch(carry, k):
             u, v, wq, clip, best = carry
             bu, bv, bwq, bclip, berr = best
             u, v = sketch(w_l - wq, k)
-            wq, clip = _best_clip_quant(w_l - u @ v, x32, spec, grid)
-            err = recon_error(w_l, wq + u @ v, x32)
+            wq, clip = _best_clip_quant(w_l - u @ v, x_l, spec, grid)
+            err = recon_error(w_l, wq + u @ v, x_l)
             better = err < berr
             best = (
                 jnp.where(better, u, bu),
@@ -190,4 +194,5 @@ def blc_batched(
         trace = jnp.concatenate([jnp.asarray([err0]), errs])
         return BLCResult(bu, bv, bwq, bclip, berr, trace)
 
-    return jax.vmap(one_layer, in_axes=(0, 0, 0))(w, keys, ranks)
+    return jax.vmap(one_layer, in_axes=(0, 0 if per_lane_x else None, 0, 0)
+                    )(w, x32, keys, ranks)

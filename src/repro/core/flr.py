@@ -87,7 +87,10 @@ def split_chain(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def flexible_rank_select(w: jax.Array, key: jax.Array, cfg: FLRConfig) -> FLRResult:
+def flexible_rank_select(
+    w: jax.Array, key: jax.Array, cfg: FLRConfig,
+    active: jax.Array | None = None,
+) -> FLRResult:
     """Fully-jitted R1-FLR. Buffers are sized ``cfg.max_rank``; the loop
     exits early via lax.while_loop so no wasted peels are *computed* (only
     allocated). The stopping decision never leaves the device.
@@ -95,11 +98,18 @@ def flexible_rank_select(w: jax.Array, key: jax.Array, cfg: FLRConfig) -> FLRRes
     The body is masked-idempotent once ``done`` is set, which makes the
     function safe to ``vmap``: batching turns the while_loop condition into
     "any layer still running", and finished layers ride along unchanged.
+
+    ``active``: optional traced bool — an inactive lane starts ``done`` and
+    returns rank 0 with zero factors without peeling at all. This is the
+    padding-lane mask of the mesh-sharded stack engine: a device whose
+    local slice is all padding skips the while_loop entirely.
     """
     m, n = w.shape
     max_r = min(cfg.max_rank, m, n)
     amax0 = jnp.max(jnp.abs(w)).astype(jnp.float32)
     keys, _ = split_chain(key, max_r)
+    inactive = (jnp.bool_(False) if active is None
+                else ~jnp.asarray(active, jnp.bool_))
 
     u_buf = jnp.zeros((m, max_r), w.dtype)
     v_buf = jnp.zeros((max_r, n), w.dtype)
@@ -131,7 +141,7 @@ def flexible_rank_select(w: jax.Array, key: jax.Array, cfg: FLRConfig) -> FLRRes
         return (i + 1, resid, u_buf, v_buf, trace, rank, done | stop)
 
     state = (jnp.int32(0), w, u_buf, v_buf, trace, jnp.int32(0),
-             jnp.bool_(False))
+             inactive)
     _, _, u_buf, v_buf, trace, rank, _ = jax.lax.while_loop(cond, body, state)
     q, k = _qk(amax0, trace[rank], rank.astype(jnp.float32), m, n, cfg)
     return FLRResult(u_buf, v_buf, rank, trace, q, k)
@@ -139,7 +149,8 @@ def flexible_rank_select(w: jax.Array, key: jax.Array, cfg: FLRConfig) -> FLRRes
 
 @partial(jax.jit, static_argnames=("cfg",))
 def flexible_rank_select_batched(
-    w: jax.Array, keys: jax.Array, cfg: FLRConfig
+    w: jax.Array, keys: jax.Array, cfg: FLRConfig,
+    lane_mask: jax.Array | None = None,
 ) -> FLRResult:
     """R1-FLR for a whole (L, m, n) layer stack in ONE XLA launch.
 
@@ -149,8 +160,17 @@ def flexible_rank_select_batched(
     that stopped earlier are masked no-ops, so per-layer results are
     identical to calling ``flexible_rank_select`` in a loop — without the
     L × rank kernel dispatches and with zero host syncs.
+
+    ``lane_mask``: optional (L,) bool — False lanes are padding (added by
+    the mesh-sharded engine to round L up to the shard count) and resolve
+    to rank 0 without any peel work.
     """
-    return jax.vmap(lambda wi, ki: flexible_rank_select(wi, ki, cfg))(w, keys)
+    if lane_mask is None:
+        return jax.vmap(
+            lambda wi, ki: flexible_rank_select(wi, ki, cfg))(w, keys)
+    return jax.vmap(
+        lambda wi, ki, ai: flexible_rank_select(wi, ki, cfg, active=ai)
+    )(w, keys, jnp.asarray(lane_mask, jnp.bool_))
 
 
 def flexible_rank_select_py(

@@ -209,11 +209,13 @@ def _quantize_matrix_once(
 # advances its cross-tensor chain with it, keeping both engines in sync.
 layer_key_chain = split_chain
 
-@partial(jax.jit, static_argnames=("cfg", "use_scaling", "has_calib"))
-def _quantize_stack_jit(
+
+def _quantize_stack_impl(
     w_stack: jax.Array,   # (L, m, n) f32, quantizer orientation (m=out)
-    xt: jax.Array,        # (tokens, n) calibration acts (tokens may be 0)
+    xt: jax.Array,        # (tokens, n) shared — or (L, tokens, n) per-lane —
+                          # calibration acts (tokens may be 0)
     keys: jax.Array,      # (L, 2) per-layer PRNG keys
+    lane_mask: jax.Array, # (L,) bool; False lanes are shard padding
     cfg: FLRQConfig,
     use_scaling: bool,
     has_calib: bool,
@@ -221,35 +223,63 @@ def _quantize_stack_jit(
     """The whole FLRQ pipeline for a layer stack as ONE device program:
     batched scaling → vmapped R1-FLR (device-side stopping) → batched BLC
     (rank-masked blocked re-sketch) or batched clip search → batched
-    qparams/codes/bit-packing. Returns a dict of L-leading arrays."""
+    qparams/codes/bit-packing. Returns a dict of L-leading arrays.
+
+    This is the per-device body of the mesh-sharded engine: every step is
+    local to the lanes it is given (the calibration batch is replicated),
+    so ``shard_map``-ing it over the leading dim quantizes each shard
+    independently with zero interconnect traffic until the final gather.
+
+    ``xt`` with a leading lane dim carries a *per-layer* calibration batch —
+    the same-shape stack fusion uses this to concatenate weight families
+    that see different activations (Q/K/V vs O) into one launch.
+    """
     L, m, n = w_stack.shape
     spec = cfg.spec()
     w32 = w_stack.astype(jnp.float32)
     xt = xt.astype(jnp.float32)
+    per_lane = xt.ndim == 3
 
-    # --- (1) activation scaling (shared: the stack sees one calib batch) ---
+    # --- (1) activation scaling --------------------------------------------
     if use_scaling and has_calib:
-        alpha = awq_scale(channel_mean_abs(xt))
+        if per_lane:
+            alpha = jax.vmap(
+                lambda x_l: awq_scale(channel_mean_abs(x_l)))(xt)  # (L, n)
+        else:
+            alpha = awq_scale(channel_mean_abs(xt))                # (n,)
     else:
-        alpha = jnp.ones((n,), jnp.float32)
-    ws = w32 * alpha[None, None, :]
+        alpha = jnp.ones(((L, n) if per_lane else (n,)), jnp.float32)
+    ws = w32 * (alpha[:, None, :] if per_lane else alpha[None, None, :])
     if has_calib:
-        xs_obj = (xt / alpha[None, :]).T      # (n, tokens), scaled space
-        x_err = xt.T                          # unscaled-space error objective
+        # scaled-space objective (n, tokens) — per-lane: (L, n, tokens)
+        if per_lane:
+            xs_obj = jnp.swapaxes(xt / alpha[:, None, :], -1, -2)
+            x_err = jnp.swapaxes(xt, -1, -2)
+        else:
+            xs_obj = (xt / alpha[None, :]).T
+            x_err = xt.T                      # unscaled-space error objective
     else:
         xs_obj = jnp.eye(n, dtype=jnp.float32)  # Frobenius objective
         x_err = None
+        per_lane = False
+    x_axis = 0 if per_lane else None
 
     # --- baseline error (plain RTN per layer, for the stats report) --------
-    err_before = jax.vmap(
-        lambda wl: recon_error(wl, pseudo_quantize(wl, spec), x_err))(w32)
+    if x_err is None:
+        err_before = jax.vmap(
+            lambda wl: recon_error(wl, pseudo_quantize(wl, spec), None))(w32)
+    else:
+        err_before = jax.vmap(
+            lambda wl, xl: recon_error(wl, pseudo_quantize(wl, spec), xl),
+            in_axes=(0, x_axis))(w32, x_err)
 
     # --- per-layer keys: same split discipline as quantize_matrix ----------
     k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)  # (L, 3, 2)
     k_flr, k_blc = k3[:, 1], k3[:, 2]
 
     # --- (2) flexible rank selection: one launch for the whole stack -------
-    flr = flexible_rank_select_batched(ws, k_flr, cfg.flr())
+    flr = flexible_rank_select_batched(ws, k_flr, cfg.flr(),
+                                       lane_mask=lane_mask)
     ranks = flr.rank                           # (L,) int32
     max_r = flr.u.shape[-1]                    # static buffer width
 
@@ -265,13 +295,14 @@ def _quantize_stack_jit(
         u, v = flr.u.astype(jnp.float32), flr.v.astype(jnp.float32)
         resid = ws - u @ v
 
-        def one(resid_l):
-            c = search_clip_ratio(resid_l, xs_obj, spec)
+        def one(resid_l, xs_l):
+            c = search_clip_ratio(resid_l, xs_l, spec)
             return c, pseudo_quantize(resid_l, spec, c)
 
-        clip, wq = jax.vmap(one)(resid)
+        clip, wq = jax.vmap(one, in_axes=(0, x_axis))(resid, xs_obj)
         err_after = jax.vmap(
-            lambda wl, wh: recon_error(wl, wh, xs_obj))(ws, wq + u @ v)
+            lambda wl, wh, xl: recon_error(wl, wh, xl),
+            in_axes=(0, 0, x_axis))(ws, wq + u @ v, xs_obj)
 
     # --- pack ---------------------------------------------------------------
     resid_final = ws - u @ v
@@ -288,6 +319,75 @@ def _quantize_stack_jit(
     )
 
 
+_quantize_stack_jit = partial(jax.jit, static_argnames=(
+    "cfg", "use_scaling", "has_calib"))(_quantize_stack_impl)
+
+
+@partial(jax.jit, static_argnames=("cfg", "use_scaling", "has_calib",
+                                   "mesh", "axis"))
+def _quantize_stack_sharded(
+    w_stack: jax.Array,
+    xt: jax.Array,
+    keys: jax.Array,
+    lane_mask: jax.Array,
+    cfg: FLRQConfig,
+    use_scaling: bool,
+    has_calib: bool,
+    mesh,
+    axis: str,
+):
+    """Mesh-sharded batched engine: ``shard_map`` of the per-device pipeline
+    over ``mesh`` axis ``axis``. Each device quantizes its slice of the
+    (L, m, n) stack — rank selection, masked block sketch, clip search and
+    bit-packing all stay device-local; the calibration batch is replicated
+    (per-lane calibration shards with its lanes) and only the final
+    QTensor gather crosses the interconnect.
+
+    ``check_rep=False``: the body contains lax.while_loop (R1-FLR's
+    device-side stopping rule and the rank-masked block sketch), which has
+    no shard_map replication rule — every input is either explicitly
+    sharded on the leading dim or replicated, so the check is vacuous here.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    xt_spec = P(axis) if xt.ndim == 3 else P()
+    body = partial(_quantize_stack_impl, cfg=cfg, use_scaling=use_scaling,
+                   has_calib=has_calib)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), xt_spec, P(axis), P(axis)),
+        out_specs=P(axis),
+        check_rep=False,
+    )
+    return fn(w_stack, xt, keys, lane_mask)
+
+
+def shard_count(mesh, axis: Optional[str] = None) -> Tuple[int, str]:
+    """(n_shards, axis) for sharding a stack's leading dim over ``mesh``.
+    ``axis=None`` picks the mesh's only axis (ambiguous meshes must name
+    one)."""
+    if axis is None:
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"mesh has axes {mesh.axis_names}; pass axis= explicitly")
+        axis = mesh.axis_names[0]
+    if axis not in mesh.axis_names:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis], axis
+
+
+def _pad_lanes(arr: jax.Array, l_pad: int) -> jax.Array:
+    """Pad the leading (lane) dim of ``arr`` up to ``l_pad`` by repeating
+    the last lane — benign numerics for padding lanes whose results are
+    masked off and sliced away."""
+    L = arr.shape[0]
+    if L == l_pad:
+        return arr
+    reps = jnp.broadcast_to(arr[-1:], (l_pad - L,) + arr.shape[1:])
+    return jnp.concatenate([arr, reps], axis=0)
+
+
 def quantize_stack(
     w_stack: jax.Array,
     x_calib: Optional[jax.Array],
@@ -296,10 +396,13 @@ def quantize_stack(
     name: str = "w",
     *,
     keys: Optional[jax.Array] = None,
+    mesh=None,
+    axis: Optional[str] = None,
 ) -> Tuple[qtensor.QuantizedLinear, List[LayerStats]]:
     """Quantize an (L, m, n) stack of matrices in one (or, when the
     robustness gate trips, two) jitted launches. ``x_calib``: (tokens, n)
-    calibration activations shared by the stack, or None.
+    calibration activations shared by the stack, (L, tokens, n) per-layer
+    activations (stack-fusion launches), or None.
 
     Mirrors ``quantize_matrix`` semantics per layer — including the
     robustness gate: layers whose scaled pipeline lands above their own RTN
@@ -310,6 +413,11 @@ def quantize_stack(
     precomputed per-layer ``keys`` (L, 2) — the latter lets a driver thread
     one chain across many stacks without re-deriving it.
 
+    ``mesh``/``axis``: shard the stack's leading dim over that mesh axis
+    (``shard_map``); each device quantizes its own slice, bit-identically
+    to the single-device program (L is padded up to the shard count with
+    masked lanes when it does not divide).
+
     Returns a stacked QuantizedLinear (U/V padded to the realized max rank;
     zero columns are numerically inert) and per-layer LayerStats.
     """
@@ -317,20 +425,41 @@ def quantize_stack(
     L, m, n = w_stack.shape
     if x_calib is None:
         x_calib = jnp.zeros((0, n), jnp.float32)
-    has_calib = x_calib.shape[0] > 0
+    has_calib = x_calib.shape[-2] > 0
 
     if (key is None) == (keys is None):
         raise ValueError("pass exactly one of `key` or `keys`")
     if keys is None:
         keys, _ = layer_key_chain(key, L)
 
-    out = _quantize_stack_jit(
-        w_stack, x_calib, keys, cfg, cfg.use_scaling and has_calib, has_calib)
+    per_lane_x = x_calib.ndim == 3
+
+    if mesh is not None:
+        n_shards, axis = shard_count(mesh, axis)
+        l_pad = -(-L // n_shards) * n_shards
+        w_in = _pad_lanes(w_stack, l_pad)
+        keys_in = _pad_lanes(keys, l_pad)
+        x_in = _pad_lanes(x_calib, l_pad) if per_lane_x else x_calib
+        lane_mask = jnp.arange(l_pad) < L
+
+        def launch(use_scaling):
+            out = _quantize_stack_sharded(
+                w_in, x_in, keys_in, lane_mask, cfg, use_scaling, has_calib,
+                mesh, axis)
+            return {k: v[:L] for k, v in out.items()}
+    else:
+        lane_mask = jnp.ones((L,), jnp.bool_)
+
+        def launch(use_scaling):
+            return _quantize_stack_jit(
+                w_stack, x_calib, keys, lane_mask, cfg, use_scaling,
+                has_calib)
+
+    out = launch(cfg.use_scaling and has_calib)
     if cfg.use_scaling and has_calib:
         gate = np.asarray(out["err_after"]) > np.asarray(out["err_before"])
         if gate.any():
-            out2 = _quantize_stack_jit(
-                w_stack, x_calib, keys, cfg, False, has_calib)
+            out2 = launch(False)
             redo = gate & (np.asarray(out2["err_after"])
                            < np.asarray(out["err_after"]))
             if redo.any():

@@ -248,6 +248,33 @@ def param_shardings(cfg: ModelConfig, params_shapes, mesh,
 
 
 # ---------------------------------------------------------------------------
+# Offline-quantizer stack placement
+# ---------------------------------------------------------------------------
+
+def stack_lane_shardings(mesh, axis: str, params):
+    """NamedSharding tree for a *stacked* params tree on the quantization
+    mesh: every (L, ...) tensor with ndim >= 3 shards its leading (layer)
+    dim over ``axis`` when it divides; everything else replicates.
+
+    This is the input placement for the mesh-sharded batched engine — at
+    production scale the unquantized weight stacks are the dominant
+    footprint, and pre-placing them lane-sharded means no single device
+    ever has to hold a whole model tensor before quantization starts.
+    """
+    size = _axis_size(mesh, axis)
+
+    def visit(leaf):
+        nd = len(leaf.shape)
+        if nd >= 3 and leaf.shape[0] % size == 0:
+            spec = P(axis, *([None] * (nd - 1)))
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(visit, params)
+
+
+# ---------------------------------------------------------------------------
 # Batch / cache rules
 # ---------------------------------------------------------------------------
 

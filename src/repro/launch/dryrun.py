@@ -35,19 +35,14 @@ from ..train.optimizer import AdamWConfig
 from ..core.flrq import FLRQConfig
 from ..quant.stacked import abstract_quantized_params
 from ..train.step import TrainState, make_train_step, train_state_shapes
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, make_quant_mesh, mesh_context
 from .specs import decode_specs, prefill_specs, train_batch_specs
 
 SDS = jax.ShapeDtypeStruct
 
-
-def _mesh_context(mesh):
-    """Activate ``mesh`` as the ambient mesh, across jax API generations:
-    jax.set_mesh (new) → jax.sharding.use_mesh → Mesh-as-context-manager
-    (0.4.x: ``with mesh:`` sets the thread-local physical mesh)."""
-    setter = getattr(jax, "set_mesh", None) or getattr(
-        jax.sharding, "use_mesh", None)
-    return setter(mesh) if setter is not None else mesh
+# Back-compat alias: the mesh-activation shim now lives in launch.mesh so
+# the quantizer CLI shares it.
+_mesh_context = mesh_context
 
 
 def _state_shardings(model, mesh, state_shapes):
@@ -228,6 +223,81 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return row
 
 
+def run_quant_engine_cell(shards: int = 8, layers: int = 16, m: int = 512,
+                          n: int = 512, bits: int = 4,
+                          verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile the mesh-sharded stack quantizer on ``shards`` forced
+    host devices and report its memory analysis — the offline-quantizer
+    analogue of the serving/training cells: any sharding mismatch in the
+    shard_map program is a bug surfaced here before it costs pod time."""
+    import jax.numpy as jnp
+    from ..core.flrq import _quantize_stack_sharded
+
+    t0 = time.time()
+    row: Dict[str, Any] = dict(kind="quant_engine", shards=shards,
+                               layers=layers, shape=[m, n], bits=bits)
+    try:
+        mesh = make_quant_mesh(shards)
+        cfg = FLRQConfig(bits=bits, max_rank=32, blc_epochs=1)
+        l_pad = -(-layers // shards) * shards
+        w = SDS((l_pad, m, n), jnp.float32)
+        xt = SDS((64, n), jnp.float32)
+        keys = SDS((l_pad, 2), jnp.uint32)
+        mask = SDS((l_pad,), jnp.bool_)
+        lowered = _quantize_stack_sharded.lower(
+            w, xt, keys, mask, cfg, True, True, mesh, "stack")
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        row.update(
+            status="OK", seconds=round(time.time() - t0, 1),
+            memory=dict(
+                argument=getattr(mem, "argument_size_in_bytes", 0),
+                output=getattr(mem, "output_size_in_bytes", 0),
+                temp=getattr(mem, "temp_size_in_bytes", 0),
+            ))
+        if verbose:
+            mm = row["memory"]
+            print(f"[dryrun] quant_engine ({shards} shards × "
+                  f"{l_pad // shards} layers of {m}x{n}): OK "
+                  f"{row['seconds']}s  args={mm['argument']/1e6:.1f}MB "
+                  f"temp={mm['temp']/1e6:.1f}MB")
+    except Exception as e:
+        row.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:],
+                   seconds=round(time.time() - t0, 1))
+        if verbose:
+            print(f"[dryrun] quant_engine: FAIL — {e}")
+    return row
+
+
+def _row_key(r: Dict[str, Any]):
+    """Merge key for a results row — tolerant of both cell rows and
+    quant-engine rows (missing fields → None; list-valued shape → tuple)
+    so the two kinds can share one --out file."""
+    shape = r.get("shape")
+    if isinstance(shape, list):
+        shape = tuple(shape)
+    return (r.get("kind", "cell"), r.get("arch"), shape,
+            r.get("multi_pod"), r.get("quantized", False),
+            tuple(r.get("opts", [])), r.get("shards"), r.get("layers"))
+
+
+def _merge_out(out_path: str, rows) -> None:
+    """Merge rows into the JSON results file keyed by _row_key (re-runs of
+    the same cell replace; everything else — including rows of the other
+    kind — is preserved)."""
+    import pathlib
+    p = pathlib.Path(out_path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    existing = []
+    if p.exists():
+        existing = json.loads(p.read_text())
+    merged = {_row_key(r): r for r in existing}
+    merged.update({_row_key(r): r for r in rows})
+    p.write_text(json.dumps(list(merged.values()), indent=1))
+    print(f"[dryrun] wrote {p}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -246,8 +316,21 @@ def main(argv=None):
                              "grouped_moe", "expert_parallel", "remat_dots",
                              "kv_int8"],
                     help="beyond-paper perf levers (repeatable)")
+    ap.add_argument("--quant-engine", action="store_true",
+                    help="lower the mesh-sharded offline quantizer instead "
+                         "of model cells")
+    ap.add_argument("--quant-shards", type=int, default=8)
+    ap.add_argument("--quant-layers", type=int, default=16)
+    ap.add_argument("--quant-dim", type=int, default=512)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.quant_engine:
+        row = run_quant_engine_cell(args.quant_shards, args.quant_layers,
+                                    args.quant_dim, args.quant_dim)
+        if args.out:
+            _merge_out(args.out, [row])
+        return 1 if row["status"] != "OK" else 0
 
     pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
     cells = []
@@ -275,19 +358,7 @@ def main(argv=None):
     n_skip = sum(r["status"] == "SKIP" for r in rows)
     print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
     if args.out:
-        import pathlib
-        p = pathlib.Path(args.out)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        existing = []
-        if p.exists():
-            existing = json.loads(p.read_text())
-        key = lambda r: (r["arch"], r["shape"], r["multi_pod"],
-                         r.get("quantized", False),
-                         tuple(r.get("opts", [])))
-        merged = {key(r): r for r in existing}
-        merged.update({key(r): r for r in rows})
-        p.write_text(json.dumps(list(merged.values()), indent=1))
-        print(f"[dryrun] wrote {p}")
+        _merge_out(args.out, rows)
     return 1 if n_fail else 0
 
 

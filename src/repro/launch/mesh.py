@@ -30,6 +30,27 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def make_quant_mesh(n_shards: int = 0):
+    """1-D ("stack",) mesh for the offline quantizer: the batched engine
+    shard_maps the stacked-layer dim over it. ``n_shards=0`` takes every
+    local device; quantization is embarrassingly parallel over layers, so
+    there is no reason to leave chips idle."""
+    avail = len(jax.devices())
+    n = n_shards or avail
+    if n > avail:
+        raise ValueError(f"asked for {n} quant shards, only {avail} devices")
+    return jax.make_mesh((n,), ("stack",))
+
+
+def mesh_context(mesh):
+    """Activate ``mesh`` as the ambient mesh, across jax API generations:
+    jax.set_mesh (new) → jax.sharding.use_mesh → Mesh-as-context-manager
+    (0.4.x: ``with mesh:`` sets the thread-local physical mesh)."""
+    setter = getattr(jax, "set_mesh", None) or getattr(
+        jax.sharding, "use_mesh", None)
+    return setter(mesh) if setter is not None else mesh
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

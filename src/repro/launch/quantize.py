@@ -8,10 +8,19 @@ Loads the latest training checkpoint, runs the paper's pipeline (scaling →
 R1-FLR → BLC → pack) per stacked matrix with calibration activations from
 the synthetic corpus, writes a serving checkpoint of QuantizedLinear
 leaves, and prints the per-layer rank/error report (paper Tables 3/9).
+
+Scale-out: ``--mesh-shards N`` shard_maps every stacked tensor's layer dim
+over an N-device ("stack",) mesh (bit-identical results, pod-speed wall
+time); same-shape stacks fuse into single launches unless ``--no-fuse``.
+The jitted while_loop programs compile slowly cold (~19s for the vmapped
+engine on the tiny proxy) — a persistent compilation cache is on by
+default at ``~/.cache/repro-flrq-xla`` (``--compile-cache DIR`` /
+``--no-compile-cache``), cutting repeat runs to cache-hit latency.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -25,6 +34,31 @@ from ..data.pipeline import DataConfig, SyntheticCorpus, collect_layer_activatio
 from ..models import LM
 from ..quant.stacked import quantize_model_stacked
 from ..train.step import init_train_state
+from .mesh import make_quant_mesh
+
+DEFAULT_COMPILE_CACHE = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro-flrq-xla")
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point jax's persistent compilation cache at ``cache_dir``. Returns
+    False (instead of raising) on jax builds without the config knobs —
+    the quantizer must run, just colder."""
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # The offline quantizer's big programs are exactly the ones worth
+        # caching; don't let the min-compile-time heuristic skip them.
+        for knob, val in (("jax_persistent_cache_min_compile_time_secs", 0.5),
+                          ("jax_persistent_cache_min_entry_size_bytes", 0)):
+            try:
+                jax.config.update(knob, val)
+            except AttributeError:
+                pass
+        return True
+    except (AttributeError, OSError) as e:
+        print(f"compilation cache unavailable ({e}); continuing without")
+        return False
 
 
 def main(argv=None):
@@ -51,7 +85,34 @@ def main(argv=None):
                     help="sketch backend (default xla; the Pallas kernels "
                          "are interpret-verified on CPU but not yet "
                          "validated on real TPU — opt in with auto/pallas)")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard the stacked-layer dim over this many devices "
+                         "(0 = single-device; results are bit-identical)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable same-shape stack fusion (one launch per "
+                         "stacked tensor instead of per shape group)")
+    ap.add_argument("--compile-cache", default=DEFAULT_COMPILE_CACHE,
+                    help="persistent XLA compilation cache dir "
+                         f"(default {DEFAULT_COMPILE_CACHE})")
+    ap.add_argument("--no-compile-cache", action="store_true")
     args = ap.parse_args(argv)
+
+    if not args.no_compile_cache:
+        enable_compilation_cache(args.compile_cache)
+
+    mesh = None
+    if args.mesh_shards:
+        mesh = make_quant_mesh(args.mesh_shards)
+        print(f"sharding stacks over {args.mesh_shards} devices")
+
+    def place_params(params):
+        """Lane-shard the weight stacks over the quant mesh up front so no
+        device holds a full-model tensor before quantization starts."""
+        if mesh is None:
+            return params
+        from ..distributed.sharding import stack_lane_shardings
+        return jax.device_put(params, stack_lane_shardings(mesh, "stack",
+                                                           params))
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LM(cfg)
@@ -61,10 +122,10 @@ def main(argv=None):
         ck = Checkpointer(args.ckpt_dir)
         state_like = jax.eval_shape(lambda k: init_train_state(model, k), key)
         state, step = ck.restore(state_like)
-        params = state.params
+        params = place_params(state.params)
         print(f"loaded checkpoint step {step} from {args.ckpt_dir}")
     else:
-        params = model.init(key)
+        params = place_params(model.init(key))
         print("no checkpoint given — quantizing a fresh init (demo mode)")
 
     data = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=256,
@@ -81,6 +142,7 @@ def main(argv=None):
     t0 = time.time()
     qparams, stats = quantize_model_stacked(
         params, acts, qcfg, engine=args.engine,
+        mesh=mesh, fuse_stacks=not args.no_fuse,
         progress=lambda name, st: print(
             f"  {name}: rank={st.rank} err {st.err_before:.4f}->"
             f"{st.err_after:.4f} ({st.seconds:.1f}s)"))

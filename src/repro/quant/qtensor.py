@@ -57,6 +57,25 @@ class QuantizedLinear:
         return extra_avg_bits(self.rank, self.m, self.n)
 
 
+def slice_stack(qt: QuantizedLinear, start: int, stop: int,
+                rank: Optional[int] = None) -> QuantizedLinear:
+    """Slice lanes [start:stop) out of a stacked QuantizedLinear — the
+    inverse of same-shape stack fusion (one (G·L, m, n) launch split back
+    into per-tensor stacks). ``rank``: re-trim the U/V buffers to this
+    sub-stack's own realized max rank (fused launches pad every member to
+    the fused-global max; after splitting each tensor keeps only its own)."""
+    r = qt.u.shape[-1] if rank is None else max(int(rank), 1)
+    return dataclasses.replace(
+        qt,
+        packed=qt.packed[start:stop],
+        scale=qt.scale[start:stop],
+        zp=qt.zp[start:stop],
+        u=qt.u[start:stop, :, :r],
+        v=qt.v[start:stop, :r, :],
+        act_scale_inv=qt.act_scale_inv[start:stop],
+    )
+
+
 def extra_avg_bits(rank: int, m: int, n: int, d_fp: int = 16) -> float:
     """Average extra bits per weight from rank-``rank`` factors stored at
     ``d_fp`` bits (paper Eq. 9 storage accounting — single definition)."""

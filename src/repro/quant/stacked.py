@@ -13,7 +13,18 @@ Two engines:
 layers of a stacked tensor go through scaling → vmapped R1-FLR → batched
 BLC → batched packing as ONE jitted device program. No per-peel host
 syncs, no per-layer dispatch loop; rank padding falls out of the fixed
-FLR buffers.
+FLR buffers. Two scale-out levers on top:
+
+  * same-shape stack fusion (``fuse_stacks=True``): stacked tensors whose
+    quantizer shape (m, n) matches — Q/K/V/O, gate/up — are concatenated
+    into one (G·L, m, n) launch and split back on return, amortizing
+    compile time and filling the machine at small layer counts. Tensors
+    that see different calibration activations ride a per-lane calibration
+    batch through the same launch.
+  * mesh sharding (``mesh=``/``axis=``): the fused stack's leading dim is
+    ``shard_map``-ed over the quantization mesh so whole-model quantization
+    time scales with the pod, not one chip. Results are bit-identical to
+    the single-device batched engine.
 
 ``engine="sequential"`` — the reference oracle: a python loop of
 ``quantize_matrix`` per layer (each layer's R1-FLR syncs ``amax`` to the
@@ -31,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +56,7 @@ from ..core.flrq import (
     quantize_stack,
 )
 from .qtensor import QuantizedLinear
-from . import packing
+from . import packing, qtensor
 
 # stacked params we quantize: every big 2-D matrix inside 'layers'
 _QUANT_PAT = re.compile(
@@ -89,21 +100,192 @@ def _stack_qts(qts, store_dtype):
     )
 
 
+def _restack_lead(stacked: QuantizedLinear, lead) -> QuantizedLinear:
+    """MoE (L, E, ...) tensors: restore the flattened leading dims."""
+    def reshape_lead(x):
+        return x.reshape(lead + x.shape[1:])
+    return dataclasses.replace(
+        stacked,
+        packed=reshape_lead(stacked.packed),
+        scale=reshape_lead(stacked.scale),
+        zp=reshape_lead(stacked.zp),
+        u=reshape_lead(stacked.u),
+        v=reshape_lead(stacked.v),
+        act_scale_inv=reshape_lead(stacked.act_scale_inv),
+    )
+
+
+@dataclasses.dataclass
+class _StackEntry:
+    path: str
+    leaf: jax.Array          # original model-layout tensor (L[, E], in, out)
+    xc: Optional[jax.Array]  # (tokens, n) calibration acts or None
+    keys: jax.Array          # (L, 2) per-layer PRNG keys
+
+    @property
+    def lanes(self) -> int:
+        lanes = 1
+        for d in self.leaf.shape[:-2]:
+            lanes *= d
+        return lanes
+
+    @property
+    def quant_shape(self):
+        # transpose convention: model (in, out) -> quantizer (out=m, in=n)
+        return self.leaf.shape[-1], self.leaf.shape[-2]
+
+    def w_stack(self) -> jax.Array:
+        """(lanes, m, n) quantizer-orientation copy — built on demand so
+        the transposed duplicate of each tensor lives only for its own
+        group's launch, not the whole model walk (at production scale a
+        second full-model fp32 copy is the dominant transient)."""
+        flat = self.leaf.reshape((-1,) + self.leaf.shape[-2:])
+        return jnp.swapaxes(flat, -1, -2)
+
+
+def _collect_entries(params, calib_acts, cfg: FLRQConfig) -> List[_StackEntry]:
+    """First pass: every quantizable stacked tensor, in tree-traversal
+    order, with its slice of the global PRNG key chain (the chain advances
+    per tensor exactly as the unfused engine's visit order — fusion only
+    regroups launches, never key derivation)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    entries: List[_StackEntry] = []
+
+    def visit(path, leaf):
+        nonlocal key
+        pstr = jax.tree_util.keystr(path)
+        if not (hasattr(leaf, "ndim") and leaf.ndim in (3, 4)
+                and should_quantize(pstr, leaf.shape)):
+            return leaf
+        n_lanes = 1
+        for d in leaf.shape[:-2]:
+            n_lanes *= d
+        layer_keys, key = layer_key_chain(key, n_lanes)
+        xc = calib_acts.get(pstr) if calib_acts else None
+        entries.append(_StackEntry(pstr, leaf, xc, layer_keys))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return entries
+
+
+def _group_calib(group: List[_StackEntry]):
+    """The calibration batch for one fused launch: None (Frobenius), the
+    shared (tokens, n) batch when every member sees the same activations,
+    or a per-lane (ΣL, tokens, n) batch when they differ. Sameness is
+    checked by identity first, then by content — value-equal batches from
+    different loads must not silently trigger the ~G·L× bigger per-lane
+    materialization."""
+    if all(e.xc is None for e in group):
+        return None
+    x0 = group[0].xc
+    if all(e.xc is x0
+           or (e.xc.shape == x0.shape and bool(jnp.array_equal(e.xc, x0)))
+           for e in group[1:]):
+        return x0
+    return jnp.concatenate([
+        jnp.broadcast_to(e.xc, (e.lanes,) + e.xc.shape) for e in group])
+
+
+def _quantize_batched(params, calib_acts, cfg: FLRQConfig, progress,
+                      mesh, axis, fuse_stacks: bool):
+    entries = _collect_entries(params, calib_acts, cfg)
+
+    # --- group same-shape stacks for fusion --------------------------------
+    # Fusable = same quantizer (m, n) and same calibration arity (tokens
+    # count, or no calibration at all) — the launch needs one uniform
+    # objective shape per lane.
+    groups: Dict[Any, List[_StackEntry]] = {}
+    order: List[Any] = []
+    for e in entries:
+        m, n = e.quant_shape
+        gk = (m, n, None if e.xc is None else e.xc.shape[0])
+        if not fuse_stacks:
+            gk = (e.path,)
+        if gk not in groups:
+            groups[gk] = []
+            order.append(gk)
+        groups[gk].append(e)
+
+    results: Dict[str, QuantizedLinear] = {}
+    stats: Dict[str, List[LayerStats]] = {}
+
+    def report(path):
+        # stream per-layer progress as each group finishes, not post-hoc —
+        # whole-model runs are long and the callback is the live log
+        if progress:
+            for st in stats[path]:
+                progress(st.name, st)
+
+    for gk in order:
+        group = groups[gk]
+        if len(group) == 1:
+            e = group[0]
+            qt, lst = quantize_stack(e.w_stack(), e.xc, cfg, name=e.path,
+                                     keys=e.keys, mesh=mesh, axis=axis)
+            results[e.path] = qt
+            stats[e.path] = lst
+            report(e.path)
+            continue
+        # fused launch: concat along the lane dim, split back on return
+        w_cat = jnp.concatenate([e.w_stack() for e in group])
+        keys_cat = jnp.concatenate([e.keys for e in group])
+        x_cat = _group_calib(group)
+        fused_name = "+".join(e.path for e in group)
+        qt, lst = quantize_stack(w_cat, x_cat, cfg, name=fused_name,
+                                 keys=keys_cat, mesh=mesh, axis=axis)
+        off = 0
+        for e in group:
+            L = e.lanes
+            sub = lst[off:off + L]
+            rmax = max(max(s.rank for s in sub), 1)
+            results[e.path] = qtensor.slice_stack(qt, off, off + L, rank=rmax)
+            stats[e.path] = [
+                dataclasses.replace(s, name=f"{e.path}[{j}]")
+                for j, s in enumerate(sub)]
+            off += L
+            report(e.path)
+
+    # --- rebuild the tree in original traversal order ----------------------
+    def rebuild(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if pstr not in results:
+            return leaf
+        stacked = results[pstr]
+        if len(leaf.shape[:-2]) == 2:  # MoE (L, E, ...)
+            stacked = _restack_lead(stacked, leaf.shape[:-2])
+        return stacked
+
+    qtree = jax.tree_util.tree_map_with_path(rebuild, params)
+    return qtree, stats
+
+
 def quantize_model_stacked(
     params,
     calib_acts: Optional[Dict[str, jax.Array]],
     cfg: FLRQConfig,
     progress=None,
     engine: str = "batched",
+    mesh=None,
+    axis: Optional[str] = None,
+    fuse_stacks: bool = True,
 ):
     """Returns (serving params tree with QuantizedLinear leaves, stats).
 
     ``engine="batched"`` quantizes each stacked tensor's L layers in one
-    jitted launch; ``engine="sequential"`` is the per-layer reference
-    oracle (kept for parity testing and as the paper-verbatim fallback).
+    jitted launch — same-shape tensors fuse into a single launch
+    (``fuse_stacks``) and the lane dim shards over ``mesh``/``axis`` when
+    given. ``engine="sequential"`` is the per-layer reference oracle (kept
+    for parity testing and as the paper-verbatim fallback).
     """
     if engine not in ENGINES:
         raise ValueError(f"engine={engine!r} not in {ENGINES}")
+    if engine == "batched":
+        return _quantize_batched(params, calib_acts, cfg, progress,
+                                 mesh, axis, fuse_stacks)
+    if mesh is not None:
+        raise ValueError("mesh sharding requires engine='batched'")
+
     key = jax.random.PRNGKey(cfg.seed)
     stats: Dict[str, list] = {}
 
@@ -116,39 +298,19 @@ def quantize_model_stacked(
         lead = leaf.shape[:-2]
         flat = leaf.reshape((-1,) + leaf.shape[-2:])
         xc = calib_acts.get(pstr) if calib_acts else None
-        if engine == "batched":
-            # transpose: model (in, out) -> quantizer (out=m, in=n)
-            w_stack = jnp.swapaxes(flat, -1, -2)
-            layer_keys, key = layer_key_chain(key, flat.shape[0])
-            stacked, lstats = quantize_stack(w_stack, xc, cfg, name=pstr,
-                                             keys=layer_keys)
+        qts, lstats = [], []
+        for i in range(flat.shape[0]):
+            key, sub = jax.random.split(key)
+            qt, st = quantize_matrix(flat[i].T, xc, cfg, sub,
+                                     name=f"{pstr}[{i}]")
+            qts.append(qt)
+            lstats.append(st)
             if progress:
-                for st in lstats:
-                    progress(st.name, st)
-        else:
-            qts, lstats = [], []
-            for i in range(flat.shape[0]):
-                key, sub = jax.random.split(key)
-                qt, st = quantize_matrix(flat[i].T, xc, cfg, sub,
-                                         name=f"{pstr}[{i}]")
-                qts.append(qt)
-                lstats.append(st)
-                if progress:
-                    progress(f"{pstr}[{i}]", st)
-            stacked = _stack_qts(qts, cfg.store_dtype)
+                progress(f"{pstr}[{i}]", st)
+        stacked = _stack_qts(qts, cfg.store_dtype)
         stats[pstr] = lstats
         if len(lead) == 2:  # MoE (L, E, ...) — restack leading dims
-            def reshape_lead(x):
-                return x.reshape(lead + x.shape[1:])
-            stacked = dataclasses.replace(
-                stacked,
-                packed=reshape_lead(stacked.packed),
-                scale=reshape_lead(stacked.scale),
-                zp=reshape_lead(stacked.zp),
-                u=reshape_lead(stacked.u),
-                v=reshape_lead(stacked.v),
-                act_scale_inv=reshape_lead(stacked.act_scale_inv),
-            )
+            stacked = _restack_lead(stacked, lead)
         return stacked
 
     qtree = jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,240 @@
+"""Mesh-sharded whole-model quantization + same-shape stack fusion.
+
+Parity contract: the shard_map'd engine and the fused launches must be
+*bit-identical* to the single-device batched engine — sharding and fusion
+are execution-layout changes, never numerics changes. Multi-device checks
+run in a subprocess with 8 forced CPU host devices (the main pytest
+process is pinned to 1 device; XLA locks the device count at first init).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flexible_rank_select_batched, FLRConfig
+from repro.core.flrq import FLRQConfig, _pad_lanes, quantize_stack, shard_count
+from repro.quant.stacked import quantize_model_stacked
+
+QT_FIELDS = ("packed", "scale", "zp", "u", "v", "act_scale_inv")
+
+
+def _mk_stack(seed, L, m, n, scale=0.5):
+    base = jax.random.normal(jax.random.PRNGKey(seed), (L, m, n)) * 0.02
+    layers = []
+    for i in range(L):
+        r = 4 + 2 * i
+        sv = 2.0 ** -jnp.arange(r)
+        u = jax.random.normal(jax.random.PRNGKey(seed + 10 + i), (m, r))
+        v = jax.random.normal(jax.random.PRNGKey(seed + 40 + i), (r, n))
+        layers.append(base[i] + (u * sv) @ v * scale)
+    return jnp.stack(layers)
+
+
+def _assert_qt_equal(qa, qb):
+    for f in QT_FIELDS:
+        a, b = np.asarray(getattr(qa, f)), np.asarray(getattr(qb, f))
+        assert a.shape == b.shape, (f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f)
+
+
+# ------------------------------------------------------------ lane masking
+def test_lane_mask_inactive_lanes_rank_zero():
+    stack = _mk_stack(0, 4, 128, 256)
+    cfg = FLRConfig(bits=4, max_rank=16)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    mask = jnp.asarray([True, False, True, False])
+    res = flexible_rank_select_batched(stack, keys, cfg, lane_mask=mask)
+    ref = flexible_rank_select_batched(stack, keys, cfg)
+    ranks, ranks_ref = np.asarray(res.rank), np.asarray(ref.rank)
+    assert ranks[1] == 0 and ranks[3] == 0
+    np.testing.assert_array_equal(np.asarray(res.u[1]), 0.0)
+    # active lanes are untouched by other lanes' masking
+    assert ranks[0] == ranks_ref[0] and ranks[2] == ranks_ref[2]
+    np.testing.assert_array_equal(np.asarray(res.u[2]), np.asarray(ref.u[2]))
+
+
+def test_pad_lanes_repeats_last():
+    a = jnp.arange(6).reshape(3, 2).astype(jnp.float32)
+    p = _pad_lanes(a, 5)
+    assert p.shape == (5, 2)
+    np.testing.assert_array_equal(np.asarray(p[:3]), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(p[3]), np.asarray(a[-1]))
+    assert _pad_lanes(a, 3) is a
+
+
+def test_shard_count_resolution():
+    mesh = jax.make_mesh((1,), ("stack",))
+    assert shard_count(mesh) == (1, "stack")
+    assert shard_count(mesh, "stack") == (1, "stack")
+    with pytest.raises(ValueError):
+        shard_count(mesh, "nope")
+
+
+# ------------------------------------------------- single-device mesh path
+def test_mesh_path_matches_plain_on_one_device():
+    """The shard_map path on a 1-device mesh must produce the exact arrays
+    of the plain jit path (machinery check; the real multi-device run is
+    the subprocess test below)."""
+    stack = _mk_stack(3, 3, 128, 256)
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, 256))
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    mesh = jax.make_mesh((1,), ("stack",))
+    qt_ref, st_ref = quantize_stack(stack, x, cfg, jax.random.PRNGKey(0))
+    qt_sh, st_sh = quantize_stack(stack, x, cfg, jax.random.PRNGKey(0),
+                                  mesh=mesh)
+    _assert_qt_equal(qt_ref, qt_sh)
+    for a, b in zip(st_ref, st_sh):
+        assert a.rank == b.rank
+
+
+# ----------------------------------------------------- same-shape fusion
+@pytest.fixture(scope="module")
+def fusion_tree():
+    L, d = 3, 256
+    def model_layout(seed, din, dout):
+        return jnp.swapaxes(_mk_stack(seed, L, dout, din), -1, -2)
+    params = {"layers": {
+        "wq": model_layout(0, d, d),
+        "wk": model_layout(100, d, d),
+        "wo": model_layout(200, d, d),
+        "w_up": model_layout(300, d, 2 * d),
+    }}
+    x_qk = jax.random.normal(jax.random.PRNGKey(3), (32, d))
+    x_o = jax.random.normal(jax.random.PRNGKey(7), (32, d)) * 1.3
+    calib = {
+        "['layers']['wq']": x_qk,        # wq/wk share one batch (same input)
+        "['layers']['wk']": x_qk,
+        "['layers']['wo']": x_o,         # wo sees different activations →
+        "['layers']['w_up']": x_qk,      #   forces the per-lane calib path
+    }
+    return params, calib
+
+
+def test_fusion_bitwise_parity(fusion_tree):
+    """Fused (wq+wk+wo in one (3L, m, n) launch, per-lane calibration) ==
+    unfused, bit for bit — including the PRNG key chain."""
+    params, calib = fusion_tree
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    qf, sf = quantize_model_stacked(params, calib, cfg, fuse_stacks=True)
+    qu, su = quantize_model_stacked(params, calib, cfg, fuse_stacks=False)
+    assert (jax.tree_util.tree_structure(qf)
+            == jax.tree_util.tree_structure(qu))
+    for (pa, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(qf)[0],
+                               jax.tree_util.tree_flatten_with_path(qu)[0]):
+        assert a.shape == b.shape, jax.tree_util.keystr(pa)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(pa))
+    for k in su:
+        for st_f, st_u in zip(sf[k], su[k]):
+            assert st_f.rank == st_u.rank
+            assert st_f.name == st_u.name
+
+
+def test_fusion_groups_same_shape_only(fusion_tree):
+    """w_up (different quantizer shape) must not fuse with the d×d group —
+    its per-tensor rank padding stays its own."""
+    params, calib = fusion_tree
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    qf, sf = quantize_model_stacked(params, calib, cfg, fuse_stacks=True)
+    up = qf["layers"]["w_up"]
+    assert (up.m, up.n) == (512, 256)
+    rmax_up = max(max(s.rank for s in sf["['layers']['w_up']"]), 1)
+    assert up.u.shape[-1] == rmax_up
+
+
+def test_fusion_no_calib(fusion_tree):
+    params, _ = fusion_tree
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    qf, _ = quantize_model_stacked(params, None, cfg, fuse_stacks=True)
+    qu, _ = quantize_model_stacked(params, None, cfg, fuse_stacks=False)
+    for (pa, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(qf)[0],
+                               jax.tree_util.tree_flatten_with_path(qu)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(pa))
+
+
+# ------------------------------------------- multi-device bitwise parity
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.flrq import FLRQConfig, quantize_stack
+from repro.quant.stacked import quantize_model_stacked
+
+QT_FIELDS = ("packed", "scale", "zp", "u", "v", "act_scale_inv")
+
+def mk_stack(seed, L, m, n):
+    base = jax.random.normal(jax.random.PRNGKey(seed), (L, m, n)) * 0.02
+    layers = []
+    for i in range(L):
+        r = 4 + 2 * i
+        sv = 2.0 ** -jnp.arange(r)
+        u = jax.random.normal(jax.random.PRNGKey(seed + 10 + i), (m, r))
+        v = jax.random.normal(jax.random.PRNGKey(seed + 40 + i), (r, n))
+        layers.append(base[i] + (u * sv) @ v * 0.5)
+    return jnp.stack(layers)
+
+def qt_equal(qa, qb):
+    return all(np.array_equal(np.asarray(getattr(qa, f)),
+                              np.asarray(getattr(qb, f))) for f in QT_FIELDS)
+
+out = {}
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("stack",))
+cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=16)
+x = jax.random.normal(jax.random.PRNGKey(3), (32, 256))
+
+# (1) L divisible by shard count
+w8 = mk_stack(0, 8, 128, 256)
+qt_ref, st_ref = quantize_stack(w8, x, cfg, jax.random.PRNGKey(0))
+qt_sh, st_sh = quantize_stack(w8, x, cfg, jax.random.PRNGKey(0), mesh=mesh)
+out["divisible_bitwise"] = qt_equal(qt_ref, qt_sh)
+out["divisible_ranks"] = [a.rank for a in st_ref] == [b.rank for b in st_sh]
+
+# (2) L NOT divisible: 6 lanes over 8 shards -> 2 masked padding lanes
+w6 = mk_stack(50, 6, 128, 256)
+qt_ref6, _ = quantize_stack(w6, x, cfg, jax.random.PRNGKey(1))
+qt_sh6, _ = quantize_stack(w6, x, cfg, jax.random.PRNGKey(1), mesh=mesh)
+out["padded_bitwise"] = qt_equal(qt_ref6, qt_sh6)
+
+# (3) driver level: fusion + mesh together == plain single-device driver
+def model_layout(seed, L, din, dout):
+    return jnp.swapaxes(mk_stack(seed, L, dout, din), -1, -2)
+params = {"layers": {"wq": model_layout(0, 3, 256, 256),
+                     "wk": model_layout(100, 3, 256, 256)}}
+calib = {"['layers']['wq']": x, "['layers']['wk']": x}
+q_ref, _ = quantize_model_stacked(params, calib, cfg)
+q_sh, _ = quantize_model_stacked(params, calib, cfg, mesh=mesh,
+                                 fuse_stacks=True)
+leaves_ref = jax.tree_util.tree_leaves(q_ref)
+leaves_sh = jax.tree_util.tree_leaves(q_sh)
+out["driver_bitwise"] = all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(leaves_ref, leaves_sh))
+
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_engine_bitwise_parity_8dev():
+    """Acceptance: the sharded engine produces bit-identical QTensors to
+    the single-device batched engine on a forced 8-device CPU host —
+    divisible and padded lane counts, and through the fused driver."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    res = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out == {k: True for k in out}, out
+    assert set(out) == {"divisible_bitwise", "divisible_ranks",
+                        "padded_bitwise", "driver_bitwise"}
