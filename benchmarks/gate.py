@@ -1,9 +1,16 @@
-"""Benchmark-regression gate (CI): re-run the stacked-engine benchmark and
-fail if wall time regresses beyond a tolerance band against the recorded
+"""Benchmark-regression gate (CI): re-run a gated benchmark and fail if
+wall time regresses beyond a tolerance band against the recorded
 reference — ReFrame-style performance references, with the best of the
 last few matching BENCH_quant_time.json entries as the reference value.
 
     PYTHONPATH=src python -m benchmarks.gate [--tol 0.25] [--metric batched_s]
+    PYTHONPATH=src python -m benchmarks.gate --bench serve
+
+``--bench`` selects the gated workload: ``quant`` (stacked-engine
+quantization wall time, metric ``batched_min_s``) or ``serve`` (serving
+runtime decode wall time through the scanned ref backend, metric
+``decode_scan_ref_min_s`` — the interpret-mode kernel variant is excluded
+from gating by construction).
 
 Reference matching: an entry is comparable only if its proxy workload
 descriptor, backend AND host family (``quant_time.host_family``: "ci" /
@@ -57,31 +64,54 @@ def load_reference(bench: str, proxy: dict, backend: str, host: str,
     return min(matches[-window:], key=lambda e: float(e[metric]))
 
 
+_BENCH_DEFAULT_METRIC = {"quant": "batched_min_s",
+                         "serve": "decode_scan_ref_min_s"}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="quant",
+                    choices=sorted(_BENCH_DEFAULT_METRIC),
+                    help="which gated workload to run")
     ap.add_argument("--tol", type=float, default=0.25,
                     help="allowed fractional slowdown vs reference "
                          "(0.25 = fail beyond +25%%)")
-    ap.add_argument("--metric", default="batched_min_s",
-                    help="wall-time metric to gate on (default: min-of-"
-                         "repeats — the noise-robust statistic)")
+    ap.add_argument("--metric", default=None,
+                    help="wall-time metric to gate on (default: the "
+                         "bench's min-of-repeats statistic)")
     ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
+    if args.metric is None:
+        args.metric = _BENCH_DEFAULT_METRIC[args.bench]
 
     from . import quant_time
 
     # Resolve the reference BEFORE running — the run appends a new entry
     # to the trajectory, which must not gate itself.
-    proxy = dict(layers=quant_time.STACK_L,
-                 tensors={k: list(v) for k, v in
-                          quant_time.STACK_TENSORS.items()})
+    if args.bench == "serve":
+        from . import serve_throughput
+        proxy = serve_throughput.workload_descriptor()
+
+        def run_bench():
+            # interpret-mode kernel timing is validation-only noise on a
+            # shared runner; the gate re-measures just the gated variants
+            return serve_throughput.run_bench(repeats=args.repeats,
+                                              include_fused=False)
+    else:
+        proxy = dict(layers=quant_time.STACK_L,
+                     tensors={k: list(v) for k, v in
+                              quant_time.STACK_TENSORS.items()})
+
+        def run_bench():
+            return quant_time.run_stacked(repeats=args.repeats,
+                                          include_sequential=False)
+
     import jax
     backend = jax.default_backend()
     host = quant_time.host_family()
     ref = load_reference("quant_time", proxy, backend, host, args.metric)
 
-    record = quant_time.run_stacked(repeats=args.repeats,
-                                    include_sequential=False)
+    record = run_bench()
     if args.metric not in record:
         print(f"[gate] FAIL: metric {args.metric!r} not in record {record}")
         return 2
@@ -89,7 +119,7 @@ def main(argv=None) -> int:
 
     if ref is None:
         print(f"[gate] no comparable reference for backend={backend} "
-              f"host={host} workload={proxy['tensors']} — recorded new "
+              f"host={host} workload={proxy} — recorded new "
               f"baseline {args.metric}={got:.4f}s, passing")
         return 0
 
@@ -100,8 +130,7 @@ def main(argv=None) -> int:
         # runner must not fail the build — a real regression reproduces.
         print(f"[gate] over limit ({got:.4f}s > {limit:.4f}s) — "
               f"re-measuring once to rule out interference")
-        record = quant_time.run_stacked(repeats=args.repeats,
-                                        include_sequential=False)
+        record = run_bench()
         got = min(got, float(record[args.metric]))
     verdict = "PASS" if got <= limit else "FAIL"
     print(f"[gate] {verdict}: {args.metric}={got:.4f}s vs reference "

@@ -21,6 +21,7 @@ from . import (
     method_quality,
     quant_time,
     rank_error,
+    serve_throughput,
     sketch_speed,
     vs_lqer,
 )
@@ -34,6 +35,7 @@ BENCHES = [
     ("vs_lqer (Tables 4/18)", vs_lqer.run),
     ("quant_time (Table 8)", quant_time.run),
     ("kernel_throughput (Fig.3)", kernel_throughput.run),
+    ("serve_throughput (serving runtime)", serve_throughput.run),
 ]
 
 

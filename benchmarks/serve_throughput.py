@@ -1,0 +1,125 @@
+"""Serving-throughput benchmark: tokens/s through ``serve.Engine`` on an
+FLRQ-W4 proxy model, across the quantized runtime's execution variants:
+
+  * ``unroll_ref`` — scan_layers=False, backend="ref": L per-layer pytree
+    dispatches per step (the pre-runtime reference execution).
+  * ``scan_ref``   — scan_layers=True, backend="ref": ONE compiled layer
+    body scanned over the stacked QuantizedLinear weights (the default
+    serving path).
+  * ``fused_interpret`` — scanned + backend="fused" in Pallas interpret
+    mode: exercises the fused-kernel serving path end-to-end off-TPU.
+    Interpret mode is a *validation* execution, not a performance number —
+    it is recorded for trajectory shape/coverage, never gated on.
+
+Each variant reports prefill and decode tokens/s; the record lands in the
+BENCH_quant_time.json trajectory and ``benchmarks.gate --bench serve``
+gates the scanned-ref decode wall time (min-of-repeats).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import PAPER_PROXIES
+from repro.core.flrq import FLRQConfig
+from repro.models import LM
+from repro.quant.stacked import quantize_model_stacked
+from repro.serve.engine import Engine, Request, ServeConfig
+
+from .common import emit, emit_bench_json
+from .quant_time import host_family
+
+# CPU-feasible serving proxy (kept small enough that the interpret-mode
+# kernel variant stays in CI budget).
+SERVE_L = 4
+SERVE_D = 256
+SERVE_FF = 512
+SERVE_VOCAB = 1024
+SLOTS = 4
+PROMPT = 16
+NEW_TOKENS = 24
+BITS = 4
+
+VARIANTS = (
+    ("unroll_ref", False, "ref", None),
+    ("scan_ref", True, "ref", None),
+    ("fused_interpret", True, "fused", True),
+)
+
+
+def workload_descriptor() -> dict:
+    """The gate's comparability key: a changed serving workload re-baselines
+    instead of comparing against a different experiment."""
+    return dict(kind="serve", layers=SERVE_L, d_model=SERVE_D,
+                d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS,
+                prompt=PROMPT, new_tokens=NEW_TOKENS, bits=BITS)
+
+
+def _build():
+    cfg = dataclasses.replace(
+        PAPER_PROXIES["opt-proxy-25m"], n_layers=SERVE_L, d_model=SERVE_D,
+        n_heads=4, n_kv_heads=4, head_dim=SERVE_D // 4, d_ff=SERVE_FF,
+        vocab=SERVE_VOCAB)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=BITS, blc_epochs=1, max_rank=16))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(2, SERVE_VOCAB, PROMPT).astype(np.int32),
+                    max_new_tokens=NEW_TOKENS, id=i) for i in range(SLOTS)]
+    return model, qparams, reqs
+
+
+def run_bench(repeats: int = 3, include_fused: bool = True) -> dict:
+    """Measure every variant; returns the record appended to the
+    BENCH_quant_time.json trajectory."""
+    model, qparams, reqs = _build()
+    record = dict(proxy=workload_descriptor(),
+                  backend=jax.default_backend(), host=host_family())
+
+    for name, scan, backend, interpret in VARIANTS:
+        if name == "fused_interpret" and not include_fused:
+            continue
+        eng = Engine(model.with_scan(scan), qparams, ServeConfig(
+            max_slots=SLOTS, max_seq=PROMPT + NEW_TOKENS + 8,
+            backend=backend, interpret=interpret))
+        t0 = time.perf_counter()
+        eng.generate(reqs)  # warm: compile prefill + decode
+        record[f"compile_{name}_s"] = round(time.perf_counter() - t0, 2)
+        prefills, decodes = [], []
+        for _ in range(repeats):
+            res = eng.generate(reqs)
+            prefills.append(res[0].prefill_s)
+            decodes.append(res[0].decode_s)
+        p_min, d_min = float(np.min(prefills)), float(np.min(decodes))
+        prefill_toks = SLOTS * PROMPT
+        decode_toks = SLOTS * (NEW_TOKENS - 1)  # first token is prefill's
+        record[f"prefill_{name}_min_s"] = round(p_min, 4)
+        record[f"decode_{name}_min_s"] = round(d_min, 4)
+        record[f"decode_{name}_tok_s"] = round(decode_toks / d_min, 1)
+        emit(f"serve_throughput.{name}.prefill", p_min * 1e6,
+             f"{prefill_toks / p_min:.0f} tok/s")
+        emit(f"serve_throughput.{name}.decode", d_min * 1e6,
+             f"{decode_toks / d_min:.0f} tok/s")
+
+    if "decode_unroll_ref_min_s" in record and \
+            "decode_scan_ref_min_s" in record:
+        emit("serve_throughput.scan_vs_unroll",
+             record["decode_scan_ref_min_s"] * 1e6,
+             f"decode scan/unroll "
+             f"{record['decode_unroll_ref_min_s'] / record['decode_scan_ref_min_s']:.2f}x")
+    emit_bench_json("quant_time", record)
+    return record
+
+
+def run():
+    run_bench()
+
+
+if __name__ == "__main__":
+    run()

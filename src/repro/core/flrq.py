@@ -219,6 +219,7 @@ def _quantize_stack_impl(
     cfg: FLRQConfig,
     use_scaling: bool,
     has_calib: bool,
+    return_resid: bool = False,
 ):
     """The whole FLRQ pipeline for a layer stack as ONE device program:
     batched scaling → vmapped R1-FLR (device-side stopping) → batched BLC
@@ -311,21 +312,33 @@ def _quantize_stack_impl(
     codes = jax.vmap(
         lambda r, s, z: quantize_codes(r, spec, s, z))(resid_final, scale, zp)
     packed = qtensor.pack_codes(codes, spec)
-    return dict(
+    out = dict(
         packed=packed, scale=scale, zp=zp, u=u, v=v,
         act_scale_inv=jnp.broadcast_to(1.0 / alpha, (L, n)),
         ranks=ranks, clip=clip,
         err_before=err_before, err_after=err_after,
     )
+    if return_resid:
+        # Same aval as w_stack: the donation target. When the caller donates
+        # the weight stack, XLA writes this (otherwise temp-allocated)
+        # residual into the donated buffer — peak drops by one full
+        # (L, m, n) f32 stack. The driver discards it after the launch.
+        out["resid"] = resid_final
+    return out
 
 
-_quantize_stack_jit = partial(jax.jit, static_argnames=(
-    "cfg", "use_scaling", "has_calib"))(_quantize_stack_impl)
+_STACK_STATICS = ("cfg", "use_scaling", "has_calib", "return_resid")
+_quantize_stack_jit = partial(jax.jit, static_argnames=_STACK_STATICS)(
+    _quantize_stack_impl)
+# Donating twin: consumes the w_stack buffer. Single-partition XLA binds a
+# donation only to an output with the exact same aval, so the donating
+# launch requests the residual output and aliases the stack into it.
+_quantize_stack_jit_donate = partial(
+    jax.jit, static_argnames=_STACK_STATICS,
+    donate_argnames=("w_stack",))(_quantize_stack_impl)
 
 
-@partial(jax.jit, static_argnames=("cfg", "use_scaling", "has_calib",
-                                   "mesh", "axis"))
-def _quantize_stack_sharded(
+def _quantize_stack_sharded_impl(
     w_stack: jax.Array,
     xt: jax.Array,
     keys: jax.Array,
@@ -363,6 +376,18 @@ def _quantize_stack_sharded(
     return fn(w_stack, xt, keys, lane_mask)
 
 
+_SHARDED_STATICS = ("cfg", "use_scaling", "has_calib", "mesh", "axis")
+_quantize_stack_sharded = partial(jax.jit, static_argnames=_SHARDED_STATICS)(
+    _quantize_stack_sharded_impl)
+# Donating twin for the sharded engine: under a >1-partition lowering JAX
+# marks the donated stack `jax.buffer_donor`, a general donor XLA may
+# recycle for any same-shard-sized transient (the BLC clip-grid residual
+# copies are the big ones at production shapes) — no aliased output needed.
+_quantize_stack_sharded_donate = partial(
+    jax.jit, static_argnames=_SHARDED_STATICS,
+    donate_argnames=("w_stack",))(_quantize_stack_sharded_impl)
+
+
 def shard_count(mesh, axis: Optional[str] = None) -> Tuple[int, str]:
     """(n_shards, axis) for sharding a stack's leading dim over ``mesh``.
     ``axis=None`` picks the mesh's only axis (ambiguous meshes must name
@@ -398,6 +423,7 @@ def quantize_stack(
     keys: Optional[jax.Array] = None,
     mesh=None,
     axis: Optional[str] = None,
+    donate: bool = False,
 ) -> Tuple[qtensor.QuantizedLinear, List[LayerStats]]:
     """Quantize an (L, m, n) stack of matrices in one (or, when the
     robustness gate trips, two) jitted launches. ``x_calib``: (tokens, n)
@@ -418,6 +444,14 @@ def quantize_stack(
     to the single-device program (L is padded up to the shard count with
     masked lanes when it does not divide).
 
+    ``donate=True`` CONSUMES the ``w_stack`` buffer (standard jax donation
+    semantics — the caller must not reuse it): the last launch that needs
+    the stack donates it, dropping peak memory by one (L, m, n) f32 copy.
+    Single-device, the donation aliases the stack into the quantization
+    residual output; sharded, the stack shards become `jax.buffer_donor`s
+    XLA recycles for the clip-grid transients. The stacked-model driver
+    passes its transposed quantizer-orientation temporaries here.
+
     Returns a stacked QuantizedLinear (U/V padded to the realized max rank;
     zero columns are numerically inert) and per-layer LayerStats.
     """
@@ -433,6 +467,9 @@ def quantize_stack(
         keys, _ = layer_key_chain(key, L)
 
     per_lane_x = x_calib.ndim == 3
+    # The scaling robustness gate may relaunch over the same stack — only
+    # the launch that provably has no successor may donate it.
+    may_relaunch = cfg.use_scaling and has_calib
 
     if mesh is not None:
         n_shards, axis = shard_count(mesh, axis)
@@ -442,24 +479,36 @@ def quantize_stack(
         x_in = _pad_lanes(x_calib, l_pad) if per_lane_x else x_calib
         lane_mask = jnp.arange(l_pad) < L
 
-        def launch(use_scaling):
-            out = _quantize_stack_sharded(
-                w_in, x_in, keys_in, lane_mask, cfg, use_scaling, has_calib,
-                mesh, axis)
+        def launch(use_scaling, donate_now=False):
+            fn = (_quantize_stack_sharded_donate if donate_now
+                  else _quantize_stack_sharded)
+            out = fn(w_in, x_in, keys_in, lane_mask, cfg, use_scaling,
+                     has_calib, mesh, axis)
             return {k: v[:L] for k, v in out.items()}
     else:
         lane_mask = jnp.ones((L,), jnp.bool_)
 
-        def launch(use_scaling):
+        def launch(use_scaling, donate_now=False):
+            if donate_now:
+                # Donation binds by aval, and the alias target (the f32
+                # residual) must match — a bf16 stack donates the f32 copy
+                # the pipeline materializes anyway (astype is the identity
+                # for f32 inputs, so those donate the caller's buffer).
+                out = dict(_quantize_stack_jit_donate(
+                    w_stack.astype(jnp.float32), x_calib, keys, lane_mask,
+                    cfg, use_scaling, has_calib, return_resid=True))
+                out.pop("resid")  # alias target only; not a result
+                return out
             return _quantize_stack_jit(
                 w_stack, x_calib, keys, lane_mask, cfg, use_scaling,
                 has_calib)
 
-    out = launch(cfg.use_scaling and has_calib)
+    out = launch(cfg.use_scaling and has_calib,
+                 donate_now=donate and not may_relaunch)
     if cfg.use_scaling and has_calib:
         gate = np.asarray(out["err_after"]) > np.asarray(out["err_before"])
         if gate.any():
-            out2 = launch(False)
+            out2 = launch(False, donate_now=donate)
             redo = gate & (np.asarray(out2["err_after"])
                            < np.asarray(out["err_after"]))
             if redo.any():

@@ -10,17 +10,37 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..quant.qtensor import QuantizedLinear
+from ..quant.qtensor import QuantizedLinear, is_stacked, num_lanes
 from . import group_quant as gq
 from . import quant_matmul as qm
 from . import r1_sketch as rs
 from . import ref
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _t_blocking(t: int):
+    """(bt, t_pad) for a T-dim of ``t`` tokens. bt must divide the padded T
+    and respect the f32 (8, 128) VMEM tile — decode-shaped calls (T = slots,
+    often 1..8) pad up to one 8-row sublane block instead of degenerating to
+    1-row blocks, and T > 128 pads to the 128 t-block."""
+    bt = min(128, _round_up(t, 8))
+    return bt, _round_up(t, bt)
+
+
 def quant_matmul(qt: QuantizedLinear, x, out_dtype=None,
                  interpret: bool = False):
-    """y = FLRQ-apply(qt, x) via the fused kernel. x: (..., n) -> (..., m)."""
+    """y = FLRQ-apply(qt, x) via the fused kernel. x: (..., n) -> (..., m).
+
+    Stacked (lane-leading) tensors take the lane-stacked kernel: x must
+    carry the same leading lane dims, (lanes..., ..., n) -> (lanes..., ...,
+    m), one launch for all lanes.
+    """
     out_dtype = out_dtype or x.dtype
+    if is_stacked(qt):
+        return _quant_matmul_stacked(qt, x, out_dtype, interpret)
     lead = x.shape[:-1]
     t = 1
     for d in lead:
@@ -28,21 +48,57 @@ def quant_matmul(qt: QuantizedLinear, x, out_dtype=None,
     x2 = x.reshape(t, qt.n)
     kwargs = dict(bits=qt.bits, group=qt.group_size, symmetric=qt.symmetric,
                   out_dtype=out_dtype)
-    # kernel constraints: t % bt == 0 with bt<=128; pad T up
-    bt = min(128, t) if t % min(128, t) == 0 else 1
-    pad_t = (-t) % 128 if t > 128 else 0
     if qt.bits == 3:
         y2 = ref.quant_matmul_ref(x2, qt.packed, qt.scale, qt.zp, qt.u, qt.v,
                                   qt.act_scale_inv, **kwargs)
     else:
-        if pad_t:
-            x2 = jnp.pad(x2, ((0, pad_t), (0, 0)))
+        bt, t_pad = _t_blocking(t)
+        if t_pad != t:
+            x2 = jnp.pad(x2, ((0, t_pad - t), (0, 0)))
         y2 = qm.quant_matmul_fused(
             x2, qt.packed, qt.scale, qt.zp, qt.u, qt.v, qt.act_scale_inv,
-            interpret=interpret, **kwargs)
-        if pad_t:
+            bt=bt, interpret=interpret, **kwargs)
+        if t_pad != t:
             y2 = y2[:t]
     return y2.reshape(*lead, qt.m)
+
+
+def _quant_matmul_stacked(qt: QuantizedLinear, x, out_dtype,
+                          interpret: bool):
+    """Lane-stacked path: flatten the leading lane dims of both the tensor
+    and x, run one multi-lane launch, restore the lane layout."""
+    lane_dims = qt.packed.shape[:-3]
+    nl = len(lane_dims)
+    if x.shape[:nl] != lane_dims:
+        raise ValueError(
+            f"stacked quant_matmul: x leading dims {x.shape[:nl]} != "
+            f"tensor lane dims {lane_dims}")
+    lanes = num_lanes(qt)
+    inner = x.shape[nl:-1]  # per-lane batch dims
+    t = 1
+    for d in inner:
+        t *= d
+    x3 = x.reshape(lanes, t, qt.n)
+    flat = lambda a: a.reshape((lanes,) + a.shape[nl:])
+    kwargs = dict(bits=qt.bits, group=qt.group_size, symmetric=qt.symmetric,
+                  out_dtype=out_dtype)
+    if qt.bits == 3:
+        y3 = jax.vmap(
+            lambda xl, pk, sc, zp, u, v, asi: ref.quant_matmul_ref(
+                xl, pk, sc, zp, u, v, asi, **kwargs)
+        )(x3, flat(qt.packed), flat(qt.scale), flat(qt.zp), flat(qt.u),
+          flat(qt.v), flat(qt.act_scale_inv))
+    else:
+        bt, t_pad = _t_blocking(t)
+        if t_pad != t:
+            x3 = jnp.pad(x3, ((0, 0), (0, t_pad - t), (0, 0)))
+        y3 = qm.quant_matmul_fused_stacked(
+            x3, flat(qt.packed), flat(qt.scale), flat(qt.zp), flat(qt.u),
+            flat(qt.v), flat(qt.act_scale_inv), bt=bt, interpret=interpret,
+            **kwargs)
+        if t_pad != t:
+            y3 = y3[:, :t]
+    return y3.reshape(lane_dims + inner + (qt.m,))
 
 
 def sketch_power_iter(a, s, it: int = 2, interpret: bool = False):

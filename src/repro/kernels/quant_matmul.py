@@ -19,6 +19,12 @@ Design for the MXU/VMEM hierarchy:
 
 Block sizes default to MXU-aligned (bt, bm, bk) = (128, 128, 512); bk must
 be a multiple of the quantization group (128).
+
+``quant_matmul_fused_stacked`` is the lane-stacked variant: one launch
+computes y[l] = FLRQ-apply(qt[l], x[l]) for every lane of a stacked
+(L, m, n) QuantizedLinear — the serving layout ``quantize_model_stacked``
+emits — by prepending a parallel lane dim to the grid. One executable,
+one weight-stack pass, no per-lane dispatch loop.
 """
 from __future__ import annotations
 
@@ -56,22 +62,25 @@ def _unpack_block(codes_u8, bits: int, bk: int):
     raise ValueError(bits)
 
 
-def _kernel(x_ref, packed_ref, scale_ref, zp_ref, u_ref, v_ref, asi_ref,
-            o_ref, acc_ref, t_ref, *, bits, group, offs, nk, rank):
-    k = pl.program_id(2)
-
+def _fused_body(k, x_blk, asi_blk, packed_blk, scale_blk, zp_blk, u_blk,
+                v_blk, o_write, o_dtype, acc_ref, t_ref, *, bits, group,
+                offs, nk, rank):
+    """The one definition of the fused dequant-matmul math, shared by the
+    per-tensor and lane-stacked kernels (which differ only in how they
+    index their refs). All ``*_blk`` arguments are already-loaded 2-D/3-D
+    blocks; ``o_write`` stores the (bt, bm) result on the final k step."""
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         if rank:
             t_ref[...] = jnp.zeros_like(t_ref)
 
-    xs = x_ref[...].astype(jnp.float32) * asi_ref[...].astype(jnp.float32)[None, :]
-    bm = packed_ref.shape[0]
+    xs = x_blk.astype(jnp.float32) * asi_blk.astype(jnp.float32)[None, :]
+    bm = packed_blk.shape[0]
     bk = xs.shape[1]
-    codes = _unpack_block(packed_ref[...], bits, bk)          # (bm, bk)
-    scale = scale_ref[...].astype(jnp.float32)                # (bm, bk//g, 1)
-    zp = zp_ref[...].astype(jnp.float32)
+    codes = _unpack_block(packed_blk, bits, bk)               # (bm, bk)
+    scale = scale_blk.astype(jnp.float32)                     # (bm, bk//g, 1)
+    zp = zp_blk.astype(jnp.float32)
     wq = ((codes - offs).astype(jnp.float32).reshape(bm, bk // group, group)
           - zp) * scale
     wq = wq.reshape(bm, bk)
@@ -80,7 +89,7 @@ def _kernel(x_ref, packed_ref, scale_ref, zp_ref, u_ref, v_ref, asi_ref,
         preferred_element_type=jnp.float32)                   # (bt, bm)
     if rank:
         t_ref[...] += jax.lax.dot_general(
-            xs, v_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+            xs, v_blk.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)               # (bt, r)
 
     @pl.when(k == nk - 1)
@@ -88,10 +97,20 @@ def _kernel(x_ref, packed_ref, scale_ref, zp_ref, u_ref, v_ref, asi_ref,
         out = acc_ref[...]
         if rank:
             out = out + jax.lax.dot_general(
-                t_ref[...], u_ref[...].astype(jnp.float32),
+                t_ref[...], u_blk.astype(jnp.float32),
                 (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)
-        o_ref[...] = out.astype(o_ref.dtype)
+        o_write(out.astype(o_dtype))
+
+
+def _kernel(x_ref, packed_ref, scale_ref, zp_ref, u_ref, v_ref, asi_ref,
+            o_ref, acc_ref, t_ref, **statics):
+    def o_write(out):
+        o_ref[...] = out
+
+    _fused_body(pl.program_id(2), x_ref[...], asi_ref[...], packed_ref[...],
+                scale_ref[...], zp_ref[...], u_ref[...], v_ref[...],
+                o_write, o_ref.dtype, acc_ref, t_ref, **statics)
 
 
 @functools.partial(
@@ -150,6 +169,87 @@ def quant_matmul_fused(
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, packed2, scale, zp, u, v, act_scale_inv)
+
+
+def _kernel_lanes(x_ref, packed_ref, scale_ref, zp_ref, u_ref, v_ref,
+                  asi_ref, o_ref, acc_ref, t_ref, **statics):
+    """Stacked-kernel body: the same ``_fused_body`` math with every ref
+    carrying a leading size-1 lane block and the k step in grid axis 3."""
+    def o_write(out):
+        o_ref[0] = out
+
+    _fused_body(pl.program_id(3), x_ref[0], asi_ref[0], packed_ref[0],
+                scale_ref[0], zp_ref[0], u_ref[0], v_ref[0],
+                o_write, o_ref.dtype, acc_ref, t_ref, **statics)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group", "symmetric", "bt", "bm", "bk",
+                     "interpret", "out_dtype"))
+def quant_matmul_fused_stacked(
+    x, packed, scale, zp, u, v, act_scale_inv,
+    *, bits: int, group: int = 128, symmetric: bool = False,
+    bt: int = 128, bm: int = 128, bk: int = 512,
+    interpret: bool = False, out_dtype=None,
+):
+    """Lane-stacked fused FLRQ matmul: x: (L, T, N);
+    packed: (L, M, N//group, group*bits//8) uint8; scale/zp: (L, M, N//group,
+    1); u: (L, M, R); v: (L, R, N); act_scale_inv: (L, N). Returns (L, T, M)
+    with y[l] = deq(W_q[l])·xs[l] + U[l](V[l]·xs[l]).
+
+    The lane dim is an outer *parallel* grid axis — each (lane, t-block,
+    m-block) owns its own accumulator sweep over k, so the launch is the
+    exact per-lane kernel replicated L times with no cross-lane traffic.
+    """
+    l, t_dim, n = x.shape
+    m = packed.shape[1]
+    rank = u.shape[2]
+    out_dtype = out_dtype or x.dtype
+    bt = min(bt, t_dim)
+    bm = min(bm, m)
+    bk = min(bk, n)
+    assert bk % group == 0 and n % bk == 0, (bk, group, n)
+    assert t_dim % bt == 0 and m % bm == 0, (t_dim, bt, m, bm)
+    nk = n // bk
+    offs = (1 << (bits - 1)) if symmetric else 0
+    pg = group * bits // 8
+    packed2 = packed.reshape(l, m, (n // group) * pg)
+    bpk = (bk // group) * pg
+    rank_pad = max(rank, 1)
+    if rank == 0:
+        u = jnp.zeros((l, m, 1), x.dtype)
+        v = jnp.zeros((l, 1, n), x.dtype)
+
+    grid = (l, t_dim // bt, m // bm, nk)
+    kernel = functools.partial(
+        _kernel_lanes, bits=bits, group=group, offs=offs, nk=nk, rank=rank)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bk), lambda h, i, j, k: (h, i, k)),   # x
+            pl.BlockSpec((1, bm, bpk), lambda h, i, j, k: (h, j, k)),  # packed
+            pl.BlockSpec((1, bm, bk // group, 1),
+                         lambda h, i, j, k: (h, j, k, 0)),             # scale
+            pl.BlockSpec((1, bm, bk // group, 1),
+                         lambda h, i, j, k: (h, j, k, 0)),             # zp
+            pl.BlockSpec((1, bm, rank_pad), lambda h, i, j, k: (h, j, 0)),
+            pl.BlockSpec((1, rank_pad, bk), lambda h, i, j, k: (h, 0, k)),
+            pl.BlockSpec((1, bk), lambda h, i, j, k: (h, k)),          # asi
+        ],
+        out_specs=pl.BlockSpec((1, bt, bm), lambda h, i, j, k: (h, i, j)),
+        out_shape=jax.ShapeDtypeStruct((l, t_dim, m), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, bm), jnp.float32),        # acc
+            pltpu.VMEM((bt, rank_pad), jnp.float32),  # t
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
         ),
         interpret=interpret,
     )(x, packed2, scale, zp, u, v, act_scale_inv)

@@ -1,7 +1,15 @@
 """Serving launcher: batched generation with optional FLRQ quantization.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --quantize 4 --requests 8 --new-tokens 16
+        --quantize 4 --requests 8 --new-tokens 16 --backend auto
+
+``--backend`` selects the quantized-matmul execution path (see
+``quant.apply``): "ref" (pure jnp), "fused" (Pallas kernel; interpret mode
+off-TPU), or "auto" (kernel on TPU when supported, ref elsewhere). The
+dispatch report printed after generation shows which path each tensor
+config actually took — bits=3 and other kernel-unsupported configs fall
+back to ref *visibly*. ``--no-scan`` unrolls the layer stack (L per-layer
+dispatches per step) instead of the default single scanned layer body.
 """
 from __future__ import annotations
 
@@ -15,6 +23,7 @@ from ..configs import get_config, get_smoke_config
 from ..core.flrq import FLRQConfig
 from ..data.pipeline import DataConfig, SyntheticCorpus
 from ..models import LM
+from ..quant.apply import BACKENDS, dispatch_report
 from ..quant.stacked import quantize_model_stacked
 from ..serve.engine import Engine, Request, ServeConfig
 
@@ -29,10 +38,21 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--backend", default="auto", choices=list(BACKENDS),
+                    help="quantized-matmul backend (default auto: fused "
+                         "kernel on TPU, jnp reference elsewhere)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the fused kernel in Pallas interpret mode "
+                         "(CPU validation of the kernel path)")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="unroll the layer stack instead of scanning one "
+                         "compiled layer body (A/B reference)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LM(cfg)
+    if args.no_scan:
+        model = model.with_scan(False)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
 
@@ -53,15 +73,19 @@ def main(argv=None):
                     max_new_tokens=args.new_tokens, id=i)
             for i in range(args.requests)]
     eng = Engine(model, params, ServeConfig(
-        max_slots=args.slots, max_seq=args.prompt_len + args.new_tokens + 8))
+        max_slots=args.slots, max_seq=args.prompt_len + args.new_tokens + 8,
+        backend=args.backend, interpret=args.interpret or None))
     t0 = time.time()
     results = eng.generate(reqs)
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
     print(f"{len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
+          f"({toks/dt:.1f} tok/s incl. compile, "
+          f"{'unrolled' if args.no_scan else 'scanned'} layers)")
     for r in results[:3]:
         print(f"  req {r.id}: {r.tokens}")
+    if args.quantize:
+        print(dispatch_report())
     return 0
 
 

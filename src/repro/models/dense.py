@@ -9,6 +9,14 @@ The stack exposes three entry points used by ``models.model.LM``:
     init_cache(batch, seq)                -> KV cache pytree
     apply_prefill(layers, x, positions)   -> (hidden, cache)
     apply_decode(layers, x, cache, length)-> (hidden, cache)
+
+Serving with FLRQ weights: ``quantize_model_stacked`` leaves the layer
+stacks as lane-leading QuantizedLinear pytrees, and every entry point here
+``lax.scan``s the layer body straight over them (``cfg.scan_layers``,
+default) — ONE compiled layer body per executable for prefill, decode and
+train alike, quantized or not. ``scan_layers=False`` unrolls into L
+per-layer pytree dispatches (the reference path the serving benchmark
+A/Bs against).
 """
 from __future__ import annotations
 
@@ -161,14 +169,26 @@ class DenseStack:
             fn = remat_wrap(self._layer_full, cfg, static_argnums=(4,))
             return fn(pl, h, positions, idx, causal), None
 
-        if cfg.scan_layers:
-            h, _ = jax.lax.scan(body, x, (layers, jnp.arange(cfg.n_layers)))
-        else:
-            h = x
-            for i in range(cfg.n_layers):
-                pl = jax.tree.map(lambda a: a[i], layers)
-                h, _ = body(h, (pl, jnp.int32(i)))
+        h, _ = self._run_layers(
+            body, x, (layers, jnp.arange(cfg.n_layers)), cfg.n_layers,
+            cfg.scan_layers)
         return h
+
+    @staticmethod
+    def _run_layers(body, x, xs_all, n_layers: int, scan: bool):
+        """Run the layer ``body`` over the stacked per-layer inputs
+        ``xs_all`` — as ONE compiled body via ``lax.scan`` (``scan=True``;
+        stacked QuantizedLinear leaves slice per lane like any other
+        stacked param), or unrolled into L per-layer pytree dispatches
+        (the pre-runtime reference path, kept for A/B benchmarking)."""
+        if scan:
+            return jax.lax.scan(body, x, xs_all)
+        h = x
+        ys = []
+        for i in range(n_layers):
+            h, y = body(h, jax.tree.map(lambda a: a[i], xs_all))
+            ys.append(y)
+        return h, jax.tree.map(lambda *a: jnp.stack(a), *ys)
 
     # ------------------------------------------------------------- prefill
     def apply_prefill(self, layers, x, positions):
@@ -191,7 +211,9 @@ class DenseStack:
             h = h + self._ffn(pl, h)
             return constrain(h, _SPEC_BSD), (k, v)
 
-        h, (ks, vs) = jax.lax.scan(body, x, (layers, jnp.arange(cfg.n_layers)))
+        h, (ks, vs) = self._run_layers(
+            body, x, (layers, jnp.arange(cfg.n_layers)), cfg.n_layers,
+            cfg.scan_layers)
         cache = {"k": ks, "v": vs}
         return h, cache
 
@@ -271,10 +293,12 @@ class DenseStack:
             return h, (k_l, v_l)
 
         if cfg.kv_cache_bits == 8:
-            h, (ks, vs, kss, vss) = jax.lax.scan(
+            h, (ks, vs, kss, vss) = self._run_layers(
                 body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
-                          cache["v"], cache["k_scale"], cache["v_scale"]))
+                          cache["v"], cache["k_scale"], cache["v_scale"]),
+                cfg.n_layers, cfg.scan_layers)
             return h, {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
-        h, (ks, vs) = jax.lax.scan(
-            body, x, (layers, jnp.arange(cfg.n_layers), cache["k"], cache["v"]))
+        h, (ks, vs) = self._run_layers(
+            body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                      cache["v"]), cfg.n_layers, cfg.scan_layers)
         return h, {"k": ks, "v": vs}

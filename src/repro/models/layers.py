@@ -47,15 +47,18 @@ def mm(x, w):
     """Matmul dispatching on the weight type. Model weights use the
     (in, out) convention; an FLRQ-quantized weight is a QuantizedLinear
     holding the transposed (out=m, in=n) decomposition and routes through
-    the dequant + low-rank path (Pallas-fused on TPU):
+    the quant backend-dispatch layer (``quant.apply.dispatch``):
         y = deq(W_q)·(α⁻¹⊙x) + U(V·(α⁻¹⊙x))
+    The active backend ("ref" jnp path, "fused" Pallas kernel, or "auto")
+    is installed by ``quant.apply.backend_scope`` — the serving engine
+    wraps its jitted prefill/decode so the whole trace follows one policy.
     """
     from ..quant.qtensor import QuantizedLinear
 
     if isinstance(w, QuantizedLinear):
-        from ..quant.apply import apply_lowrank_separate
+        from ..quant.apply import dispatch
 
-        return apply_lowrank_separate(w, x, out_dtype=x.dtype)
+        return dispatch(w, x, out_dtype=x.dtype)
     return x @ w
 
 

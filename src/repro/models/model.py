@@ -17,6 +17,7 @@ Batches:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional
 
 import jax
@@ -41,9 +42,22 @@ _SPEC_LOGITS = P(("pod", "data"), None, "model")
 
 
 class LM:
+    """``params`` may hold plain stacked weights or the quantized serving
+    tree from ``quant.stacked.quantize_model_stacked`` — stacked
+    QuantizedLinear leaves ride the same ``lax.scan`` over layers as dense
+    weights (one compiled layer body per prefill/decode executable), with
+    each matmul routed through the quant backend-dispatch layer
+    (``quant.apply``)."""
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.stack = _STACKS[cfg.family](cfg)
+
+    def with_scan(self, scan_layers: bool) -> "LM":
+        """Same model with scan-over-layers toggled. ``False`` unrolls the
+        stack into L per-layer pytree dispatches per step — the reference
+        execution the serving benchmark A/Bs the scanned runtime against."""
+        return LM(dataclasses.replace(self.cfg, scan_layers=scan_layers))
 
     # ------------------------------------------------------------------ init
     def init(self, key):

@@ -1,3 +1,25 @@
-"""Quantized-weight runtime representation (packing, pytree, apply)."""
-from .qtensor import QuantizedLinear, from_parts, dequantize  # noqa: F401
-from .apply import apply, apply_lowrank_separate, apply_kernel  # noqa: F401
+"""Quantized-weight runtime representation (packing, pytree, apply) and the
+serving backend-dispatch layer (ref | fused | auto)."""
+from .qtensor import (  # noqa: F401
+    QuantizedLinear,
+    from_parts,
+    dequantize,
+    is_stacked,
+    lane,
+    num_lanes,
+    stack_qtensors,
+)
+from .apply import (  # noqa: F401
+    BACKENDS,
+    BackendDecision,
+    apply,
+    apply_kernel,
+    apply_lowrank_separate,
+    backend_scope,
+    clear_dispatch_log,
+    dispatch,
+    dispatch_log,
+    dispatch_report,
+    kernel_supported,
+    resolve_backend,
+)

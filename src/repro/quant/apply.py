@@ -1,20 +1,48 @@
 """Applying a QuantizedLinear: y = deq(W_q)·xs + U(V·xs), xs = α⁻¹⊙x.
 
-Two paths:
-  * ``apply``        — pure-jnp reference (used everywhere on CPU and as the
-    oracle for the Pallas kernel).
-  * ``apply_kernel`` — routes to the fused Pallas kernel
-    (``repro.kernels.ops.quant_matmul``) on TPU; falls back to ``apply``
-    when the kernel doesn't support the configuration.
+Execution backends (the serving runtime's dispatch layer):
+
+  * ``"ref"``   — pure-jnp low-rank-separate path (``apply_lowrank_separate``):
+    the FLOP/byte structure of the fused kernel, computed with plain einsums.
+    The numerical oracle, and the fastest choice on CPU.
+  * ``"fused"`` — the Pallas kernel (``repro.kernels.ops.quant_matmul``):
+    packed codes stay uint8 through HBM→VMEM and the low-rank correction
+    rides the same pass. Off-TPU it runs in interpret mode (validation, not
+    speed). Configurations outside kernel support fall back to ``"ref"``
+    and the fallback is *recorded* in the dispatch log — never silent.
+  * ``"auto"``  — ``"fused"`` on a real TPU when the config is supported,
+    ``"ref"`` everywhere else. This is the serving default: bit-identical
+    to the reference path on CPU, kernel-fused on hardware.
+
+Every resolution appends a ``BackendDecision`` to the dispatch log (one
+entry per trace, since decisions are static under jit). ``dispatch_report``
+summarises which tensors hit the kernel and which fell back, and why —
+the bits=3 ref fallback and any shape-constraint miss surface here.
+
+The active backend is either passed explicitly (``dispatch(..., backend=)``)
+or installed for a code region with ``backend_scope`` — the serving engine
+wraps its jitted prefill/decode in a scope so the whole model traces under
+one policy (see ``serve.engine.Engine``).
 
 Convention: x has shape (..., n) and the result (..., m) — matching
 ``x @ W.T`` for a (m=out, n=in) weight.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
 import jax.numpy as jnp
 
-from .qtensor import QuantizedLinear, dequantize
+from .qtensor import QuantizedLinear, dequantize, is_stacked
+
+BACKENDS = ("ref", "fused", "auto")
+
+# Kernel support envelope (mirrors kernels/quant_matmul.py constraints).
+_KERNEL_BITS = (2, 4, 8)
+_KERNEL_MAX_RANK = 128  # U tile must stay VMEM-resident across the k sweep
 
 
 def apply(qt: QuantizedLinear, x, out_dtype=None):
@@ -26,9 +54,16 @@ def apply(qt: QuantizedLinear, x, out_dtype=None):
 
 def apply_lowrank_separate(qt: QuantizedLinear, x, out_dtype=None):
     """Serving-shaped computation: never materializes deq + UV together.
-    This is the FLOP/byte structure the fused kernel implements."""
+    This is the FLOP/byte structure the fused kernel implements. Accepts
+    stacked (lane-leading) tensors with x carrying matching lane dims."""
     out_dtype = out_dtype or x.dtype
     from .qtensor import dequantize_qpart
+
+    if is_stacked(qt):
+        # (L, ..., n) inputs against an (L,)-stacked tensor: one lane each.
+        return jax.vmap(
+            lambda q, xl: apply_lowrank_separate(q, xl, out_dtype=out_dtype)
+        )(qt, x)
 
     xs = x.astype(jnp.float32) * qt.act_scale_inv.astype(jnp.float32)
     wq = dequantize_qpart(qt, dtype=jnp.float32)
@@ -44,3 +79,150 @@ def apply_kernel(qt: QuantizedLinear, x, out_dtype=None, interpret: bool = False
     from ..kernels import ops as kernel_ops
 
     return kernel_ops.quant_matmul(qt, x, out_dtype=out_dtype, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendDecision:
+    """One trace-time routing decision: which path served a QuantizedLinear."""
+    requested: str          # what the caller asked for ("ref"/"fused"/"auto")
+    chosen: str             # "ref" | "fused" | "fused-interpret"
+    reason: str             # why (support miss, platform, explicit request)
+    shape: Tuple[int, int]  # (m, n) of the tensor
+    bits: int
+
+
+_DISPATCH_LOG: List[BackendDecision] = []
+
+
+def clear_dispatch_log() -> None:
+    _DISPATCH_LOG.clear()
+
+
+def dispatch_log() -> List[BackendDecision]:
+    """Decisions recorded since the last clear (one per traced config —
+    jit caches traces, so steady-state serving adds nothing)."""
+    return list(_DISPATCH_LOG)
+
+
+def dispatch_report() -> str:
+    """Human-readable summary of the routing decisions (the launcher prints
+    this after building the engine so fallbacks are never silent)."""
+    if not _DISPATCH_LOG:
+        return "quant-matmul dispatch: no quantized matmuls traced"
+    lines = ["quant-matmul dispatch:"]
+    seen = set()
+    for d in _DISPATCH_LOG:
+        key = (d.requested, d.chosen, d.reason, d.shape, d.bits)
+        if key in seen:
+            continue
+        seen.add(key)
+        lines.append(f"  ({d.shape[0]}x{d.shape[1]}, w{d.bits}) "
+                     f"{d.requested} -> {d.chosen}: {d.reason}")
+    return "\n".join(lines)
+
+
+def kernel_supported(qt: QuantizedLinear) -> Tuple[bool, str]:
+    """Static support check for the fused kernel on this QuantizedLinear
+    (per-config, not per-call: everything here is trace-time metadata)."""
+    if qt.bits not in _KERNEL_BITS:
+        return False, (f"bits={qt.bits} has no packed-unpack path in the "
+                       f"kernel (supported: {_KERNEL_BITS})")
+    if qt.n % qt.group_size != 0:
+        return False, f"n={qt.n} not divisible by group={qt.group_size}"
+    bk = min(512, qt.n)
+    if bk % qt.group_size != 0 or qt.n % bk != 0:
+        return False, (f"n={qt.n} not tileable into group-aligned k-blocks "
+                       f"(group={qt.group_size})")
+    if qt.m > 128 and qt.m % 128 != 0:
+        return False, f"m={qt.m} > 128 and not a multiple of the 128 m-block"
+    if qt.rank > _KERNEL_MAX_RANK:
+        return False, (f"rank={qt.rank} > {_KERNEL_MAX_RANK}: U tile would "
+                       f"not stay VMEM-resident")
+    return True, "supported"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(
+    requested: str,
+    qt: QuantizedLinear,
+    interpret: Optional[bool] = None,
+) -> Tuple[str, str]:
+    """(chosen, reason) for one QuantizedLinear under ``requested`` policy.
+    ``chosen`` is "ref", "fused" or "fused-interpret"."""
+    if requested not in BACKENDS:
+        raise ValueError(f"backend={requested!r} not in {BACKENDS}")
+    if requested == "ref":
+        return "ref", "explicitly requested"
+    ok, why = kernel_supported(qt)
+    if not ok:
+        return "ref", f"fused unsupported for this config: {why}"
+    run_interpret = (not _on_tpu()) if interpret is None else interpret
+    if requested == "fused":
+        if run_interpret:
+            return "fused-interpret", ("requested fused; interpret mode "
+                                       "(no TPU backend)")
+        if not _on_tpu():
+            # interpret explicitly disabled but no TPU to lower for — a
+            # real pallas_call would die at lowering; serve ref instead
+            # and say so.
+            return "ref", (f"fused with interpret=False on "
+                           f"{jax.default_backend()}: real kernel needs "
+                           f"a TPU")
+        return "fused", "requested fused"
+    # auto: the kernel only wins on real hardware — interpret mode is a
+    # validation tool, orders of magnitude slower than the jnp reference.
+    if _on_tpu():
+        return "fused", "auto: TPU available and config supported"
+    if interpret:
+        return "fused-interpret", "auto with interpret forced"
+    return "ref", (f"auto on {jax.default_backend()}: fused kernel needs a "
+                   f"TPU (interpret mode is validation-only)")
+
+
+_ACTIVE: List[Tuple[str, Optional[bool]]] = [("ref", None)]
+
+
+@contextlib.contextmanager
+def backend_scope(backend: str, interpret: Optional[bool] = None):
+    """Install ``backend`` as the active policy for quantized matmuls traced
+    inside the scope (``models.layers.mm`` reads it). Decisions are made at
+    trace time, so wrap the *tracing* of a jitted function — the serving
+    engine does this for its prefill/decode executables."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend={backend!r} not in {BACKENDS}")
+    _ACTIVE.append((backend, interpret))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def active_backend() -> str:
+    return _ACTIVE[-1][0]
+
+
+def dispatch(qt: QuantizedLinear, x, out_dtype=None,
+             backend: Optional[str] = None,
+             interpret: Optional[bool] = None):
+    """Route one quantized matmul through the active (or given) backend,
+    recording the decision. This is THE serving entry point — everything
+    from ``models.layers.mm`` down lands here."""
+    scope_backend, scope_interp = _ACTIVE[-1]
+    requested = backend or scope_backend
+    if interpret is None:
+        interpret = scope_interp
+    chosen, reason = resolve_backend(requested, qt, interpret)
+    _DISPATCH_LOG.append(BackendDecision(
+        requested=requested, chosen=chosen, reason=reason,
+        shape=(qt.m, qt.n), bits=qt.bits))
+    if chosen == "ref":
+        return apply_lowrank_separate(qt, x, out_dtype=out_dtype)
+    return apply_kernel(qt, x, out_dtype=out_dtype,
+                        interpret=(chosen == "fused-interpret"))

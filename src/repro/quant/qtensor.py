@@ -44,7 +44,9 @@ class QuantizedLinear:
 
     @property
     def rank(self) -> int:
-        return self.u.shape[1]
+        # last axis, not [1]: stacked (lane-leading) tensors carry u as
+        # (..., m, r) and must report r, not m
+        return self.u.shape[-1]
 
     # --- storage accounting (paper Eq. 9 / Tables 3, 19-20) ----------------
     def storage_bits(self) -> int:
@@ -55,6 +57,82 @@ class QuantizedLinear:
     def extra_avg_bits(self) -> float:
         """Average extra bits per weight from the low-rank factors."""
         return extra_avg_bits(self.rank, self.m, self.n)
+
+
+# ---------------------------------------------------------------------------
+# Stacked (lane-leading) QuantizedLinear: the serving layout.
+#
+# ``quantize_model_stacked`` emits one QuantizedLinear per weight *family*
+# with every per-layer tensor stacked on a leading lane dim (L, ...) —
+# exactly the shape ``lax.scan`` slices per layer in the transformer stacks,
+# so the stacked form survives from the quantizer all the way into the
+# scanned decode step without ever being split into per-layer pytrees.
+# ---------------------------------------------------------------------------
+
+def is_stacked(qt: QuantizedLinear) -> bool:
+    """True when ``qt`` carries leading lane dims (packed is (..., m, ng, pg)
+    with at least one extra axis). A per-layer tensor — what a scan body or
+    ``lane`` yields — has a 3-D packed buffer."""
+    return qt.packed.ndim > 3
+
+
+def num_lanes(qt: QuantizedLinear) -> int:
+    """Product of the leading lane dims (1 for an unstacked tensor)."""
+    lanes = 1
+    for d in qt.packed.shape[:-3]:
+        lanes *= d
+    return lanes
+
+
+def lane(qt: QuantizedLinear, i) -> QuantizedLinear:
+    """Index one lane out of a stacked QuantizedLinear — the explicit form
+    of what ``lax.scan`` does implicitly when scanning a layer stack
+    (``i`` may be a traced index; static metadata is untouched)."""
+    if not is_stacked(qt):
+        raise ValueError("lane() on an unstacked QuantizedLinear")
+    take = lambda a: a[i]
+    return dataclasses.replace(
+        qt, packed=take(qt.packed), scale=take(qt.scale), zp=take(qt.zp),
+        u=take(qt.u), v=take(qt.v), act_scale_inv=take(qt.act_scale_inv))
+
+
+def stack_qtensors(qts) -> QuantizedLinear:
+    """Stack per-layer QuantizedLinear tensors into the lane-leading serving
+    form. Ranks are zero-padded to the stack max (zero U columns / V rows
+    are numerically inert; storage accounting keeps true per-layer ranks in
+    LayerStats). All members must share the quant config and logical shape."""
+    qts = list(qts)
+    if not qts:
+        raise ValueError("stack_qtensors of an empty sequence")
+    q0 = qts[0]
+    for q in qts[1:]:
+        if (q.bits, q.group_size, q.symmetric, q.m, q.n) != (
+                q0.bits, q0.group_size, q0.symmetric, q0.m, q0.n):
+            raise ValueError(
+                "stack_qtensors needs uniform (bits, group, symmetric, m, n); "
+                f"got {(q.bits, q.group_size, q.symmetric, q.m, q.n)} vs "
+                f"{(q0.bits, q0.group_size, q0.symmetric, q0.m, q0.n)}")
+    rmax = max(max(q.rank for q in qts), 1)
+
+    def pad_u(q):
+        u = q.u.astype(jnp.float32)
+        return jnp.pad(u, ((0, 0), (0, rmax - u.shape[1])))
+
+    def pad_v(q):
+        v = q.v.astype(jnp.float32)
+        return jnp.pad(v, ((0, rmax - v.shape[0]), (0, 0)))
+
+    store_dtype = q0.u.dtype
+    return QuantizedLinear(
+        packed=jnp.stack([q.packed for q in qts]),
+        scale=jnp.stack([q.scale for q in qts]),
+        zp=jnp.stack([q.zp for q in qts]),
+        u=jnp.stack([pad_u(q) for q in qts]).astype(store_dtype),
+        v=jnp.stack([pad_v(q) for q in qts]).astype(store_dtype),
+        act_scale_inv=jnp.stack([q.act_scale_inv for q in qts]),
+        bits=q0.bits, group_size=q0.group_size, symmetric=q0.symmetric,
+        m=q0.m, n=q0.n,
+    )
 
 
 def slice_stack(qt: QuantizedLinear, start: int, stop: int,

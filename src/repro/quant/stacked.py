@@ -46,7 +46,6 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.flrq import (
     FLRQConfig,
@@ -73,31 +72,6 @@ def should_quantize(path: str, shape) -> bool:
         return False
     a, b = shape[-2], shape[-1]
     return a >= 128 and b >= 128 and a % 128 == 0
-
-
-def _stack_qts(qts, store_dtype):
-    """Pad ranks to max and stack a list of per-layer QuantizedLinear."""
-    rmax = max(max(q.rank for q in qts), 1)
-
-    def pad_u(q):
-        u = np.asarray(q.u.astype(jnp.float32))
-        return np.pad(u, ((0, 0), (0, rmax - u.shape[1])))
-
-    def pad_v(q):
-        v = np.asarray(q.v.astype(jnp.float32))
-        return np.pad(v, ((0, rmax - v.shape[0]), (0, 0)))
-
-    q0 = qts[0]
-    return QuantizedLinear(
-        packed=jnp.stack([q.packed for q in qts]),
-        scale=jnp.stack([q.scale for q in qts]),
-        zp=jnp.stack([q.zp for q in qts]),
-        u=jnp.asarray(np.stack([pad_u(q) for q in qts])).astype(store_dtype),
-        v=jnp.asarray(np.stack([pad_v(q) for q in qts])).astype(store_dtype),
-        act_scale_inv=jnp.stack([q.act_scale_inv for q in qts]),
-        bits=q0.bits, group_size=q0.group_size, symmetric=q0.symmetric,
-        m=q0.m, n=q0.n,
-    )
 
 
 def _restack_lead(stacked: QuantizedLinear, lead) -> QuantizedLinear:
@@ -221,8 +195,12 @@ def _quantize_batched(params, calib_acts, cfg: FLRQConfig, progress,
         group = groups[gk]
         if len(group) == 1:
             e = group[0]
+            # donate=True: w_stack() is this launch's private transposed
+            # copy — donating it lets XLA recycle the one transient that
+            # doubles the model footprint during quantization.
             qt, lst = quantize_stack(e.w_stack(), e.xc, cfg, name=e.path,
-                                     keys=e.keys, mesh=mesh, axis=axis)
+                                     keys=e.keys, mesh=mesh, axis=axis,
+                                     donate=True)
             results[e.path] = qt
             stats[e.path] = lst
             report(e.path)
@@ -233,7 +211,8 @@ def _quantize_batched(params, calib_acts, cfg: FLRQConfig, progress,
         x_cat = _group_calib(group)
         fused_name = "+".join(e.path for e in group)
         qt, lst = quantize_stack(w_cat, x_cat, cfg, name=fused_name,
-                                 keys=keys_cat, mesh=mesh, axis=axis)
+                                 keys=keys_cat, mesh=mesh, axis=axis,
+                                 donate=True)
         off = 0
         for e in group:
             L = e.lanes
@@ -307,7 +286,7 @@ def quantize_model_stacked(
             lstats.append(st)
             if progress:
                 progress(f"{pstr}[{i}]", st)
-        stacked = _stack_qts(qts, cfg.store_dtype)
+        stacked = qtensor.stack_qtensors(qts)
         stats[pstr] = lstats
         if len(lead) == 2:  # MoE (L, E, ...) — restack leading dims
             stacked = _restack_lead(stacked, lead)

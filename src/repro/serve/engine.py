@@ -7,10 +7,14 @@ step advances all active slots by one token. Fixed shapes keep a single
 compiled executable for the whole serving lifetime (no recompiles at scale).
 
 Quantized serving: pass ``params`` whose matrices are QuantizedLinear
-(from ``core.flrq.quantize_model``) — the model stacks route matmuls
-through the low-rank-corrected dequant path automatically (see
-``models.layers.mm``), matching the paper's fused-kernel deployment
-(Fig. 3): y = deq(W_q)·x + U(V·x).
+(from ``quant.stacked.quantize_model_stacked``) — the stacked tensors ride
+``lax.scan`` through the layer body (one compiled body per executable) and
+every quantized matmul routes through the backend-dispatch layer
+(``quant.apply``): ``ServeConfig.backend`` picks the pure-jnp reference
+("ref"), the fused Pallas kernel ("fused"; the paper's Fig. 3 deployment
+y = deq(W_q)·x + U(V·x)), or "auto" (kernel on TPU when supported, ref
+elsewhere — bit-identical to ref off-TPU). Fallback decisions are recorded
+in ``quant.apply.dispatch_log`` — never silent.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import LM
+from ..quant.apply import backend_scope
 
 
 @dataclasses.dataclass
@@ -31,6 +36,9 @@ class ServeConfig:
     max_seq: int = 1024         # cache capacity per slot
     eos_token: int = 1
     temperature: float = 0.0    # 0 = greedy
+    backend: str = "auto"       # quantized-matmul backend: ref|fused|auto
+    interpret: Optional[bool] = None  # force Pallas interpret (CPU testing)
+    donate_cache: Optional[bool] = None  # None: donate where XLA supports it
 
 
 @dataclasses.dataclass
@@ -53,8 +61,28 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(model.prefill)
+
+        # The backend scope lives INSIDE the jitted callables so the policy
+        # binds at trace time; each Engine owns its wrappers (and therefore
+        # its trace cache), so two engines with different backends coexist.
+        def prefill(p, toks):
+            with backend_scope(cfg.backend, cfg.interpret):
+                return model.prefill(p, toks)
+
+        def decode(p, tok, cache, length):
+            with backend_scope(cfg.backend, cfg.interpret):
+                return model.decode_step(p, tok, cache, length)
+
+        # Donate the decode cache: each step's cache update then reuses the
+        # previous step's buffers instead of allocating a second full-size
+        # KV cache (the decode-memory floor at long context). XLA:CPU
+        # ignores donation with a warning, so default it off there.
+        donate = cfg.donate_cache
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self._decode = jax.jit(decode, donate_argnums=(2,)) if donate \
+            else jax.jit(decode)
+        self._prefill = jax.jit(prefill)
 
     # -------------------------------------------------------------- serving
     def generate(self, requests: List[Request]) -> List[Result]:

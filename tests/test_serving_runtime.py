@@ -1,0 +1,336 @@
+"""The quantized serving runtime: backend dispatch (ref|fused|auto),
+T-block selection for decode-shaped kernel calls, the lane-stacked kernel,
+scan-over-stacked-layers decode, end-to-end engine parity, and weight-stack
+donation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_PROXIES
+from repro.core.flrq import FLRQConfig, quantize_matrix, quantize_stack
+from repro.kernels import ops, ref
+from repro.models import LM
+from repro.quant import qtensor
+from repro.quant.apply import (
+    apply_lowrank_separate,
+    backend_scope,
+    clear_dispatch_log,
+    dispatch,
+    dispatch_log,
+    dispatch_report,
+    kernel_supported,
+    resolve_backend,
+)
+from repro.quant.stacked import quantize_model_stacked
+from repro.serve.engine import Engine, Request, ServeConfig
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    base = dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+                head_dim=32, d_ff=256, vocab=256, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+@pytest.fixture(scope="module")
+def tiny_quantized(key):
+    model = LM(_tiny_cfg())
+    params = model.init(key)
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=4, blc_epochs=1, max_rank=8))
+    return model, params, qparams
+
+
+@pytest.fixture(scope="module")
+def qt_w4(key):
+    w = jax.random.normal(key, (128, 256)) * 0.05
+    qt, _ = quantize_matrix(w, None, FLRQConfig(bits=4, blc_epochs=1,
+                                                max_rank=8), key)
+    return qt
+
+
+# ------------------------------------------------------- T-block selection
+def test_t_blocking_selection():
+    """bt must divide padded T and stay sublane-aligned (8) — the seed bug
+    computed bt and never passed it, so decode-shaped T took whatever
+    min(128, T) degenerate block the kernel defaulted to."""
+    assert ops._t_blocking(1) == (8, 8)
+    assert ops._t_blocking(7) == (8, 8)
+    assert ops._t_blocking(8) == (8, 8)
+    assert ops._t_blocking(100) == (104, 104)
+    assert ops._t_blocking(128) == (128, 128)
+    assert ops._t_blocking(200) == (128, 256)
+
+
+@pytest.mark.parametrize("t", [1, 7, 8, 200])
+def test_quant_matmul_small_t(qt_w4, t):
+    """Decode-shaped (T=slots) and padded-T calls hit the kernel and match
+    the oracle exactly at every regime boundary."""
+    x = jax.random.normal(jax.random.PRNGKey(t), (t, 256))
+    y = ops.quant_matmul(qt_w4, x, interpret=True)
+    y_r = ref.quant_matmul_ref(x, qt_w4.packed, qt_w4.scale, qt_w4.zp,
+                               qt_w4.u, qt_w4.v, qt_w4.act_scale_inv, bits=4)
+    assert y.shape == (t, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_decode_shape(qt_w4):
+    """(slots, 1, n) — the engine's decode call shape — routes through the
+    kernel with lead dims preserved."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 1, 256))
+    y = ops.quant_matmul(qt_w4, x, interpret=True)
+    y_r = apply_lowrank_separate(qt_w4, x)
+    assert y.shape == (4, 1, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------ lane-stacked kernel
+@pytest.mark.parametrize("bits", [4, 8])
+def test_lane_stacked_kernel_matches_ref(bits, key):
+    ws = jax.random.normal(key, (3, 128, 256)) * 0.05
+    qts, _ = quantize_stack(ws, None, FLRQConfig(bits=bits, blc_epochs=1,
+                                                 max_rank=8), key=key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 256))
+    y = ops.quant_matmul(qts, x, interpret=True)
+    y_r = apply_lowrank_separate(qts, x)  # vmapped jnp oracle
+    assert y.shape == (3, 5, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lane_stacked_kernel_bits3_ref_fallback(key):
+    ws = jax.random.normal(key, (2, 128, 256)) * 0.05
+    qts, _ = quantize_stack(ws, None, FLRQConfig(bits=3, blc_epochs=1,
+                                                 max_rank=4), key=key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 256))
+    y = ops.quant_matmul(qts, x, interpret=True)
+    y_r = apply_lowrank_separate(qts, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stack_qtensors_lane_roundtrip(key):
+    ws = jax.random.normal(key, (4, 128, 256)) * 0.05
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    per_layer = []
+    for i in range(4):
+        qt, _ = quantize_matrix(ws[i], None, cfg, jax.random.PRNGKey(i))
+        per_layer.append(qt)
+    stacked = qtensor.stack_qtensors(per_layer)
+    assert qtensor.is_stacked(stacked) and qtensor.num_lanes(stacked) == 4
+    assert not qtensor.is_stacked(per_layer[0])
+    x = jax.random.normal(jax.random.PRNGKey(9), (6, 256))
+    for i in range(4):
+        li = qtensor.lane(stacked, i)
+        y_lane = apply_lowrank_separate(li, x)
+        y_orig = apply_lowrank_separate(per_layer[i], x)
+        np.testing.assert_allclose(np.asarray(y_lane, np.float32),
+                                   np.asarray(y_orig, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    # slice_stack of the full range is the identity on lanes
+    sl = qtensor.slice_stack(stacked, 1, 3)
+    np.testing.assert_array_equal(np.asarray(sl.packed),
+                                  np.asarray(stacked.packed[1:3]))
+
+
+# --------------------------------------------------------- backend dispatch
+def test_kernel_supported_envelope(qt_w4):
+    ok, _ = kernel_supported(qt_w4)
+    assert ok
+    bad_rank = dataclasses.replace(
+        qt_w4, u=jnp.zeros((128, 200), jnp.bfloat16),
+        v=jnp.zeros((200, 256), jnp.bfloat16))
+    ok, why = kernel_supported(bad_rank)
+    assert not ok and "rank" in why
+    bad_m = dataclasses.replace(qt_w4, m=200)
+    ok, why = kernel_supported(bad_m)
+    assert not ok and "m=200" in why
+
+
+def test_bits3_fused_fallback_is_surfaced(key):
+    """bits=3 routes to the jnp reference inside the fused path — the
+    dispatch report must SAY so (the seed buried it in kernels.ops)."""
+    w = jax.random.normal(key, (128, 256)) * 0.05
+    qt3, _ = quantize_matrix(w, None, FLRQConfig(bits=3, blc_epochs=1,
+                                                 max_rank=4), key)
+    x = jax.random.normal(key, (4, 256))
+    clear_dispatch_log()
+    y = dispatch(qt3, x, backend="fused")
+    log = dispatch_log()
+    assert len(log) == 1
+    d = log[0]
+    assert d.requested == "fused" and d.chosen == "ref"
+    assert "bits=3" in d.reason
+    assert "bits=3" in dispatch_report()
+    y_r = apply_lowrank_separate(qt3, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_auto_backend_off_tpu_is_ref(qt_w4):
+    chosen, reason = resolve_backend("auto", qt_w4)
+    if jax.default_backend() == "tpu":
+        assert chosen == "fused"
+    else:
+        assert chosen == "ref" and "TPU" in reason
+
+
+def test_fused_interpret_false_off_tpu_falls_back(qt_w4):
+    """fused + interpret explicitly disabled must not hand a real TPU
+    pallas_call to a CPU lowering — it serves ref and says why."""
+    chosen, reason = resolve_backend("fused", qt_w4, interpret=False)
+    if jax.default_backend() == "tpu":
+        assert chosen == "fused"
+    else:
+        assert chosen == "ref" and "TPU" in reason
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 256))
+    y = dispatch(qt_w4, x, backend="fused", interpret=False)  # must not raise
+    y_r = apply_lowrank_separate(qt_w4, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_stacked_rank_property(key):
+    """Stacked tensors report the padded rank (u's LAST axis), not m —
+    kernel_supported on a stack must not misclassify on a bogus rank."""
+    ws = jax.random.normal(key, (2, 256, 256)) * 0.05
+    qts, _ = quantize_stack(ws, None, FLRQConfig(bits=4, blc_epochs=1,
+                                                 max_rank=8), key=key)
+    assert qts.rank <= 8
+    ok, why = kernel_supported(qts)
+    assert ok, why
+
+
+def test_backend_scope_controls_mm(qt_w4):
+    from repro.models.layers import mm
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 256))
+    clear_dispatch_log()
+    with backend_scope("fused", interpret=True):
+        y_f = mm(x, qt_w4)
+    with backend_scope("ref"):
+        y_r = mm(x, qt_w4)
+    chosen = [d.chosen for d in dispatch_log()]
+    assert chosen == ["fused-interpret", "ref"]
+    np.testing.assert_allclose(np.asarray(y_f, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------- scan-over-stacked decode
+def test_scanned_decode_compiles_one_layer_body(tiny_quantized):
+    """The scanned decode jaxpr carries ONE layer body (a single scan over
+    the stacked quantized weights); the unrolled variant re-emits the body
+    per layer. Verified on the traced jaxpr, not by convention."""
+    model, _, qparams = tiny_quantized
+    b, s = 2, 32
+    cache = model.init_cache(b, s)
+    tok = jnp.ones((b, 1), jnp.int32)
+    length = jnp.int32(4)
+
+    def count_dots(m, q):
+        jaxpr = jax.make_jaxpr(m.decode_step)(q, tok, cache, length)
+        txt = str(jaxpr)
+        return txt.count("dot_general"), txt.count("scan")
+
+    dots_scan, scans = count_dots(model, qparams)
+    dots_unroll, _ = count_dots(model.with_scan(False), qparams)
+    assert scans >= 1, "scanned decode lost its lax.scan"
+    # L=2 unrolled re-emits the quantized layer body per layer; the scanned
+    # jaxpr contains it once (plus the shared unembed outside the stack).
+    assert dots_unroll > dots_scan * 1.5, (dots_scan, dots_unroll)
+
+
+def test_scan_and_unroll_decode_agree(tiny_quantized):
+    model, _, qparams = tiny_quantized
+    b, s = 2, 32
+    prompts = jnp.asarray(np.arange(2 * 8, dtype=np.int32).reshape(2, 8) % 200 + 2)
+    logits_s, cache_s = model.prefill(qparams, prompts)
+    logits_u, cache_u = model.with_scan(False).prefill(qparams, prompts)
+    # scan vs unroll give XLA different fusion freedom — f32 round-off
+    # only; greedy decisions must be identical
+    np.testing.assert_allclose(np.asarray(logits_s), np.asarray(logits_u),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(logits_s[:, -1]), -1),
+        np.argmax(np.asarray(logits_u[:, -1]), -1))
+    tok = jnp.argmax(logits_s[:, -1], axis=-1).astype(jnp.int32)
+    d_s, _ = model.decode_step(qparams, tok, cache_s, jnp.int32(8))
+    d_u, _ = model.with_scan(False).decode_step(qparams, tok, cache_u,
+                                                jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(d_s), np.asarray(d_u),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------ end-to-end engine
+def _requests(n=3, vocab=256):
+    return [Request(np.arange(5, dtype=np.int32) % (vocab - 2) + 2,
+                    max_new_tokens=4, id=i) for i in range(n)]
+
+
+def test_engine_auto_bitwise_matches_ref(tiny_quantized):
+    """Acceptance: backend="auto" must produce bit-identical tokens to the
+    reference path (off-TPU auto resolves to ref; on TPU this asserts the
+    kernel path agrees)."""
+    model, _, qparams = tiny_quantized
+    scfg = dict(max_slots=2, max_seq=32)
+    toks = {}
+    for be in ("ref", "auto"):
+        eng = Engine(model, qparams, ServeConfig(backend=be, **scfg))
+        toks[be] = [r.tokens for r in eng.generate(_requests())]
+    assert toks["auto"] == toks["ref"]
+
+
+@pytest.mark.parametrize("bits,group", [(4, 128), (8, 64)])
+def test_engine_parity_fused_vs_ref(bits, group, key):
+    """End-to-end serve.Engine parity: fused(interpret) and ref backends
+    produce IDENTICAL tokens through prefill + decode, across bits and
+    group sizes."""
+    model = LM(_tiny_cfg())
+    params = model.init(key)
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=bits, group_size=group, blc_epochs=1,
+                                 max_rank=4))
+    scfg = dict(max_slots=2, max_seq=32)
+    eng_ref = Engine(model, qparams, ServeConfig(backend="ref", **scfg))
+    eng_fused = Engine(model, qparams, ServeConfig(
+        backend="fused", interpret=True, **scfg))
+    reqs = _requests()
+    toks_ref = [r.tokens for r in eng_ref.generate(reqs)]
+    toks_fused = [r.tokens for r in eng_fused.generate(reqs)]
+    assert toks_ref == toks_fused, (bits, group)
+
+
+# --------------------------------------------------------- stack donation
+def test_quantize_stack_donate_bitwise_parity(key):
+    ws = jax.random.normal(key, (3, 128, 256)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 256))
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    for calib in (None, x):
+        q_plain, _ = quantize_stack(jnp.array(ws), calib, cfg, key=key)
+        q_don, _ = quantize_stack(jnp.array(ws), calib, cfg, key=key,
+                                  donate=True)
+        for a, b in zip(jax.tree.leaves(q_plain), jax.tree.leaves(q_don)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_donation_alias_covers_stack():
+    """The donating launch must actually consume the stack: the compiled
+    input→output alias covers the full (L, m, n) f32 slab (multi-partition
+    buffer_donor is audited in benchmarks.memory_sweep)."""
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.memory_sweep import donation_audit
+
+    rep = donation_audit(L=2, m=128, n=256,
+                         cfg=FLRQConfig(bits=4, blc_epochs=1, max_rank=4))
+    if rep["alias_bytes"] is None:
+        pytest.skip("backend exposes no compiled memory analysis")
+    assert rep["alias_bytes"] == rep["stack_bytes"]
