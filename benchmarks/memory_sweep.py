@@ -8,6 +8,11 @@ single-device via an input→output alias covering the full (L, m, n) f32
 slab, multi-partition via the ``jax.buffer_donor`` annotation XLA recycles
 for the clip-grid transients. Both are verified from the compiled/lowered
 artifacts, not assumed.
+
+And the ``layer_chunk`` audit (``run_layer_chunk``): the chunked stack
+driver's per-launch temp allocation vs chunk size K — the compiled-
+artifact evidence that chunking bounds the engine's transient f32
+residuals at (K, m, n). Emitted into the BENCH_quant_time.json trajectory.
 """
 from __future__ import annotations
 
@@ -88,6 +93,57 @@ def run_donation():
     return rep
 
 
+def layer_chunk_audit(L=8, m=512, n=1024, chunks=(1, 2, 4, 8), cfg=None):
+    """Compiled-memory audit of the ``layer_chunk`` lever: per chunk size
+    K, the temp-allocation footprint of the (K, m, n) engine launch — the
+    BLC clip-grid residual transients the ROADMAP flagged at production
+    shapes. The whole-stack launch pays temps ∝ L; a chunked driver pays
+    ceil(L/K) launches each ∝ K. Measured from the compiled artifact, not
+    assumed."""
+    from repro.core.flrq import _quantize_stack_jit, layer_key_chain
+
+    cfg = cfg or FLRQConfig(bits=4, blc_epochs=1, max_rank=16)
+    key = jax.random.PRNGKey(0)
+    w = llm_weight(key, m, n)
+    rep = {}
+    for k_chunk in chunks:
+        ws = jnp.broadcast_to(w, (k_chunk, m, n)) * 1.0
+        keys, _ = layer_key_chain(key, k_chunk)
+        lane_mask = jnp.ones((k_chunk,), bool)
+        xt = jnp.zeros((0, n), jnp.float32)
+        compiled = _quantize_stack_jit.lower(
+            ws, xt, keys, lane_mask, None, cfg=cfg, use_scaling=False,
+            has_calib=False).compile()
+        ma = compiled.memory_analysis()
+        rep[k_chunk] = None if ma is None else int(ma.temp_size_in_bytes)
+    return rep
+
+
+def run_layer_chunk():
+    rep = layer_chunk_audit()
+    import jax as _jax
+    from .quant_time import host_family
+    record = dict(
+        proxy=dict(layer_chunk_audit=[8, 512, 1024]),
+        backend=_jax.default_backend(),
+        host=host_family(),
+    )
+    for k_chunk, temp in rep.items():
+        emit(f"memory_sweep.layer_chunk.K{k_chunk}.temp_bytes",
+             temp if temp is not None else -1,
+             "engine-launch temp allocation at (K, m, n)")
+        if temp is not None:
+            record[f"chunk{k_chunk}_temp_bytes"] = temp
+    vals = [v for v in rep.values() if v is not None]
+    if len(vals) >= 2 and vals[0] < vals[-1]:
+        emit("memory_sweep.layer_chunk.bounded", 1,
+             f"K=1 temps {vals[0]/1e6:.1f}MB vs whole-stack "
+             f"{vals[-1]/1e6:.1f}MB")
+    from .common import emit_bench_json
+    emit_bench_json("quant_time", record)
+    return rep
+
+
 def run():
     key = jax.random.PRNGKey(0)
     # "small model" vs "large model" matrices (paper: 125M vs 13B)
@@ -108,6 +164,7 @@ def run():
             emit(f"memory_sweep.{tag}.w{bits}.monotone", int(mono),
                  "rank grows with x (paper Table 19)")
     run_donation()
+    run_layer_chunk()
 
 
 if __name__ == "__main__":

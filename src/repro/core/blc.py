@@ -19,6 +19,22 @@ skinny GEMMs for the MXU) instead of peeling rank-1 components one scan
 step at a time: same subspace semantics, ~block× fewer passes over the
 residual. ``block=1`` recovers the paper-verbatim rank-1 peel.
 
+The clip search (step 3) is the hottest loop of the whole quantizer and is
+a ONE-PASS grid sweep here: per-group range stats are computed once per
+epoch and every clip ratio is scored as a rescale of them. Backends
+(``clip_backend``):
+  * ``"xla"``    — hoisted jnp path: one ``group_stats`` reduction, then a
+    lax.map over the grid that only pays the round-trip + objective GEMM
+    (the seed recomputed the full reduction per grid point). A Frobenius
+    objective (``x=None``) is scored as Σd² directly — never through the
+    materialized eye(n) batch.
+  * ``"pallas"`` — ``kernels.clip_sweep``: the whole grid's output errors
+    from ONE ``pallas_call`` / one HBM read of W, then one re-quantization
+    at the argmin via ``kernels.group_quant.group_pseudo_quant``. Off-TPU
+    this runs in interpret mode (validation, not speed).
+  * ``"auto"``   — pallas on TPU when the (bits, shape) fit the kernel,
+    XLA everywhere else.
+
 Two drivers:
   * ``blc``          — one (m, n) matrix; one lax.scan over epochs.
   * ``blc_batched``  — a whole (L, m, n) layer stack in ONE jitted program.
@@ -30,13 +46,22 @@ Two drivers:
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .quantize import DEFAULT_CLIP_GRID, QuantSpec, pseudo_quantize, recon_error
+from .quantize import (
+    DEFAULT_CLIP_GRID,
+    QuantSpec,
+    clip_errors_from_stats,
+    group_stats,
+    pseudo_quantize_from_stats,
+    recon_error,
+)
 from .r1_sketch import sketch_lowrank_block, sketch_lowrank_block_masked
+
+CLIP_BACKENDS = ("xla", "pallas", "auto")
 
 
 class BLCResult(NamedTuple):
@@ -48,28 +73,67 @@ class BLCResult(NamedTuple):
     err_trace: jax.Array    # (epochs + 1,) E per epoch (paper Fig. 13)
 
 
-def _best_clip_quant(w_resid, x, spec: QuantSpec, grid):
-    """Quantize w_resid under every clip ratio in grid, return (w_q, clip)
-    minimizing output error against x. Scores all clips first (discarding
-    the candidate matrices) and re-quantizes once at the winner — one extra
-    quant pass instead of materializing a (grid, m, n) stack."""
+def resolve_clip_backend(backend: str, shape, bits: int,
+                         group: int = 128) -> str:
+    """Map a clip-backend choice to a concrete mode: "xla" | "pallas" |
+    "pallas_interpret" (forced Pallas off-TPU). Mirrors
+    ``r1_sketch.resolve_backend``: auto falls back to XLA off-TPU or when
+    the (bits, shape, group) cannot tile the clip-path kernels; forced
+    pallas raises on untileable configs."""
+    if backend not in CLIP_BACKENDS:
+        raise ValueError(f"clip_backend={backend!r} not in {CLIP_BACKENDS}")
+    if backend == "xla":
+        return "xla"
+    from ..kernels.clip_sweep import kernel_shape_ok
+    m, n = int(shape[0]), int(shape[1])
+    if bits not in (2, 4, 8) or not kernel_shape_ok(m, n, group):
+        if backend == "pallas":
+            raise ValueError(
+                f"clip_backend='pallas' but (bits={bits}, shape=({m}, {n}),"
+                f" group={group}) does not fit the clip-sweep kernels; use "
+                "'auto' for fallback")
+        return "xla"
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "pallas":
+        return "pallas" if on_tpu else "pallas_interpret"
+    return "pallas" if on_tpu else "xla"  # auto
 
-    def one(c):
-        wq = pseudo_quantize(w_resid, spec, c)
-        d = (w_resid - wq).astype(jnp.float32)
-        dx = d @ x
-        return jnp.sum(dx * dx)
 
-    errs = jax.lax.map(one, grid)
-    clip = grid[jnp.argmin(errs)]
-    return pseudo_quantize(w_resid, spec, clip), clip
+def _best_clip_quant(w_resid, x, spec: QuantSpec, grid, mode: str = "xla"):
+    """Quantize w_resid under every clip ratio in ``grid`` (a static
+    tuple), return (w_q, clip) minimizing output error against ``x``
+    ((n, b) column batch, or None for the Frobenius objective).
+
+    One-pass sweep: the per-group range reduction runs ONCE for the whole
+    grid (each clip only rescales it), candidate matrices are scored and
+    discarded, and the winner is re-quantized once — on the kernel path the
+    entire grid's errors come from a single ``pallas_call`` over W."""
+    garr = jnp.asarray(grid, jnp.float32)
+    if mode == "xla":
+        stats = group_stats(w_resid, spec)
+        errs = clip_errors_from_stats(w_resid, x, spec, stats, garr)
+        clip = garr[jnp.argmin(errs)]
+        return pseudo_quantize_from_stats(w_resid, stats, spec, clip), clip
+
+    from ..kernels.clip_sweep import clip_sweep_errors
+    from ..kernels.group_quant import group_pseudo_quant
+    interpret = mode == "pallas_interpret"
+    errs = clip_sweep_errors(
+        w_resid, x, clips=grid, bits=spec.bits, group=spec.group_size,
+        symmetric=spec.symmetric, interpret=interpret)
+    clip = garr[jnp.argmin(errs)]
+    # bk matches the sweep's bn so kernel_shape_ok gates both launches
+    wq = group_pseudo_quant(
+        w_resid, clip, bits=spec.bits, group=spec.group_size,
+        symmetric=spec.symmetric, bk=512, interpret=interpret)
+    return wq.astype(w_resid.dtype), clip
 
 
 @partial(jax.jit, static_argnames=("spec", "rank", "epochs", "it", "block",
-                                   "backend"))
+                                   "backend", "clip_grid", "clip_backend"))
 def blc(
     w: jax.Array,
-    x: jax.Array,
+    x: Optional[jax.Array],
     key: jax.Array,
     spec: QuantSpec,
     rank: int,
@@ -78,11 +142,16 @@ def blc(
     block: int = 8,
     clip_grid=DEFAULT_CLIP_GRID,
     backend: str = "xla",
+    clip_backend: str = "xla",
 ) -> BLCResult:
     """Run BLC. ``w``: (m, n) weight (already activation-scaled if scaling is
-    on), ``x``: (n, b) calibration activations in the same scaled space."""
-    x32 = x.astype(jnp.float32)
-    grid = jnp.asarray(clip_grid, jnp.float32)
+    on), ``x``: (n, b) calibration activations in the same scaled space, or
+    None for the Frobenius objective (no-calib quantization — scored
+    directly, never through a materialized eye(n) batch)."""
+    x32 = None if x is None else x.astype(jnp.float32)
+    grid = tuple(float(c) for c in clip_grid)
+    clip_mode = resolve_clip_backend(clip_backend, w.shape, spec.bits,
+                                     spec.group_size)
     keys = jax.random.split(key, epochs + 1)
 
     def sketch(r, k):
@@ -96,7 +165,7 @@ def blc(
         m, n = w.shape
         u0 = jnp.zeros((m, 0), w.dtype)
         v0 = jnp.zeros((0, n), w.dtype)
-    wq0, clip0 = _best_clip_quant(w - u0 @ v0, x32, spec, grid)
+    wq0, clip0 = _best_clip_quant(w - u0 @ v0, x32, spec, grid, clip_mode)
     err0 = recon_error(w, wq0 + u0 @ v0, x32)
 
     def epoch(carry, k):
@@ -107,7 +176,7 @@ def blc(
         if rank > 0:
             u, v = sketch(r, k)
         # (3) re-quantize under a fresh clip search
-        wq, clip = _best_clip_quant(w - u @ v, x32, spec, grid)
+        wq, clip = _best_clip_quant(w - u @ v, x32, spec, grid, clip_mode)
         # (1)/(4) score and keep the best
         err = recon_error(w, wq + u @ v, x32)
         better = err < berr
@@ -128,10 +197,11 @@ def blc(
 
 
 @partial(jax.jit, static_argnames=("spec", "max_rank", "epochs", "it",
-                                   "block", "backend"))
+                                   "block", "backend", "clip_grid",
+                                   "clip_backend"))
 def blc_batched(
     w: jax.Array,
-    x: jax.Array,
+    x: Optional[jax.Array],
     keys: jax.Array,
     spec: QuantSpec,
     ranks: jax.Array,
@@ -141,14 +211,16 @@ def blc_batched(
     block: int = 8,
     clip_grid=DEFAULT_CLIP_GRID,
     backend: str = "xla",
+    clip_backend: str = "xla",
 ) -> BLCResult:
     """BLC for a whole (L, m, n) layer stack in ONE jitted program.
 
     ``x``: the calibration batch — (n, b) shared by every layer of the
     stack (the stacked tensors of one weight family see the same
-    activations), or (L, n, b) *per-layer* objectives (what the same-shape
+    activations), (L, n, b) *per-layer* objectives (what the same-shape
     stack fusion produces when it concatenates weight families that see
-    different activations into one launch).
+    different activations into one launch), or None (Frobenius objective
+    for every layer).
     ``keys``: (L, 2); ``ranks``: (L,) traced per-layer R1-FLR ranks;
     ``max_rank``: static buffer width >= max(ranks).
 
@@ -156,10 +228,12 @@ def blc_batched(
     to ``max_rank`` (columns/rows beyond each layer's rank are exactly
     zero, so downstream packing can slice to the realized max).
     """
-    x32 = x.astype(jnp.float32)
-    grid = jnp.asarray(clip_grid, jnp.float32)
+    x32 = None if x is None else x.astype(jnp.float32)
+    grid = tuple(float(c) for c in clip_grid)
+    clip_mode = resolve_clip_backend(clip_backend, w.shape[1:], spec.bits,
+                                     spec.group_size)
     ranks = jnp.asarray(ranks, jnp.int32)
-    per_lane_x = x32.ndim == 3
+    per_lane_x = x32 is not None and x32.ndim == 3
 
     def one_layer(w_l, x_l, key_l, rank_l):
         ks = jax.random.split(key_l, epochs + 1)
@@ -169,14 +243,16 @@ def blc_batched(
                 r, k, rank_l, max_rank, block=block, it=it, backend=backend)
 
         u0, v0 = sketch(w_l, ks[0])
-        wq0, clip0 = _best_clip_quant(w_l - u0 @ v0, x_l, spec, grid)
+        wq0, clip0 = _best_clip_quant(w_l - u0 @ v0, x_l, spec, grid,
+                                      clip_mode)
         err0 = recon_error(w_l, wq0 + u0 @ v0, x_l)
 
         def epoch(carry, k):
             u, v, wq, clip, best = carry
             bu, bv, bwq, bclip, berr = best
             u, v = sketch(w_l - wq, k)
-            wq, clip = _best_clip_quant(w_l - u @ v, x_l, spec, grid)
+            wq, clip = _best_clip_quant(w_l - u @ v, x_l, spec, grid,
+                                        clip_mode)
             err = recon_error(w_l, wq + u @ v, x_l)
             better = err < berr
             best = (
@@ -194,5 +270,9 @@ def blc_batched(
         trace = jnp.concatenate([jnp.asarray([err0]), errs])
         return BLCResult(bu, bv, bwq, bclip, berr, trace)
 
+    if x32 is None:
+        return jax.vmap(
+            lambda w_l, key_l, rank_l: one_layer(w_l, None, key_l, rank_l)
+        )(w, keys, ranks)
     return jax.vmap(one_layer, in_axes=(0, 0 if per_lane_x else None, 0, 0)
                     )(w, x32, keys, ranks)

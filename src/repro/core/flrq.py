@@ -71,6 +71,7 @@ class FLRQConfig:
     seed: int = 0
     store_dtype: Any = jnp.bfloat16
     backend: str = "xla"         # sketch backend: "xla" | "pallas" | "auto"
+    clip_backend: str = "xla"    # clip-sweep backend: "xla"|"pallas"|"auto"
 
     def flr(self) -> FLRConfig:
         return FLRConfig(
@@ -148,7 +149,7 @@ def _quantize_matrix_once(
     ws = w32 * alpha[None, :]
     xs = (xt / alpha[None, :]).T  # (n, tokens) column-batch in scaled space
     if xs.shape[1] == 0:
-        xs_obj = jnp.eye(n, dtype=jnp.float32)  # Frobenius objective
+        xs_obj = None  # Frobenius objective — scored directly, no eye(n)
     else:
         xs_obj = xs
 
@@ -164,7 +165,7 @@ def _quantize_matrix_once(
         res = _run_blc(
             ws, xs_obj, k_blc, spec, rank,
             epochs=cfg.recommended_blc_epochs(), it=cfg.it,
-            backend=cfg.backend,
+            backend=cfg.backend, clip_backend=cfg.clip_backend,
         )
         u, v, clip = res.u, res.v, res.clip
         wq_deq = res.w_q
@@ -216,9 +217,11 @@ def _quantize_stack_impl(
                           # calibration acts (tokens may be 0)
     keys: jax.Array,      # (L, 2) per-layer PRNG keys
     lane_mask: jax.Array, # (L,) bool; False lanes are shard padding
-    cfg: FLRQConfig,
-    use_scaling: bool,
-    has_calib: bool,
+    x_index=None,         # (L,) int32 — xt is then a (U, tokens, n) stack of
+                          # UNIQUE batches, gathered per lane device-side
+    cfg: FLRQConfig = None,
+    use_scaling: bool = False,
+    has_calib: bool = False,
     return_resid: bool = False,
 ):
     """The whole FLRQ pipeline for a layer stack as ONE device program:
@@ -233,12 +236,17 @@ def _quantize_stack_impl(
 
     ``xt`` with a leading lane dim carries a *per-layer* calibration batch —
     the same-shape stack fusion uses this to concatenate weight families
-    that see different activations (Q/K/V vs O) into one launch.
+    that see different activations (Q/K/V vs O) into one launch. With
+    ``x_index``, ``xt`` holds only the UNIQUE batches (one per fused group
+    member) and each lane gathers its own inside the program — the host
+    never materializes, ships, or shards the ~G·L× broadcast copy.
     """
     L, m, n = w_stack.shape
     spec = cfg.spec()
     w32 = w_stack.astype(jnp.float32)
     xt = xt.astype(jnp.float32)
+    if x_index is not None:
+        xt = xt[x_index]              # (L, tokens, n), device-side gather
     per_lane = xt.ndim == 3
 
     # --- (1) activation scaling --------------------------------------------
@@ -260,7 +268,7 @@ def _quantize_stack_impl(
             xs_obj = (xt / alpha[None, :]).T
             x_err = xt.T                      # unscaled-space error objective
     else:
-        xs_obj = jnp.eye(n, dtype=jnp.float32)  # Frobenius objective
+        xs_obj = None  # Frobenius objective — scored directly, no eye(n)
         x_err = None
         per_lane = False
     x_axis = 0 if per_lane else None
@@ -289,7 +297,7 @@ def _quantize_stack_impl(
         res = _run_blc_batched(
             ws, xs_obj, k_blc, spec, ranks, max_r,
             epochs=cfg.recommended_blc_epochs(), it=cfg.it,
-            backend=cfg.backend,
+            backend=cfg.backend, clip_backend=cfg.clip_backend,
         )
         u, v, clip, err_after = res.u, res.v, res.clip, res.err
     else:
@@ -300,10 +308,15 @@ def _quantize_stack_impl(
             c = search_clip_ratio(resid_l, xs_l, spec)
             return c, pseudo_quantize(resid_l, spec, c)
 
-        clip, wq = jax.vmap(one, in_axes=(0, x_axis))(resid, xs_obj)
-        err_after = jax.vmap(
-            lambda wl, wh, xl: recon_error(wl, wh, xl),
-            in_axes=(0, 0, x_axis))(ws, wq + u @ v, xs_obj)
+        if xs_obj is None:
+            clip, wq = jax.vmap(lambda r_l: one(r_l, None))(resid)
+            err_after = jax.vmap(
+                lambda wl, wh: recon_error(wl, wh, None))(ws, wq + u @ v)
+        else:
+            clip, wq = jax.vmap(one, in_axes=(0, x_axis))(resid, xs_obj)
+            err_after = jax.vmap(
+                lambda wl, wh, xl: recon_error(wl, wh, xl),
+                in_axes=(0, 0, x_axis))(ws, wq + u @ v, xs_obj)
 
     # --- pack ---------------------------------------------------------------
     resid_final = ws - u @ v
@@ -343,17 +356,20 @@ def _quantize_stack_sharded_impl(
     xt: jax.Array,
     keys: jax.Array,
     lane_mask: jax.Array,
-    cfg: FLRQConfig,
-    use_scaling: bool,
-    has_calib: bool,
-    mesh,
-    axis: str,
+    x_index=None,
+    cfg: FLRQConfig = None,
+    use_scaling: bool = False,
+    has_calib: bool = False,
+    mesh=None,
+    axis: str = None,
 ):
     """Mesh-sharded batched engine: ``shard_map`` of the per-device pipeline
     over ``mesh`` axis ``axis``. Each device quantizes its slice of the
     (L, m, n) stack — rank selection, masked block sketch, clip search and
     bit-packing all stay device-local; the calibration batch is replicated
-    (per-lane calibration shards with its lanes) and only the final
+    (per-lane calibration shards with its lanes; an ``x_index`` gather
+    replicates only the small unique-batch stack and shards the index, so
+    each device gathers just its own lanes' objectives) and only the final
     QTensor gather crosses the interconnect.
 
     ``check_rep=False``: the body contains lax.while_loop (R1-FLR's
@@ -364,16 +380,26 @@ def _quantize_stack_sharded_impl(
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    xt_spec = P(axis) if xt.ndim == 3 else P()
     body = partial(_quantize_stack_impl, cfg=cfg, use_scaling=use_scaling,
                    has_calib=has_calib)
+    if x_index is None:
+        xt_spec = P(axis) if xt.ndim == 3 else P()
+        fn = shard_map(
+            lambda w, x, k, lm: body(w, x, k, lm),
+            mesh=mesh,
+            in_specs=(P(axis), xt_spec, P(axis), P(axis)),
+            out_specs=P(axis),
+            check_rep=False,
+        )
+        return fn(w_stack, xt, keys, lane_mask)
     fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis), xt_spec, P(axis), P(axis)),
+        lambda w, x, k, lm, xi: body(w, x, k, lm, x_index=xi),
+        mesh=mesh,
+        in_specs=(P(axis), P(), P(axis), P(axis), P(axis)),
         out_specs=P(axis),
         check_rep=False,
     )
-    return fn(w_stack, xt, keys, lane_mask)
+    return fn(w_stack, xt, keys, lane_mask, x_index)
 
 
 _SHARDED_STATICS = ("cfg", "use_scaling", "has_calib", "mesh", "axis")
@@ -413,6 +439,83 @@ def _pad_lanes(arr: jax.Array, l_pad: int) -> jax.Array:
     return jnp.concatenate([arr, reps], axis=0)
 
 
+def _quantize_substack(
+    w_stack: jax.Array,
+    x_calib: jax.Array,
+    x_index,
+    keys: jax.Array,
+    cfg: FLRQConfig,
+    has_calib: bool,
+    mesh,
+    axis: Optional[str],
+    donate: bool,
+):
+    """One (sub-)stack through the batched engine, including the scaling
+    robustness gate (layers whose scaled pipeline lands above their own RTN
+    floor are re-quantized without scaling in a second batched launch and
+    the better result kept per layer). Returns the raw output dict of
+    L-leading arrays — ``quantize_stack`` packs it (possibly concatenated
+    across layer chunks)."""
+    L = w_stack.shape[0]
+    per_lane_x = x_calib.ndim == 3 and x_index is None
+    # The scaling robustness gate may relaunch over the same stack — only
+    # the launch that provably has no successor may donate it.
+    may_relaunch = cfg.use_scaling and has_calib
+
+    if mesh is not None:
+        n_shards, axis = shard_count(mesh, axis)
+        l_pad = -(-L // n_shards) * n_shards
+        w_in = _pad_lanes(w_stack, l_pad)
+        keys_in = _pad_lanes(keys, l_pad)
+        x_in = _pad_lanes(x_calib, l_pad) if per_lane_x else x_calib
+        idx_in = None if x_index is None else _pad_lanes(x_index, l_pad)
+        lane_mask = jnp.arange(l_pad) < L
+
+        def launch(use_scaling, donate_now=False):
+            fn = (_quantize_stack_sharded_donate if donate_now
+                  else _quantize_stack_sharded)
+            out = fn(w_in, x_in, keys_in, lane_mask, idx_in, cfg=cfg,
+                     use_scaling=use_scaling, has_calib=has_calib,
+                     mesh=mesh, axis=axis)
+            return {k: v[:L] for k, v in out.items()}
+    else:
+        lane_mask = jnp.ones((L,), jnp.bool_)
+
+        def launch(use_scaling, donate_now=False):
+            if donate_now:
+                # Donation binds by aval, and the alias target (the f32
+                # residual) must match — a bf16 stack donates the f32 copy
+                # the pipeline materializes anyway (astype is the identity
+                # for f32 inputs, so those donate the caller's buffer).
+                out = dict(_quantize_stack_jit_donate(
+                    w_stack.astype(jnp.float32), x_calib, keys, lane_mask,
+                    x_index, cfg=cfg, use_scaling=use_scaling,
+                    has_calib=has_calib, return_resid=True))
+                out.pop("resid")  # alias target only; not a result
+                return out
+            return _quantize_stack_jit(
+                w_stack, x_calib, keys, lane_mask, x_index, cfg=cfg,
+                use_scaling=use_scaling, has_calib=has_calib)
+
+    out = launch(cfg.use_scaling and has_calib,
+                 donate_now=donate and not may_relaunch)
+    if cfg.use_scaling and has_calib:
+        gate = np.asarray(out["err_after"]) > np.asarray(out["err_before"])
+        if gate.any():
+            out2 = launch(False, donate_now=donate)
+            redo = gate & (np.asarray(out2["err_after"])
+                           < np.asarray(out["err_after"]))
+            if redo.any():
+                sel = jnp.asarray(redo)
+
+                def pick(a, b):
+                    return jnp.where(sel.reshape((L,) + (1,) * (a.ndim - 1)),
+                                     b, a)
+
+                out = jax.tree.map(pick, out, out2)
+    return out
+
+
 def quantize_stack(
     w_stack: jax.Array,
     x_calib: Optional[jax.Array],
@@ -424,11 +527,17 @@ def quantize_stack(
     mesh=None,
     axis: Optional[str] = None,
     donate: bool = False,
+    x_index: Optional[jax.Array] = None,
+    layer_chunk: Optional[int] = None,
 ) -> Tuple[qtensor.QuantizedLinear, List[LayerStats]]:
     """Quantize an (L, m, n) stack of matrices in one (or, when the
-    robustness gate trips, two) jitted launches. ``x_calib``: (tokens, n)
-    calibration activations shared by the stack, (L, tokens, n) per-layer
-    activations (stack-fusion launches), or None.
+    robustness gate trips, two) jitted launches per layer chunk.
+    ``x_calib``: (tokens, n) calibration activations shared by the stack,
+    (L, tokens, n) per-layer activations, or None. With ``x_index`` ((L,)
+    int32), ``x_calib`` is a (U, tokens, n) stack of UNIQUE batches and
+    each lane gathers ``x_calib[x_index[l]]`` inside the device program —
+    the fused-stack driver passes one copy per group member instead of
+    broadcasting to every lane.
 
     Mirrors ``quantize_matrix`` semantics per layer — including the
     robustness gate: layers whose scaled pipeline lands above their own RTN
@@ -443,6 +552,18 @@ def quantize_stack(
     (``shard_map``); each device quantizes its own slice, bit-identically
     to the single-device program (L is padded up to the shard count with
     masked lanes when it does not divide).
+
+    ``layer_chunk=K`` runs the batched engine body over ceil(L/K) lane
+    chunks instead of one (L, m, n) launch, bounding the per-epoch f32
+    transients (BLC residuals, candidate round-trips) at (K, m, n). The
+    PRNG chain is per-lane, so the output is bit-identical to the unchunked
+    launch; chunking composes with ``mesh`` (each chunk shard_maps) and
+    with ``donate`` — with the caveat that chunked donation recycles each
+    (K, m, n) chunk *copy* per launch while the full stack stays resident
+    until its last chunk is sliced off (then it is freed); the (L, m, n)
+    saving of the unchunked donate path applies only to the final chunk's
+    launch. That is the right trade at production shapes: chunking exists
+    to bound the L-scaled transients, which dwarf one weight stack.
 
     ``donate=True`` CONSUMES the ``w_stack`` buffer (standard jax donation
     semantics — the caller must not reuse it): the last launch that needs
@@ -466,59 +587,26 @@ def quantize_stack(
     if keys is None:
         keys, _ = layer_key_chain(key, L)
 
-    per_lane_x = x_calib.ndim == 3
-    # The scaling robustness gate may relaunch over the same stack — only
-    # the launch that provably has no successor may donate it.
-    may_relaunch = cfg.use_scaling and has_calib
-
-    if mesh is not None:
-        n_shards, axis = shard_count(mesh, axis)
-        l_pad = -(-L // n_shards) * n_shards
-        w_in = _pad_lanes(w_stack, l_pad)
-        keys_in = _pad_lanes(keys, l_pad)
-        x_in = _pad_lanes(x_calib, l_pad) if per_lane_x else x_calib
-        lane_mask = jnp.arange(l_pad) < L
-
-        def launch(use_scaling, donate_now=False):
-            fn = (_quantize_stack_sharded_donate if donate_now
-                  else _quantize_stack_sharded)
-            out = fn(w_in, x_in, keys_in, lane_mask, cfg, use_scaling,
-                     has_calib, mesh, axis)
-            return {k: v[:L] for k, v in out.items()}
+    per_lane_x = x_calib.ndim == 3 and x_index is None
+    chunk = L if not layer_chunk else max(1, min(int(layer_chunk), L))
+    if chunk >= L:
+        out = _quantize_substack(w_stack, x_calib, x_index, keys, cfg,
+                                 has_calib, mesh, axis, donate)
     else:
-        lane_mask = jnp.ones((L,), jnp.bool_)
-
-        def launch(use_scaling, donate_now=False):
-            if donate_now:
-                # Donation binds by aval, and the alias target (the f32
-                # residual) must match — a bf16 stack donates the f32 copy
-                # the pipeline materializes anyway (astype is the identity
-                # for f32 inputs, so those donate the caller's buffer).
-                out = dict(_quantize_stack_jit_donate(
-                    w_stack.astype(jnp.float32), x_calib, keys, lane_mask,
-                    cfg, use_scaling, has_calib, return_resid=True))
-                out.pop("resid")  # alias target only; not a result
-                return out
-            return _quantize_stack_jit(
-                w_stack, x_calib, keys, lane_mask, cfg, use_scaling,
-                has_calib)
-
-    out = launch(cfg.use_scaling and has_calib,
-                 donate_now=donate and not may_relaunch)
-    if cfg.use_scaling and has_calib:
-        gate = np.asarray(out["err_after"]) > np.asarray(out["err_before"])
-        if gate.any():
-            out2 = launch(False, donate_now=donate)
-            redo = gate & (np.asarray(out2["err_after"])
-                           < np.asarray(out["err_after"]))
-            if redo.any():
-                sel = jnp.asarray(redo)
-
-                def pick(a, b):
-                    return jnp.where(sel.reshape((L,) + (1,) * (a.ndim - 1)),
-                                     b, a)
-
-                out = jax.tree.map(pick, out, out2)
+        parts = []
+        for i0 in range(0, L, chunk):
+            i1 = min(i0 + chunk, L)
+            w_sub = w_stack[i0:i1]
+            if donate and i1 == L and hasattr(w_stack, "delete"):
+                # last chunk sliced off — the donated stack is fully
+                # consumed, so free it before the final launch's transients
+                w_stack.delete()
+            parts.append(_quantize_substack(
+                w_sub,
+                x_calib[i0:i1] if per_lane_x else x_calib,
+                None if x_index is None else x_index[i0:i1],
+                keys[i0:i1], cfg, has_calib, mesh, axis, donate))
+        out = {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
 
     ranks = np.asarray(out["ranks"])
     rmax = max(int(ranks.max()), 1)

@@ -55,24 +55,45 @@ def _ungroup(wg: jax.Array) -> jax.Array:
     return wg.reshape(m, ng * g)
 
 
+def group_stats(w: jax.Array, spec: QuantSpec):
+    """Per-group range statistics — the only full reduction over W that
+    qparams need. Returns ``(amax,)`` (symmetric) or ``(wmin, wmax)``
+    (asymmetric), each (m, n//g, 1). Everything downstream of the clip grid
+    is a cheap rescale of these, so the clip search computes them ONCE per
+    epoch instead of once per grid point."""
+    wg = _group(w.astype(jnp.float32), spec.group_size)
+    if spec.symmetric:
+        return (jnp.max(jnp.abs(wg), axis=-1, keepdims=True),)
+    return (jnp.min(wg, axis=-1, keepdims=True),
+            jnp.max(wg, axis=-1, keepdims=True))
+
+
+def qparams_from_stats(
+    stats, spec: QuantSpec, clip_ratio: jax.Array | float = 1.0
+):
+    """(scale, zero_point) from precomputed ``group_stats`` — no pass over
+    W. Bitwise-identical to ``compute_qparams`` (same op order: stats are
+    scaled by the clip ratio first, exactly as the unfactored code did)."""
+    if spec.symmetric:
+        amax = stats[0] * clip_ratio
+        scale = amax / spec.qmax
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.zeros_like(scale)
+    else:
+        wmin = stats[0] * clip_ratio
+        wmax = stats[1] * clip_ratio
+        scale = (wmax - wmin) / spec.n_levels
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.round(-wmin / scale)
+    return scale, zp
+
+
 def compute_qparams(
     w: jax.Array, spec: QuantSpec, clip_ratio: jax.Array | float = 1.0
 ):
     """Per-group (scale, zero_point). ``clip_ratio`` may be a scalar or a
     per-output-row (m, 1, 1)-broadcastable array (BLC searches it)."""
-    wg = _group(w.astype(jnp.float32), spec.group_size)
-    if spec.symmetric:
-        amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True) * clip_ratio
-        scale = amax / spec.qmax
-        scale = jnp.where(scale <= 0, 1.0, scale)
-        zp = jnp.zeros_like(scale)
-    else:
-        wmax = jnp.max(wg, axis=-1, keepdims=True) * clip_ratio
-        wmin = jnp.min(wg, axis=-1, keepdims=True) * clip_ratio
-        scale = (wmax - wmin) / spec.n_levels
-        scale = jnp.where(scale <= 0, 1.0, scale)
-        zp = jnp.round(-wmin / scale)
-    return scale, zp
+    return qparams_from_stats(group_stats(w, spec), spec, clip_ratio)
 
 
 def quantize_codes(
@@ -101,6 +122,18 @@ def pseudo_quantize(
     return dequantize_codes(codes, spec, scale, zp, dtype=w.dtype)
 
 
+def pseudo_quantize_from_stats(
+    w: jax.Array, stats, spec: QuantSpec,
+    clip_ratio: jax.Array | float = 1.0,
+) -> jax.Array:
+    """``pseudo_quantize`` reusing precomputed ``group_stats`` — the clip
+    grid's inner body: only the per-element round/clamp/dequant runs per
+    grid point, never the range reduction."""
+    scale, zp = qparams_from_stats(stats, spec, clip_ratio)
+    codes = quantize_codes(w, spec, scale, zp)
+    return dequantize_codes(codes, spec, scale, zp, dtype=w.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Clipping search (paper: "setting a portion of the numbers with the largest
 # absolute values to zero by clipping can improve quantization accuracy";
@@ -111,23 +144,41 @@ def pseudo_quantize(
 DEFAULT_CLIP_GRID = tuple(1.0 - 0.05 * i for i in range(8))  # 1.0 .. 0.65
 
 
+def clip_errors_from_stats(w, x, spec: QuantSpec, stats, grid: jax.Array):
+    """Error ||W X - Q(W; c) X||² for every clip ratio c in ``grid``,
+    reusing precomputed ``group_stats`` — THE one definition of the hoisted
+    sweep objective (``_clip_errors`` and BLC's ``_best_clip_quant`` both
+    score through it). ``x``: (n, b) column batch, or None for the plain
+    Frobenius weight error Σd² (scored directly — no eye(n) batch).
+    """
+
+    def err(c):
+        wq = pseudo_quantize_from_stats(w, stats, spec, c)
+        d = (w - wq).astype(jnp.float32)
+        if x is None:
+            return jnp.sum(d * d)
+        dx = d @ x.astype(jnp.float32)
+        return jnp.sum(dx * dx)
+
+    return jax.lax.map(err, grid)
+
+
 @partial(jax.jit, static_argnames=("spec",))
 def _clip_errors(w, x, spec: QuantSpec, grid: jax.Array):
     """Error ||W X - Q(W; c) X||^2 for every clip ratio c in grid.
 
     x: (n, b) column-batch of calibration activations, or None-sentinel of
     shape (n, 0) meaning plain Frobenius weight error.
+
+    One pass of group range stats for the WHOLE grid (hoisted out of the
+    map — clipping only rescales the same per-group min/max), then one
+    round-trip + objective GEMM per grid point. The seed computed the full
+    reduction once per grid point; ``kernels.ref.clip_errors_ref`` keeps
+    that formulation as the parity oracle.
     """
-
-    def err(c):
-        wq = pseudo_quantize(w, spec, c)
-        d = (w - wq).astype(jnp.float32)
-        if x.shape[1] == 0:
-            return jnp.sum(d * d)
-        dx = d @ x.astype(jnp.float32)
-        return jnp.sum(dx * dx)
-
-    return jax.lax.map(err, grid)
+    stats = group_stats(w, spec)
+    return clip_errors_from_stats(w, None if x.shape[1] == 0 else x,
+                                  spec, stats, grid)
 
 
 def search_clip_ratio(

@@ -1,0 +1,162 @@
+"""Pallas kernel: the whole BLC clip-grid sweep in ONE pass over W.
+
+The clip search (paper Alg. 2 step 3) scores every clip ratio c by the
+output error ||(W - Q(W; c)) X||². The seed formulation re-quantized the
+full (m, n) matrix and ran a dense d @ x GEMM once per grid point — at
+production shapes that is |grid| full HBM passes over the weight, per
+epoch, per layer, and the GEMM traffic (not its FLOPs) is what the sweep
+pays for.
+
+This kernel streams W through VMEM ONCE for the entire grid: for each
+(bm, bn) weight block it computes the per-128-group range stats a single
+time, then produces the dequantization error under *every* clip ratio
+in-register (a clip only rescales the same group stats — no re-reduction,
+no materialized candidate matrices) and accumulates the per-clip partial
+d @ x products into a (n_clips, bm, b) output block that stays resident
+across the n sweep. The grid's output errors fall out of one HBM read of
+W; the winner is re-quantized once via ``group_quant.group_pseudo_quant``.
+
+Two scoring modes (mirroring ``core.quantize._clip_errors``):
+  * calibrated — x: (n, b) column batch; per-clip dx accumulated over the
+    n-blocks, errors Σ dx² computed by the (tiny) epilogue outside.
+  * Frobenius  — x is None; per-clip per-row Σ d² accumulated directly
+    (no GEMM at all — the identity objective never materializes eye(n)).
+
+Quant math is shared with ``kernels.group_quant`` (``_block_stats`` /
+``_block_qdq``), so the sweep scores exactly what the re-quantization
+produces. bits ∈ {2, 4, 8}; blocks must tile (m % bm == 0, n % bn == 0,
+bn % group == 0) — ``kernel_shape_ok`` gates the auto fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .group_quant import _block_qdq, _block_stats
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def kernel_shape_ok(m: int, n: int, group: int = 128,
+                    bm: int = 256, bn: int = 512) -> bool:
+    """Whether (m, n, group) tiles the clip-path kernels' (min(bm,m),
+    min(bn,n)) blocks with group-aligned n-blocks and f32-sublane-aligned
+    rows. This is the single gate for BOTH kernels the clip backend
+    dispatches to (the sweep here and ``group_quant.group_pseudo_quant``
+    at the argmin — ``_best_clip_quant`` passes the same bn as bk), so a
+    shape it approves can never trip either kernel's tiling asserts."""
+    bm, bn = min(bm, m), min(bn, n)
+    return (m % 8 == 0 and m % bm == 0 and n % bn == 0
+            and bn % group == 0)
+
+
+def _sweep_dx_kernel(w_ref, x_ref, dx_ref, *, clips, bits, group, symmetric):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    bm, bn = w.shape
+    g = w.reshape(bm, bn // group, group)
+    stats = _block_stats(g, bits=bits, symmetric=symmetric)  # once per block
+    x = x_ref[...].astype(jnp.float32)
+    for ci, c in enumerate(clips):  # static unroll: W stays in VMEM/VREGs
+        deq, _, _, _ = _block_qdq(g, stats, c, bits=bits, symmetric=symmetric)
+        d = w - deq.reshape(bm, bn)
+        dx_ref[ci] += jnp.dot(d, x, preferred_element_type=jnp.float32)
+
+
+def _sweep_frob_kernel(w_ref, err_ref, *, clips, bits, group, symmetric):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        err_ref[...] = jnp.zeros_like(err_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    bm, bn = w.shape
+    g = w.reshape(bm, bn // group, group)
+    stats = _block_stats(g, bits=bits, symmetric=symmetric)
+    for ci, c in enumerate(clips):
+        deq, _, _, _ = _block_qdq(g, stats, c, bits=bits, symmetric=symmetric)
+        d = w - deq.reshape(bm, bn)
+        err_ref[ci] += jnp.sum(d * d, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("clips", "bits", "group", "symmetric",
+                              "bm", "bn", "interpret"))
+def clip_sweep_dx(w, x, *, clips, bits: int, group: int = 128,
+                  symmetric: bool = False, bm: int = 256, bn: int = 512,
+                  interpret: bool = False):
+    """Per-clip output-error products: w (m, n), x (n, b) ->
+    dx (n_clips, m, b) with dx[c] = (w - Q(w; clips[c])) @ x, all clips
+    from one HBM read of W (one ``pallas_call``; n is the inner grid dim
+    so each (n_clips, bm, b) output block accumulates in place)."""
+    assert bits in (2, 4, 8), "3-bit has no kernel path; use the XLA path"
+    m, n = w.shape
+    b = x.shape[1]
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0 and bn % group == 0, (m, n, bm, bn)
+    b_pad = max(_round_up(b, 128), 128)
+    if b_pad != b:  # zero columns contribute exact zeros to dx
+        x = jnp.pad(x, ((0, 0), (0, b_pad - b)))
+    nc = len(clips)
+    dx = pl.pallas_call(
+        functools.partial(_sweep_dx_kernel, clips=clips, bits=bits,
+                          group=group, symmetric=symmetric),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, b_pad), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nc, bm, b_pad), lambda i, j: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, m, b_pad), jnp.float32),
+        interpret=interpret,
+    )(w, x)
+    return dx[:, :, :b] if b_pad != b else dx
+
+
+@functools.partial(
+    jax.jit, static_argnames=("clips", "bits", "group", "symmetric",
+                              "bm", "bn", "interpret"))
+def clip_sweep_frob(w, *, clips, bits: int, group: int = 128,
+                    symmetric: bool = False, bm: int = 256, bn: int = 512,
+                    interpret: bool = False):
+    """Per-clip per-row Frobenius errors: w (m, n) -> (n_clips, m) with
+    out[c, i] = Σ_j (w - Q(w; clips[c]))[i, j]² — the identity-objective
+    sweep without the (m, n) @ (n, n) GEMM the eye(n) formulation paid."""
+    assert bits in (2, 4, 8), "3-bit has no kernel path; use the XLA path"
+    m, n = w.shape
+    bm, bn = min(bm, m), min(bn, n)
+    assert m % bm == 0 and n % bn == 0 and bn % group == 0, (m, n, bm, bn)
+    nc = len(clips)
+    return pl.pallas_call(
+        functools.partial(_sweep_frob_kernel, clips=clips, bits=bits,
+                          group=group, symmetric=symmetric),
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((nc, bm), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nc, m), jnp.float32),
+        interpret=interpret,
+    )(w)
+
+
+def clip_sweep_errors(w, x, *, clips, bits: int, group: int = 128,
+                      symmetric: bool = False, interpret: bool = False):
+    """(n_clips,) total errors for the grid — the kernel path's drop-in for
+    ``core.quantize._clip_errors`` (x=None ≡ Frobenius objective)."""
+    if x is None:
+        part = clip_sweep_frob(w, clips=clips, bits=bits, group=group,
+                               symmetric=symmetric, interpret=interpret)
+        return jnp.sum(part, axis=1)
+    dx = clip_sweep_dx(w, x, clips=clips, bits=bits, group=group,
+                       symmetric=symmetric, interpret=interpret)
+    return jnp.sum(dx * dx, axis=(1, 2))

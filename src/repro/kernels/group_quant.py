@@ -1,9 +1,19 @@
-"""Pallas kernel: group-wise quantize + bit-pack in one pass.
+"""Pallas kernels: group-wise quantize (+ bit-pack) in one pass.
 
 BLC re-quantizes the residual every epoch (paper Alg. 2 step 3), so the
 quantize+pack inner loop is on the quantization-time critical path. One
 pass over W per call: per-128-group min/max reduction, scale/zp, round,
 clamp, and nibble-packing all in VREGs; W is read exactly once from HBM.
+
+Two entry points share the same in-register quant math (``_block_stats`` /
+``_block_qdq`` — also reused by ``kernels.clip_sweep``):
+
+  * ``group_quant``        — codes packed to uint8 (+ scale, zp). Static
+    clip ratio (the packing epilogue of the pipeline).
+  * ``group_pseudo_quant`` — the dequantized round-trip Q(W; clip) with a
+    *traced* clip ratio fed through SMEM: this is what the clip-grid sweep
+    calls ONCE at its argmin (the winning clip is data-dependent, so it
+    cannot be baked into the kernel like ``group_quant``'s).
 
 Supports bits ∈ {2, 4, 8} (the 3-bit pack crosses byte boundaries — it
 stays on the jnp path, ``ref.group_quant_ref``).
@@ -15,6 +25,44 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _block_stats(g, *, bits, symmetric):
+    """Per-group range stats of a grouped block g: (bm, bk//group, group)
+    -> tuple of (bm, bk//group, 1) arrays. Mirrors core.quantize.group_stats
+    exactly (one reduction, reused by every clip ratio)."""
+    del bits
+    if symmetric:
+        return (jnp.max(jnp.abs(g), axis=-1, keepdims=True),)
+    return (jnp.min(g, axis=-1, keepdims=True),
+            jnp.max(g, axis=-1, keepdims=True))
+
+
+def _block_qdq(g, stats, clip_ratio, *, bits, symmetric):
+    """Quantize-dequantize a grouped block under ``clip_ratio`` using
+    precomputed stats. Returns (deq, scale, zp, codes_unsigned); op order
+    matches core.quantize.qparams_from_stats/quantize_codes bit for bit."""
+    qmax_sym = (1 << (bits - 1)) - 1
+    levels = (1 << bits) - 1
+    if symmetric:
+        amax = stats[0] * clip_ratio
+        scale = amax / qmax_sym
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.zeros_like(scale)
+        q = jnp.clip(jnp.round(g / scale), -(qmax_sym + 1), qmax_sym)
+        deq = q * scale
+        codes = (q + (1 << (bits - 1))).astype(jnp.uint32)
+    else:
+        wmin = stats[0] * clip_ratio
+        wmax = stats[1] * clip_ratio
+        scale = (wmax - wmin) / levels
+        scale = jnp.where(scale <= 0, 1.0, scale)
+        zp = jnp.round(-wmin / scale)
+        q = jnp.clip(jnp.round(g / scale) + zp, 0, levels)
+        deq = (q - zp) * scale
+        codes = q.astype(jnp.uint32)
+    return deq, scale, zp, codes
 
 
 def _kernel(w_ref, packed_ref, scale_ref, zp_ref, *, bits, group,
@@ -22,21 +70,9 @@ def _kernel(w_ref, packed_ref, scale_ref, zp_ref, *, bits, group,
     w = w_ref[...].astype(jnp.float32)
     bm, bk = w.shape
     g = w.reshape(bm, bk // group, group)
-    qmax_sym = (1 << (bits - 1)) - 1
-    levels = (1 << bits) - 1
-    if symmetric:
-        amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True) * clip_ratio
-        scale = jnp.where(amax <= 0, 1.0, amax / qmax_sym)
-        zp = jnp.zeros_like(scale)
-        q = jnp.clip(jnp.round(g / scale), -(qmax_sym + 1), qmax_sym)
-        codes = (q + (1 << (bits - 1))).astype(jnp.uint32)
-    else:
-        wmax = jnp.max(g, axis=-1, keepdims=True) * clip_ratio
-        wmin = jnp.min(g, axis=-1, keepdims=True) * clip_ratio
-        scale = (wmax - wmin) / levels
-        scale = jnp.where(scale <= 0, 1.0, scale)
-        zp = jnp.round(-wmin / scale)
-        codes = jnp.clip(jnp.round(g / scale) + zp, 0, levels).astype(jnp.uint32)
+    stats = _block_stats(g, bits=bits, symmetric=symmetric)
+    _, scale, zp, codes = _block_qdq(g, stats, clip_ratio, bits=bits,
+                                     symmetric=symmetric)
     scale_ref[...] = scale
     zp_ref[...] = zp
     per = 8 // bits
@@ -80,3 +116,43 @@ def group_quant(w, *, bits: int, group: int = 128, symmetric: bool = False,
     )(w)
     pg = group * bits // 8
     return packed.reshape(m, n // group, pg), scale, zp
+
+
+def _pseudo_kernel(clip_ref, w_ref, out_ref, *, bits, group, symmetric):
+    w = w_ref[...].astype(jnp.float32)
+    bm, bk = w.shape
+    g = w.reshape(bm, bk // group, group)
+    stats = _block_stats(g, bits=bits, symmetric=symmetric)
+    deq, _, _, _ = _block_qdq(g, stats, clip_ref[0], bits=bits,
+                              symmetric=symmetric)
+    out_ref[...] = deq.reshape(bm, bk)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group", "symmetric", "bm", "bk",
+                              "interpret"))
+def group_pseudo_quant(w, clip_ratio, *, bits: int, group: int = 128,
+                       symmetric: bool = False, bm: int = 256,
+                       bk: int = 1024, interpret: bool = False):
+    """Dequantized round-trip Q(W; clip) with a TRACED scalar clip ratio
+    (scalar-prefetched through SMEM). w: (m, n) -> (m, n) f32. One HBM pass
+    over W — the clip sweep's single re-quantization at its argmin."""
+    assert bits in (2, 4, 8), "3-bit has no kernel path; use ref path"
+    m, n = w.shape
+    bm = min(bm, m)
+    bk = min(bk, n)
+    assert bk % group == 0 and m % bm == 0 and n % bk == 0
+    clip = jnp.asarray(clip_ratio, jnp.float32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, n // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, clip: (i, j))],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, clip: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pseudo_kernel, bits=bits, group=group,
+                          symmetric=symmetric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(clip, w)

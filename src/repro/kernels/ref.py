@@ -42,6 +42,29 @@ def group_quant_ref(w, *, bits, group=128, symmetric=False, clip_ratio=1.0):
     return packing.pack(codes + offs, bits), scale, zp
 
 
+def clip_errors_ref(w, x, *, clips, bits, group=128, symmetric=False):
+    """Oracle for kernels.clip_sweep.clip_sweep_errors — the SEED
+    formulation of the clip-grid sweep: re-quantize the full matrix and run
+    the dense objective GEMM once per grid point (lax.map), with the group
+    range reduction recomputed inside every iteration. ``x``: (n, b) or
+    None (Frobenius objective, scored through an explicit eye(n) batch just
+    like the seed pipeline did)."""
+    import jax.lax
+    from ..core.quantize import QuantSpec, pseudo_quantize
+
+    spec = QuantSpec(bits, group, symmetric)
+    if x is None:
+        x = jnp.eye(w.shape[1], dtype=jnp.float32)
+
+    def err(c):
+        wq = pseudo_quantize(w, spec, c)
+        d = (w - wq).astype(jnp.float32)
+        dx = d @ x.astype(jnp.float32)
+        return jnp.sum(dx * dx)
+
+    return jax.lax.map(err, jnp.asarray(clips, jnp.float32))
+
+
 def sketch_gemv_ref(a, x):
     """Oracle for kernels.r1_sketch.sketch_gemv: y = A @ x."""
     return (a.astype(jnp.float32) @ x.astype(jnp.float32)).astype(a.dtype)

@@ -11,7 +11,10 @@ leaves, and prints the per-layer rank/error report (paper Tables 3/9).
 
 Scale-out: ``--mesh-shards N`` shard_maps every stacked tensor's layer dim
 over an N-device ("stack",) mesh (bit-identical results, pod-speed wall
-time); same-shape stacks fuse into single launches unless ``--no-fuse``.
+time); same-shape stacks fuse into single launches unless ``--no-fuse``;
+``--layer-chunk K`` bounds the engine's transient f32 residuals at
+(K, m, n) for production widths; ``--clip-backend pallas|auto`` runs the
+BLC clip-grid sweep as one fused Pallas pass over each weight stack.
 The jitted while_loop programs compile slowly cold (~19s for the vmapped
 engine on the tiny proxy) — a persistent compilation cache is on by
 default at ``~/.cache/repro-flrq-xla`` (``--compile-cache DIR`` /
@@ -85,6 +88,19 @@ def main(argv=None):
                     help="sketch backend (default xla; the Pallas kernels "
                          "are interpret-verified on CPU but not yet "
                          "validated on real TPU — opt in with auto/pallas)")
+    ap.add_argument("--clip-backend", choices=("xla", "pallas", "auto"),
+                    default="xla",
+                    help="BLC clip-grid sweep backend: xla = hoisted "
+                         "group-stats path; pallas = one-pass fused sweep "
+                         "kernel (whole grid from one HBM read of W; "
+                         "interpret mode off-TPU); auto = pallas on TPU "
+                         "when the config tiles, else xla")
+    ap.add_argument("--layer-chunk", type=int, default=0,
+                    help="quantize each stacked tensor in lane chunks of "
+                         "this size (0 = whole stack per launch) — bounds "
+                         "the engine's transient f32 residuals at "
+                         "(chunk, m, n) with bit-identical results; the "
+                         "production-shape memory lever")
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="shard the stacked-layer dim over this many devices "
                          "(0 = single-device; results are bit-identical)")
@@ -138,11 +154,13 @@ def main(argv=None):
         bits=args.bits, x=args.x_budget, max_rank=args.max_rank,
         blc_epochs=args.blc_epochs or (1 if args.bits > 2 else 20),
         use_scaling=not args.no_scaling, backend=args.backend,
+        clip_backend=args.clip_backend,
     )
     t0 = time.time()
     qparams, stats = quantize_model_stacked(
         params, acts, qcfg, engine=args.engine,
         mesh=mesh, fuse_stacks=not args.no_fuse,
+        layer_chunk=args.layer_chunk or None,
         progress=lambda name, st: print(
             f"  {name}: rank={st.rank} err {st.err_before:.4f}->"
             f"{st.err_after:.4f} ({st.seconds:.1f}s)"))

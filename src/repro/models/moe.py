@@ -23,18 +23,20 @@ from .layers import constrain
 
 def _expert_mm(xg, w, eq: str):
     """Expert einsum that also accepts FLRQ-quantized expert weights (a
-    QuantizedLinear pytree with a leading E axis): vmap the dequant+lowrank
-    apply over experts."""
+    QuantizedLinear pytree with a leading E axis): routed through the
+    serving runtime's backend dispatch (``quant.apply.dispatch``), so
+    experts take the lane-stacked fused kernel on TPU and the ref path
+    elsewhere — with every fallback recorded in the dispatch log, exactly
+    like the dense layers (``models.layers.mm``)."""
     from ..quant.qtensor import QuantizedLinear
 
     if isinstance(w, QuantizedLinear):
-        from ..quant.apply import apply_lowrank_separate
+        from ..quant.apply import dispatch
 
-        e_axis = 1 if xg.ndim == 4 else 0  # (B,E,c,D) or (E,c,D)
-        def one(x_e, w_e):
-            return apply_lowrank_separate(w_e, x_e, out_dtype=x_e.dtype)
-
-        return jax.vmap(one, in_axes=(e_axis, 0), out_axes=e_axis)(xg, w)
+        if xg.ndim == 4:  # (B, E, c, D): expert is the tensor's lane dim
+            y = dispatch(w, jnp.swapaxes(xg, 0, 1), out_dtype=xg.dtype)
+            return jnp.swapaxes(y, 0, 1)
+        return dispatch(w, xg, out_dtype=xg.dtype)  # (E, c, D)
     return jnp.einsum(eq, xg, w)
 
 

@@ -144,25 +144,44 @@ def _collect_entries(params, calib_acts, cfg: FLRQConfig) -> List[_StackEntry]:
 
 
 def _group_calib(group: List[_StackEntry]):
-    """The calibration batch for one fused launch: None (Frobenius), the
-    shared (tokens, n) batch when every member sees the same activations,
-    or a per-lane (ΣL, tokens, n) batch when they differ. Sameness is
-    checked by identity first, then by content — value-equal batches from
-    different loads must not silently trigger the ~G·L× bigger per-lane
-    materialization."""
+    """The calibration objective for one fused launch, as ``(x, x_index)``:
+    ``(None, None)`` (Frobenius), ``((tokens, n), None)`` when every member
+    sees the same activations, or — when they differ — a (U, tokens, n)
+    stack of the U *unique* batches plus a (ΣL,) lane→batch index that the
+    launch gathers device-side (``quantize_stack(x_index=...)``). The old
+    formulation broadcast each member's batch to all of its lanes, shipping
+    a ~G·L× copy of the calibration set through host memory, the shard
+    scatter, and every chunked launch; one copy per unique batch + a tiny
+    index is equivalent bit for bit. Sameness is checked by identity first,
+    then by content — value-equal batches from different loads must not
+    silently land in separate unique slots."""
     if all(e.xc is None for e in group):
-        return None
+        return None, None
     x0 = group[0].xc
     if all(e.xc is x0
            or (e.xc.shape == x0.shape and bool(jnp.array_equal(e.xc, x0)))
            for e in group[1:]):
-        return x0
-    return jnp.concatenate([
-        jnp.broadcast_to(e.xc, (e.lanes,) + e.xc.shape) for e in group])
+        return x0, None
+    uniques: List[jax.Array] = []
+    lane_idx: List[int] = []
+    for e in group:
+        slot = None
+        for u_i, xu in enumerate(uniques):
+            if e.xc is xu or (e.xc.shape == xu.shape
+                              and bool(jnp.array_equal(e.xc, xu))):
+                slot = u_i
+                break
+        if slot is None:
+            slot = len(uniques)
+            uniques.append(e.xc)
+        lane_idx.extend([slot] * e.lanes)
+    return (jnp.stack(uniques),
+            jnp.asarray(lane_idx, jnp.int32))
 
 
 def _quantize_batched(params, calib_acts, cfg: FLRQConfig, progress,
-                      mesh, axis, fuse_stacks: bool):
+                      mesh, axis, fuse_stacks: bool,
+                      layer_chunk: Optional[int] = None):
     entries = _collect_entries(params, calib_acts, cfg)
 
     # --- group same-shape stacks for fusion --------------------------------
@@ -200,7 +219,7 @@ def _quantize_batched(params, calib_acts, cfg: FLRQConfig, progress,
             # doubles the model footprint during quantization.
             qt, lst = quantize_stack(e.w_stack(), e.xc, cfg, name=e.path,
                                      keys=e.keys, mesh=mesh, axis=axis,
-                                     donate=True)
+                                     donate=True, layer_chunk=layer_chunk)
             results[e.path] = qt
             stats[e.path] = lst
             report(e.path)
@@ -208,11 +227,12 @@ def _quantize_batched(params, calib_acts, cfg: FLRQConfig, progress,
         # fused launch: concat along the lane dim, split back on return
         w_cat = jnp.concatenate([e.w_stack() for e in group])
         keys_cat = jnp.concatenate([e.keys for e in group])
-        x_cat = _group_calib(group)
+        x_cat, x_idx = _group_calib(group)
         fused_name = "+".join(e.path for e in group)
         qt, lst = quantize_stack(w_cat, x_cat, cfg, name=fused_name,
                                  keys=keys_cat, mesh=mesh, axis=axis,
-                                 donate=True)
+                                 donate=True, x_index=x_idx,
+                                 layer_chunk=layer_chunk)
         off = 0
         for e in group:
             L = e.lanes
@@ -248,22 +268,28 @@ def quantize_model_stacked(
     mesh=None,
     axis: Optional[str] = None,
     fuse_stacks: bool = True,
+    layer_chunk: Optional[int] = None,
 ):
     """Returns (serving params tree with QuantizedLinear leaves, stats).
 
     ``engine="batched"`` quantizes each stacked tensor's L layers in one
     jitted launch — same-shape tensors fuse into a single launch
     (``fuse_stacks``) and the lane dim shards over ``mesh``/``axis`` when
-    given. ``engine="sequential"`` is the per-layer reference oracle (kept
+    given; ``layer_chunk=K`` splits every launch into ceil(L/K) lane chunks
+    so the engine's transient f32 residuals are bounded at (K, m, n)
+    (bit-identical output — production-shape memory lever).
+    ``engine="sequential"`` is the per-layer reference oracle (kept
     for parity testing and as the paper-verbatim fallback).
     """
     if engine not in ENGINES:
         raise ValueError(f"engine={engine!r} not in {ENGINES}")
     if engine == "batched":
         return _quantize_batched(params, calib_acts, cfg, progress,
-                                 mesh, axis, fuse_stacks)
+                                 mesh, axis, fuse_stacks, layer_chunk)
     if mesh is not None:
         raise ValueError("mesh sharding requires engine='batched'")
+    if layer_chunk is not None:
+        raise ValueError("layer_chunk requires engine='batched'")
 
     key = jax.random.PRNGKey(cfg.seed)
     stats: Dict[str, list] = {}

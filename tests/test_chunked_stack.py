@@ -1,0 +1,223 @@
+"""layer_chunk'd stack driver (bit-identical to the whole-stack launch),
+the per-lane calibration gather, and the MoE expert dispatch routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flrq import FLRQConfig, quantize_stack
+from repro.quant.stacked import _group_calib, quantize_model_stacked
+
+QT_FIELDS = ("packed", "scale", "zp", "u", "v", "act_scale_inv")
+
+
+def _mk_stack(seed, L, m, n, scale=0.5):
+    base = jax.random.normal(jax.random.PRNGKey(seed), (L, m, n)) * 0.02
+    layers = []
+    for i in range(L):
+        r = 4 + 2 * i
+        sv = 2.0 ** -jnp.arange(r)
+        u = jax.random.normal(jax.random.PRNGKey(seed + 10 + i), (m, r))
+        v = jax.random.normal(jax.random.PRNGKey(seed + 40 + i), (r, n))
+        layers.append(base[i] + (u * sv) @ v * scale)
+    return jnp.stack(layers)
+
+
+def _assert_qt_equal(qa, qb, msg=""):
+    for f in QT_FIELDS:
+        a, b = np.asarray(getattr(qa, f)), np.asarray(getattr(qb, f))
+        assert a.shape == b.shape, (msg, f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f"{msg}:{f}")
+
+
+@pytest.fixture(scope="module")
+def stack4():
+    return _mk_stack(0, 4, 256, 512)
+
+
+@pytest.fixture(scope="module")
+def xcal():
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 512))
+    outlier = 1 + 5.0 * (jax.random.uniform(jax.random.PRNGKey(4),
+                                            (512,)) < 0.02)
+    return x * outlier
+
+
+# ------------------------------------------------------- layer chunking
+@pytest.mark.parametrize("chunk", [1, 3, 4])
+def test_layer_chunk_bitwise_identical(stack4, xcal, chunk):
+    """layer_chunk ∈ {1, non-divisor (tail chunk), L} — bit-identical
+    QTensors and ranks to the whole-stack launch. The PRNG chain is
+    per-lane, so chunk boundaries cannot shift any lane's keys."""
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=16)
+    qt0, st0 = quantize_stack(stack4, xcal, cfg, jax.random.PRNGKey(0))
+    qtk, stk = quantize_stack(stack4, xcal, cfg, jax.random.PRNGKey(0),
+                              layer_chunk=chunk)
+    _assert_qt_equal(qt0, qtk, f"chunk={chunk}")
+    assert [s.rank for s in st0] == [s.rank for s in stk]
+
+
+def test_layer_chunk_no_calib_and_donate(stack4):
+    """Chunking composes with the Frobenius objective and with donation
+    (each chunk's transposed slice is consumed as it is quantized)."""
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=16)
+    qt0, _ = quantize_stack(stack4, None, cfg, jax.random.PRNGKey(0))
+    qtk, _ = quantize_stack(stack4 * 1.0, None, cfg, jax.random.PRNGKey(0),
+                            layer_chunk=2, donate=True)
+    _assert_qt_equal(qt0, qtk, "chunk+donate")
+
+
+def test_layer_chunk_with_mesh(stack4, xcal):
+    """chunked + sharded (1-device mesh machinery path) == plain."""
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    mesh = jax.make_mesh((1,), ("stack",))
+    qt0, _ = quantize_stack(stack4, xcal, cfg, jax.random.PRNGKey(0))
+    qtk, _ = quantize_stack(stack4, xcal, cfg, jax.random.PRNGKey(0),
+                            mesh=mesh, layer_chunk=3)
+    _assert_qt_equal(qt0, qtk, "chunk+mesh")
+
+
+def test_layer_chunk_through_fused_driver(stack4, xcal):
+    """Driver-level: fusion + layer_chunk == plain driver, bit for bit
+    (the sharded+fused combination rides the same _quantize_substack)."""
+    params = {"layers": {"wq": jnp.swapaxes(stack4, -1, -2),
+                         "wk": jnp.swapaxes(_mk_stack(100, 4, 256, 512),
+                                            -1, -2)}}
+    calib = {"['layers']['wq']": xcal, "['layers']['wk']": xcal * 1.3}
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    q0, s0 = quantize_model_stacked(params, calib, cfg)
+    qk, sk = quantize_model_stacked(params, calib, cfg, layer_chunk=3)
+    for (pa, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(q0)[0],
+                               jax.tree_util.tree_flatten_with_path(qk)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(pa))
+    for k in s0:
+        assert [s.rank for s in s0[k]] == [s.rank for s in sk[k]]
+
+
+def test_layer_chunk_rejects_sequential_engine(stack4, xcal):
+    with pytest.raises(ValueError):
+        quantize_model_stacked({"layers": {}}, None,
+                               FLRQConfig(), engine="sequential",
+                               layer_chunk=2)
+
+
+# --------------------------------------------- per-lane calib gather
+def test_group_calib_unique_plus_index():
+    """Differing member batches produce a (U, tokens, n) unique stack and
+    a lane index — never the ΣL-lane broadcast; value-equal batches from
+    different loads share one unique slot."""
+    from repro.quant.stacked import _StackEntry
+    x1 = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    x2 = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    leaf = jnp.zeros((3, 64, 64))
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    mk = lambda xc: _StackEntry("p", leaf, xc, keys)
+
+    x, idx = _group_calib([mk(x1), mk(x2), mk(jnp.array(x1))])
+    assert x.shape == (2, 16, 64)  # unique batches only
+    np.testing.assert_array_equal(
+        np.asarray(idx), np.repeat(np.asarray([0, 1, 0], np.int32), 3))
+
+    x, idx = _group_calib([mk(x1), mk(jnp.array(x1))])
+    assert x.shape == (16, 64) and idx is None  # shared → no index
+
+    x, idx = _group_calib([mk(None), mk(None)])
+    assert x is None and idx is None
+
+
+def test_x_index_matches_materialized_per_lane(stack4, xcal):
+    """quantize_stack(x_index=...) == the materialized (L, tokens, n)
+    per-lane batch, bit for bit — incl. chunked and 1-device-mesh runs."""
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    xs = [xcal, xcal * 1.3]
+    x_mat = jnp.concatenate(
+        [jnp.broadcast_to(xi, (2,) + xi.shape) for xi in xs])
+    x_uniq = jnp.stack(xs)
+    idx = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    qa, _ = quantize_stack(stack4, x_mat, cfg, jax.random.PRNGKey(0))
+    qb, _ = quantize_stack(stack4, x_uniq, cfg, jax.random.PRNGKey(0),
+                           x_index=idx)
+    _assert_qt_equal(qa, qb, "x_index")
+    qc, _ = quantize_stack(stack4, x_uniq, cfg, jax.random.PRNGKey(0),
+                           x_index=idx, layer_chunk=3)
+    _assert_qt_equal(qa, qc, "x_index+chunk")
+    mesh = jax.make_mesh((1,), ("stack",))
+    qd, _ = quantize_stack(stack4, x_uniq, cfg, jax.random.PRNGKey(0),
+                           x_index=idx, mesh=mesh)
+    _assert_qt_equal(qa, qd, "x_index+mesh")
+
+
+# ------------------------------------------------- MoE expert dispatch
+def test_expert_mm_routes_through_dispatch(stack4):
+    """Quantized expert weights go through quant.apply.dispatch: ref
+    backend reproduces the old vmapped apply exactly and the decision is
+    recorded in the dispatch log (never-silent contract)."""
+    from repro.core.flrq import layer_key_chain
+    from repro.models.moe import _expert_mm
+    from repro.quant.apply import (apply_lowrank_separate,
+                                   clear_dispatch_log, dispatch_log)
+
+    E, d_in, d_out = 4, 512, 256
+    w_model = jnp.swapaxes(_mk_stack(7, E, d_out, d_in), -1, -2)
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    keys, _ = layer_key_chain(jax.random.PRNGKey(0), E)
+    qt, _ = quantize_stack(jnp.swapaxes(w_model, -1, -2), None, cfg,
+                           keys=keys)
+
+    xg = jax.random.normal(jax.random.PRNGKey(1), (E, 8, d_in))
+    clear_dispatch_log()
+    y = _expert_mm(xg, qt, "ecd,edf->ecf")
+    assert y.shape == (E, 8, d_out)
+    y_ref = apply_lowrank_separate(qt, xg, out_dtype=xg.dtype)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    log = dispatch_log()
+    assert len(log) == 1 and log[0].shape == (d_out, d_in)
+
+    # batched-rows layout (B, E, c, D): lane axis is moved, result moved back
+    xg4 = jax.random.normal(jax.random.PRNGKey(2), (2, E, 8, d_in))
+    y4 = _expert_mm(xg4, qt, "becd,edf->becf")
+    assert y4.shape == (2, E, 8, d_out)
+    y4_ref = jnp.swapaxes(
+        apply_lowrank_separate(qt, jnp.swapaxes(xg4, 0, 1),
+                                      out_dtype=xg4.dtype), 0, 1)
+    np.testing.assert_array_equal(np.asarray(y4), np.asarray(y4_ref))
+
+
+def test_expert_mm_fused_interpret_close_to_ref(stack4):
+    """The experts' fused-kernel route (interpret mode off-TPU) agrees
+    with the ref path through the same dispatch entry point."""
+    from repro.core.flrq import layer_key_chain
+    from repro.models.moe import _expert_mm
+    from repro.quant.apply import backend_scope
+
+    E, d_in, d_out = 2, 512, 256
+    w = _mk_stack(11, E, d_out, d_in)
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    keys, _ = layer_key_chain(jax.random.PRNGKey(0), E)
+    qt, _ = quantize_stack(w, None, cfg, keys=keys)
+    xg = jax.random.normal(jax.random.PRNGKey(1), (E, 8, d_in))
+    with backend_scope("ref"):
+        y_ref = _expert_mm(xg, qt, "ecd,edf->ecf")
+    with backend_scope("fused", interpret=True):
+        y_fused = _expert_mm(xg, qt, "ecd,edf->ecf")
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------- end-to-end slow smoke
+@pytest.mark.slow
+def test_chunked_quantize_smoke_1k():
+    """(L=8, 1k, 1k) end-to-end chunked quantization — the production-
+    shape smoke: chunked, donating, Frobenius objective; finite outputs
+    and the layer_chunk==whole-stack parity on a 1k-wide tensor."""
+    L, m, n = 8, 1024, 1024
+    w = _mk_stack(20, L, m, n, scale=0.3)
+    cfg = FLRQConfig(bits=4, blc_epochs=1, max_rank=8)
+    qt, stats = quantize_stack(w * 1.0, None, cfg, jax.random.PRNGKey(0),
+                               layer_chunk=3, donate=True)
+    assert qt.packed.shape[:2] == (L, m)
+    assert len(stats) == L
+    for st in stats:
+        assert np.isfinite(st.err_after)
+        assert st.err_after <= st.err_before + 1e-6

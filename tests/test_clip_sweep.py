@@ -1,0 +1,242 @@
+"""One-pass BLC clip-grid sweep: fused Pallas kernel (interpret mode) vs
+the hoisted XLA path vs the seed ``lax.map`` oracle, the single-launch
+contract, and the backend plumbing through BLC."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blc import _best_clip_quant, blc, resolve_clip_backend
+from repro.core.quantize import (
+    DEFAULT_CLIP_GRID,
+    QuantSpec,
+    _clip_errors,
+    group_stats,
+    pseudo_quantize,
+    qparams_from_stats,
+    search_clip_ratio,
+)
+from repro.kernels import ref
+from repro.kernels.clip_sweep import clip_sweep_errors, kernel_shape_ok
+from repro.kernels.group_quant import group_pseudo_quant
+
+
+@pytest.fixture(scope="module")
+def wmat():
+    k = jax.random.PRNGKey(7)
+    w = jax.random.normal(k, (256, 512)) * 0.05
+    outlier = 1 + 6.0 * (jax.random.uniform(jax.random.PRNGKey(8),
+                                            (512,)) < 0.01)
+    return w * outlier
+
+
+@pytest.fixture(scope="module")
+def xcal():
+    return jax.random.normal(jax.random.PRNGKey(3), (512, 48))
+
+
+GRIDS = [DEFAULT_CLIP_GRID, (1.0, 0.8, 0.6)]
+
+
+# ---------------------------------------------------- stats factoring
+def test_qparams_from_stats_bitwise_matches_compute(wmat):
+    """The group-stats factoring is a pure hoist: scale/zp from reused
+    stats must equal the unfactored computation exactly, every clip."""
+    from repro.core.quantize import compute_qparams
+    for sym in (False, True):
+        spec = QuantSpec(4, 128, sym)
+        stats = group_stats(wmat, spec)
+        for c in DEFAULT_CLIP_GRID:
+            s1, z1 = compute_qparams(wmat, spec, c)
+            s2, z2 = qparams_from_stats(stats, spec, c)
+            np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+            np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+# ------------------------------------------- three-way sweep parity
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("symmetric", [False, True])
+@pytest.mark.parametrize("grid", GRIDS)
+def test_sweep_kernel_matches_hoisted_and_seed(wmat, xcal, bits, symmetric,
+                                               grid):
+    """Kernel (interpret) / hoisted XLA / seed lax.map oracle must select
+    the same clip ratio on calibrated AND Frobenius objectives, with the
+    hoisted errors bitwise-equal to the seed's and the kernel's equal to
+    tight fp tolerance (its n-blocked GEMM accumulates in a different
+    order)."""
+    spec = QuantSpec(bits, 128, symmetric)
+    e_seed = ref.clip_errors_ref(wmat, xcal, clips=grid, bits=bits,
+                                 symmetric=symmetric)
+    e_xla = _clip_errors(wmat, xcal, spec, jnp.asarray(grid, jnp.float32))
+    e_k = clip_sweep_errors(wmat, xcal, clips=grid, bits=bits,
+                            symmetric=symmetric, interpret=True)
+    np.testing.assert_array_equal(np.asarray(e_xla), np.asarray(e_seed))
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_seed),
+                               rtol=1e-4)
+    assert (int(jnp.argmin(e_k)) == int(jnp.argmin(e_xla))
+            == int(jnp.argmin(e_seed)))
+
+    f_seed = ref.clip_errors_ref(wmat, None, clips=grid, bits=bits,
+                                 symmetric=symmetric)
+    f_k = clip_sweep_errors(wmat, None, clips=grid, bits=bits,
+                            symmetric=symmetric, interpret=True)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_seed),
+                               rtol=1e-4)
+    assert int(jnp.argmin(f_k)) == int(jnp.argmin(f_seed))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_best_clip_quant_xla_matches_seed_formulation(wmat, xcal, bits):
+    """The routed XLA path returns the seed's exact winner and, compiled in
+    the same program, the exact round-trip at that winner (two separately
+    compiled programs may differ by FMA-contraction ulps, so the bitwise
+    comparison runs inside one jit)."""
+    spec = QuantSpec(bits, 128, False)
+
+    @jax.jit
+    def both(w, x):
+        wq, clip = _best_clip_quant(w, x, spec, DEFAULT_CLIP_GRID)
+        return wq, clip, pseudo_quantize(w, spec, clip)
+
+    wq, clip, wq_ref = both(wmat, xcal)
+    e_seed = ref.clip_errors_ref(wmat, xcal, clips=DEFAULT_CLIP_GRID,
+                                 bits=bits)
+    c_seed = DEFAULT_CLIP_GRID[int(jnp.argmin(e_seed))]
+    assert float(clip) == pytest.approx(c_seed)
+    np.testing.assert_array_equal(np.asarray(wq), np.asarray(wq_ref))
+
+
+def test_frobenius_search_matches_eye_objective(wmat):
+    """search_clip_ratio(w, None) — now scored as Σd² — must pick the same
+    clip the materialized eye(n) objective picked."""
+    for bits in (2, 4):
+        spec = QuantSpec(bits, 128, False)
+        c_direct = search_clip_ratio(wmat, None, spec)
+        e_eye = ref.clip_errors_ref(wmat, None, clips=DEFAULT_CLIP_GRID,
+                                    bits=bits)
+        assert float(c_direct) == pytest.approx(
+            DEFAULT_CLIP_GRID[int(jnp.argmin(e_eye))])
+
+
+# --------------------------------------------- single-launch contract
+def _count_primitive(jaxpr, name: str) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            n += _count_primitive(sub, name)
+    return n
+
+
+def test_sweep_is_one_pallas_launch(wmat, xcal):
+    """The whole grid's errors come from ONE pallas_call (one HBM read of
+    W) — not one launch per grid point."""
+    fn = lambda w, x: clip_sweep_errors(w, x, clips=DEFAULT_CLIP_GRID,
+                                        bits=4, interpret=True)
+    jaxpr = jax.make_jaxpr(fn)(wmat, xcal).jaxpr
+    assert _count_primitive(jaxpr, "pallas_call") == 1
+
+    fn_f = lambda w: clip_sweep_errors(w, None, clips=DEFAULT_CLIP_GRID,
+                                       bits=4, interpret=True)
+    jaxpr_f = jax.make_jaxpr(fn_f)(wmat).jaxpr
+    assert _count_primitive(jaxpr_f, "pallas_call") == 1
+
+
+def test_kernel_best_clip_is_two_launches_total(wmat, xcal):
+    """Kernel-path _best_clip_quant = one sweep launch + one re-quant
+    launch at the argmin — grid size never multiplies launch count."""
+    spec = QuantSpec(4, 128, False)
+    fn = lambda w, x: _best_clip_quant(w, x, spec, DEFAULT_CLIP_GRID,
+                                       mode="pallas_interpret")
+    jaxpr = jax.make_jaxpr(fn)(wmat, xcal).jaxpr
+    assert _count_primitive(jaxpr, "pallas_call") == 2
+
+
+# ------------------------------------------------ re-quant at argmin
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_group_pseudo_quant_traced_clip(wmat, bits, symmetric):
+    """The dequantizing group-quant twin with a TRACED clip matches the
+    XLA round-trip: identical codes up to exact rounding-boundary ties, so
+    the dequantized values agree within one quantization step on those
+    ties and to fp tolerance elsewhere."""
+    spec = QuantSpec(bits, 128, symmetric)
+    clip = jnp.float32(0.85)  # traced, not baked into the kernel
+    wq_k = jax.jit(lambda w, c: group_pseudo_quant(
+        w, c, bits=bits, symmetric=symmetric, interpret=True))(wmat, clip)
+    wq_x = pseudo_quantize(wmat, spec, clip)
+    from repro.core.quantize import compute_qparams
+    scale, _ = compute_qparams(wmat, spec, clip)
+    m, n = wmat.shape
+    local = np.broadcast_to(
+        np.asarray(scale), (m, n // spec.group_size,
+                            spec.group_size)).reshape(m, n)
+    d = np.abs(np.asarray(wq_k) - np.asarray(wq_x))
+    assert (d <= local * 1.01).all()  # never more than one code step
+    # code flips (exact .5 rounding ties pushed by an FMA ulp) must be
+    # rare; every other element agrees to ulp-level fp noise
+    flips = float((d > local * 0.5).mean())
+    assert flips < 1e-3, flips
+    noise = d[d <= local * 0.5]
+    assert noise.max() <= 1e-6
+
+
+# ------------------------------------------------- backend resolution
+def test_resolve_clip_backend():
+    assert resolve_clip_backend("xla", (256, 512), 4) == "xla"
+    if jax.default_backend() != "tpu":
+        assert resolve_clip_backend("auto", (256, 512), 4) == "xla"
+        assert resolve_clip_backend("pallas", (256, 512), 4) == \
+            "pallas_interpret"
+    # 3-bit and untileable shapes fall back under auto, raise under pallas
+    assert resolve_clip_backend("auto", (256, 512), 3) == "xla"
+    assert resolve_clip_backend("auto", (250, 500), 4) == "xla"
+    # a group size the 512-wide blocks cannot tile must also fall back
+    assert resolve_clip_backend("auto", (256, 2048), 4, group=1024) == "xla"
+    with pytest.raises(ValueError):
+        resolve_clip_backend("pallas", (256, 512), 3)
+    with pytest.raises(ValueError):
+        resolve_clip_backend("nope", (256, 512), 4)
+    assert kernel_shape_ok(256, 512) and not kernel_shape_ok(250, 512)
+    assert not kernel_shape_ok(256, 2048, group=1024)
+
+
+def test_pallas_mode_runs_on_gate_approved_shapes(wmat):
+    """Every shape the gate approves must run BOTH kernel launches — the
+    sweep and the argmin re-quantization share one tiling predicate
+    (n=1536 tiles 512-wide sweep blocks but not a 1024-wide requant
+    default; the routed path must agree with itself)."""
+    w = jnp.pad(wmat, ((0, 0), (0, 1024)))  # (256, 1536)
+    spec = QuantSpec(4, 128, False)
+    mode = resolve_clip_backend("pallas", w.shape, 4)
+    assert mode == ("pallas" if jax.default_backend() == "tpu"
+                    else "pallas_interpret")
+    wq, clip = jax.jit(lambda w: _best_clip_quant(
+        w, None, spec, DEFAULT_CLIP_GRID, mode=mode))(w)
+    assert wq.shape == w.shape and np.isfinite(np.asarray(wq)).all()
+
+
+def test_blc_clip_backend_pallas_matches_xla(wmat, xcal):
+    """End-to-end BLC with the kernel sweep (interpret) lands on the same
+    clip trajectory and an equivalent error as the XLA sweep (their
+    round-trips may differ on exact rounding ties, so errors are compared
+    to tolerance, clip choices exactly)."""
+    spec = QuantSpec(4, 128, False)
+    key = jax.random.PRNGKey(0)
+    res_x = blc(wmat, xcal, key, spec, rank=8, epochs=2, clip_backend="xla")
+    res_p = blc(wmat, xcal, key, spec, rank=8, epochs=2,
+                clip_backend="pallas")
+    assert float(res_x.clip) == float(res_p.clip)
+    assert float(res_p.err) == pytest.approx(float(res_x.err), rel=1e-3)
+    np.testing.assert_allclose(np.asarray(res_p.w_q), np.asarray(res_x.w_q),
+                               atol=1e-2)
+
+
+def test_blc_frobenius_objective(wmat):
+    """blc(x=None) — the no-calib path — runs the direct Σd² objective and
+    still improves monotonically over epochs' best."""
+    spec = QuantSpec(4, 128, False)
+    res = blc(wmat, None, jax.random.PRNGKey(0), spec, rank=8, epochs=2)
+    assert float(res.err) <= float(res.err_trace[0]) + 1e-9
+    assert np.isfinite(np.asarray(res.err_trace)).all()
