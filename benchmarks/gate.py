@@ -8,9 +8,11 @@ last k matching BENCH_quant_time.json entries as the reference value.
 
 ``--bench`` selects the gated workload: ``quant`` (stacked-engine
 quantization wall time, metric ``batched_min_s``) or ``serve`` (serving
-runtime decode wall time through the scanned ref backend, metric
-``decode_scan_ref_min_s`` — the interpret-mode kernel variant is excluded
-from gating by construction).
+runtime: the scanned-ref decode wall time ``decode_scan_ref_min_s`` AND
+the continuous scheduler's mixed-length Poisson workload wall time
+``mixed_sched_wall_min_s`` — the interpret-mode kernel variant is excluded
+from gating by construction). ``--metric`` takes a comma-separated list;
+each metric gates against its own reference from ONE benchmark run.
 
 Reference matching: an entry is comparable only if its proxy workload
 descriptor, backend AND host family (``quant_time.host_family``: "ci" /
@@ -77,8 +79,10 @@ def load_reference(bench: str, proxy: dict, backend: str, host: str,
     return recent[rank]
 
 
-_BENCH_DEFAULT_METRIC = {"quant": "batched_min_s",
-                         "serve": "decode_scan_ref_min_s"}
+_BENCH_DEFAULT_METRIC = {
+    "quant": "batched_min_s",
+    "serve": "decode_scan_ref_min_s,mixed_sched_wall_min_s",
+}
 
 
 def main(argv=None) -> int:
@@ -90,20 +94,30 @@ def main(argv=None) -> int:
                     help="allowed fractional slowdown vs reference "
                          "(0.25 = fail beyond +25%%)")
     ap.add_argument("--metric", default=None,
-                    help="wall-time metric to gate on (default: the "
-                         "bench's min-of-repeats statistic)")
+                    help="comma-separated wall-time metric(s) to gate on "
+                         "(default: the bench's min-of-repeats statistics)")
     ap.add_argument("--repeats", type=int, default=5)
     args = ap.parse_args(argv)
     if args.metric is None:
         args.metric = _BENCH_DEFAULT_METRIC[args.bench]
+    metrics = [m for m in args.metric.split(",") if m]
+    if not metrics:
+        print(f"[gate] FAIL: no metrics to gate (--metric {args.metric!r})")
+        return 2
 
     from . import quant_time
 
-    # Resolve the reference BEFORE running — the run appends a new entry
-    # to the trajectory, which must not gate itself.
+    # Resolve the references BEFORE running — the run appends new entries
+    # to the trajectory, which must not gate themselves. Each metric keys
+    # its OWN workload descriptor (the serve bench emits a stable decode
+    # record plus a separate mixed-workload record, so adding a workload
+    # never orphans another metric's baselines).
     if args.bench == "serve":
         from . import serve_throughput
-        proxy = serve_throughput.workload_descriptor()
+        proxies = {m: (serve_throughput.mixed_workload_descriptor()
+                       if m.startswith("mixed_")
+                       else serve_throughput.workload_descriptor())
+                   for m in metrics}
 
         def run_bench():
             # interpret-mode kernel timing is validation-only noise on a
@@ -111,9 +125,10 @@ def main(argv=None) -> int:
             return serve_throughput.run_bench(repeats=args.repeats,
                                               include_fused=False)
     else:
-        proxy = dict(layers=quant_time.STACK_L,
-                     tensors={k: list(v) for k, v in
-                              quant_time.STACK_TENSORS.items()})
+        quant_proxy = dict(layers=quant_time.STACK_L,
+                           tensors={k: list(v) for k, v in
+                                    quant_time.STACK_TENSORS.items()})
+        proxies = {m: quant_proxy for m in metrics}
 
         def run_bench():
             return quant_time.run_stacked(repeats=args.repeats,
@@ -122,34 +137,43 @@ def main(argv=None) -> int:
     import jax
     backend = jax.default_backend()
     host = quant_time.host_family()
-    ref = load_reference("quant_time", proxy, backend, host, args.metric)
+    refs = {m: load_reference("quant_time", proxies[m], backend, host, m)
+            for m in metrics}
 
     record = run_bench()
-    if args.metric not in record:
-        print(f"[gate] FAIL: metric {args.metric!r} not in record {record}")
+    missing = [m for m in metrics if m not in record]
+    if missing:
+        print(f"[gate] FAIL: metric(s) {missing} not in record {record}")
         return 2
-    got = float(record[args.metric])
+    got = {m: float(record[m]) for m in metrics}
 
-    if ref is None:
-        print(f"[gate] no comparable reference for backend={backend} "
-              f"host={host} workload={proxy} — recorded new "
-              f"baseline {args.metric}={got:.4f}s, passing")
-        return 0
+    def over(m):
+        return refs[m] is not None and \
+            got[m] > float(refs[m][m]) * (1.0 + args.tol)
 
-    ref_val = float(ref[args.metric])
-    limit = ref_val * (1.0 + args.tol)
-    if got > limit:
+    if any(over(m) for m in metrics):
         # One re-measure before failing: a single noisy window on a shared
         # runner must not fail the build — a real regression reproduces.
-        print(f"[gate] over limit ({got:.4f}s > {limit:.4f}s) — "
+        print(f"[gate] over limit on {[m for m in metrics if over(m)]} — "
               f"re-measuring once to rule out interference")
         record = run_bench()
-        got = min(got, float(record[args.metric]))
-    verdict = "PASS" if got <= limit else "FAIL"
-    print(f"[gate] {verdict}: {args.metric}={got:.4f}s vs reference "
-          f"{ref_val:.4f}s (ts={ref.get('ts', '?')}, tolerance "
-          f"+{args.tol:.0%} -> limit {limit:.4f}s)")
-    return 0 if got <= limit else 1
+        got = {m: min(got[m], float(record[m])) for m in metrics}
+
+    failed = False
+    for m in metrics:
+        if refs[m] is None:
+            print(f"[gate] no comparable reference for backend={backend} "
+                  f"host={host} workload={proxies[m]} — recorded new "
+                  f"baseline {m}={got[m]:.4f}s, passing")
+            continue
+        ref_val = float(refs[m][m])
+        limit = ref_val * (1.0 + args.tol)
+        verdict = "PASS" if got[m] <= limit else "FAIL"
+        failed |= got[m] > limit
+        print(f"[gate] {verdict}: {m}={got[m]:.4f}s vs reference "
+              f"{ref_val:.4f}s (ts={refs[m].get('ts', '?')}, tolerance "
+              f"+{args.tol:.0%} -> limit {limit:.4f}s)")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

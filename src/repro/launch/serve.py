@@ -1,15 +1,26 @@
 """Serving launcher: batched generation with optional FLRQ quantization.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --quantize 4 --requests 8 --new-tokens 16 --backend auto
+        --quantize 4 --requests 8 --new-tokens 16 --backend auto \
+        --scheduler continuous --prefill-chunk 32 --poisson-rate 50
 
 ``--backend`` selects the quantized-matmul execution path (see
 ``quant.apply``): "ref" (pure jnp), "fused" (Pallas kernel; interpret mode
 off-TPU), or "auto" (kernel on TPU when supported, ref elsewhere). The
-dispatch report printed after generation shows which path each tensor
-config actually took — bits=3 and other kernel-unsupported configs fall
-back to ref *visibly*. ``--no-scan`` unrolls the layer stack (L per-layer
-dispatches per step) instead of the default single scanned layer body.
+dispatch report shows which path each tensor config actually took —
+bits=3 and other kernel-unsupported configs fall back to ref *visibly*;
+under the continuous scheduler it is flushed at every queue drain, so a
+long-running serve surfaces fused→ref fallbacks without waiting for the
+end. ``--no-scan`` unrolls the layer stack (L per-layer dispatches per
+step) instead of the default single scanned layer body.
+
+``--scheduler continuous`` serves through the continuous-batching
+scheduler (per-slot admission, chunked prefill of ``--prefill-chunk``
+tokens per step, immediate slot retirement); ``--poisson-rate R`` replays
+a Poisson arrival process at R requests/s (0 = all requests at t=0) and
+``--mixed-lengths`` draws prompt lengths uniformly from
+[prompt_len/4, prompt_len] — the mixed-length workload where continuous
+batching beats the chunked engine.
 """
 from __future__ import annotations
 
@@ -26,6 +37,26 @@ from ..models import LM
 from ..quant.apply import BACKENDS, dispatch_report
 from ..quant.stacked import quantize_model_stacked
 from ..serve.engine import Engine, Request, ServeConfig
+from ..serve.scheduler import ContinuousScheduler, nearest_percentile
+
+
+def make_requests(rng, n, vocab, prompt_len, new_tokens, mixed: bool):
+    """Synthetic workload; ``mixed`` spans a 4x prompt-length range."""
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 4), prompt_len + 1)) \
+            if mixed else prompt_len
+        reqs.append(Request(rng.integers(2, vocab, plen).astype(np.int32),
+                            max_new_tokens=new_tokens, id=i))
+    return reqs
+
+
+def poisson_arrivals(rng, n, rate: float):
+    """Run-relative arrival offsets: Poisson process at ``rate`` req/s
+    (0 = everything arrives at t=0)."""
+    if rate <= 0:
+        return [0.0] * n
+    return list(np.cumsum(rng.exponential(1.0 / rate, size=n)))
 
 
 def main(argv=None):
@@ -47,6 +78,21 @@ def main(argv=None):
     ap.add_argument("--no-scan", action="store_true",
                     help="unroll the layer stack instead of scanning one "
                          "compiled layer body (A/B reference)")
+    ap.add_argument("--scheduler", default="chunked",
+                    choices=("chunked", "continuous"),
+                    help="chunked: slot-chunks prefill together and drain "
+                         "together (the A/B oracle); continuous: per-slot "
+                         "admission + chunked prefill + immediate "
+                         "retirement")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefilled per scheduler step "
+                         "(continuous scheduler; length-bucketed)")
+    ap.add_argument("--poisson-rate", type=float, default=0.0,
+                    help="replay a Poisson arrival process at this many "
+                         "requests/s (0 = all requests at t=0)")
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="draw prompt lengths uniformly from "
+                         "[prompt_len/4, prompt_len]")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -69,13 +115,36 @@ def main(argv=None):
               f"avg rank {np.mean(ranks):.1f}, {time.time()-t0:.1f}s")
 
     rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(2, cfg.vocab, args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.new_tokens, id=i)
-            for i in range(args.requests)]
+    reqs = make_requests(rng, args.requests, cfg.vocab, args.prompt_len,
+                         args.new_tokens, args.mixed_lengths)
     eng = Engine(model, params, ServeConfig(
         max_slots=args.slots, max_seq=args.prompt_len + args.new_tokens + 8,
         backend=args.backend, interpret=args.interpret or None))
+
     t0 = time.time()
+    if args.scheduler == "continuous":
+        # flush the dispatch report at every queue drain — a long-running
+        # serve surfaces fused→ref fallbacks without waiting for the end
+        on_drain = (lambda: print(dispatch_report())) if args.quantize \
+            else None
+        sched = ContinuousScheduler(eng, prefill_chunk=args.prefill_chunk,
+                                    on_drain=on_drain)
+        arrivals = poisson_arrivals(rng, len(reqs), args.poisson_rate)
+        sres = sched.run(reqs, arrivals)
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in sres)
+        ttfts = [r.ttft_s for r in sres]
+        p = lambda q: nearest_percentile(ttfts, q)
+        print(f"{len(sres)} requests, {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s incl. compile, continuous scheduler, "
+              f"chunk={args.prefill_chunk}, "
+              f"utilization {sched.utilization():.0%})")
+        print(f"  TTFT p50 {p(0.5)*1e3:.1f}ms p95 {p(0.95)*1e3:.1f}ms; "
+              f"queue mean {np.mean([r.queue_s for r in sres])*1e3:.1f}ms")
+        for r in sres[:3]:
+            print(f"  req {r.id}: {r.tokens}")
+        return 0
+
     results = eng.generate(reqs)
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)

@@ -217,6 +217,82 @@ class DenseStack:
         cache = {"k": ks, "v": vs}
         return h, cache
 
+    # ----------------------------------------------------- chunked prefill
+    def apply_prefill_slot(self, layers, x, cache, slot, start):
+        """Prefill a chunk of ONE prompt into its slot's decode-cache
+        region. x: (1, C, D) chunk embeddings; cache: the full decode cache
+        (L, B, S, KV, hd); ``slot``/``start`` traced int32 scalars — the
+        slot row and the chunk's absolute offset in it (chunked prefill
+        resumes mid-prompt at ``start``). K/V land at
+        cache[:, slot, start:start+C] via dynamic_update_slice, so the
+        executable's shapes never depend on where the chunk sits; the chunk
+        queries attend the whole slot row with ``q_offset=start`` causal
+        masking (keys past each query's absolute position — including any
+        padded chunk tail and stale retired-request entries — are masked,
+        and padded-tail K/V garbage is overwritten by the next write at
+        this slot's length before it ever becomes visible).
+        Returns (hidden (1, C, D), cache)."""
+        cfg = self.cfg
+        b, c, _ = x.shape
+        s_cache = cache["k"].shape[2]
+        positions = jnp.arange(c, dtype=jnp.int32)[None] + start  # (1, C)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, c))
+        kv8 = cfg.kv_cache_bits == 8
+
+        def row_update(cache_l, new):
+            """Write the chunk into this layer's (B, S, ...) cache at
+            (slot, start); returns (updated full cache_l, updated row)."""
+            row = jax.lax.dynamic_slice_in_dim(cache_l, slot, 1, axis=0)
+            row = jax.lax.dynamic_update_slice_in_dim(
+                row, new.astype(row.dtype), start, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                cache_l, row, slot, axis=0), row
+
+        def body(h, xs):
+            if kv8:
+                pl, idx, k_l, v_l, ks_l, vs_l = xs
+            else:
+                pl, idx, k_l, v_l = xs
+            q, k, v = self._qkv(pl, h, positions)  # k/v: (1, C, KV, hd)
+            if kv8:
+                kc, kscale = self._quant_kv(k)
+                vc, vscale = self._quant_kv(v)
+                k_l, k_row = row_update(k_l, kc)
+                v_l, v_row = row_update(v_l, vc)
+                ks_l, ks_row = row_update(ks_l, kscale)
+                vs_l, vs_row = row_update(vs_l, vscale)
+                k_row = k_row.astype(cfg.dtype) * ks_row.astype(cfg.dtype)
+                v_row = v_row.astype(cfg.dtype) * vs_row.astype(cfg.dtype)
+            else:
+                k_l, k_row = row_update(k_l, k)
+                v_l, v_row = row_update(v_l, v)
+            kr = repeat_kv(k_row, cfg.n_heads // cfg.n_kv_heads)
+            vr = repeat_kv(v_row, cfg.n_heads // cfg.n_kv_heads)
+            win = self._layer_window(idx, s_cache)
+            attn = flash_attention(q, kr, vr, causal=True, window=win,
+                                   softcap_val=cfg.attn_softcap,
+                                   q_offset=start)
+            attn = mm(attn.reshape(b, c, cfg.q_dim), pl["wo"])
+            if "post_attn_norm" in pl:
+                attn = rms_norm(attn, pl["post_attn_norm"])
+            h = h + attn
+            h = h + self._ffn(pl, h)
+            if kv8:
+                return h, (k_l, v_l, ks_l, vs_l)
+            return h, (k_l, v_l)
+
+        if kv8:
+            h, (ks, vs, kss, vss) = self._run_layers(
+                body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                          cache["v"], cache["k_scale"], cache["v_scale"]),
+                cfg.n_layers, cfg.scan_layers)
+            return h, {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+        h, (ks, vs) = self._run_layers(
+            body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                      cache["v"]), cfg.n_layers, cfg.scan_layers)
+        return h, {"k": ks, "v": vs}
+
     # -------------------------------------------------------------- decode
     def init_cache(self, batch: int, seq: int):
         cfg = self.cfg
@@ -236,18 +312,39 @@ class DenseStack:
 
     @staticmethod
     def _quant_kv(x):
-        """(B, 1, KV, hd) -> int8 codes + (B, 1, KV, 1) scale."""
+        """(B, T, KV, hd) -> int8 codes + (B, T, KV, 1) scale."""
         amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
         scale = jnp.maximum(amax, 1e-6) / 127.0
         codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
         return codes.astype(jnp.int8), scale.astype(jnp.bfloat16)
 
+    @staticmethod
+    def _cache_insert(cache_l, new, pos):
+        """Insert ``new`` (B, T, KV, hd) into ``cache_l`` (B, S, KV, hd) at
+        sequence offset ``pos`` — a shared scalar (the slot-chunked engine:
+        every slot at the same length) or a (B,) vector of per-slot write
+        positions (continuous batching: slots advance independently)."""
+        new = new.astype(cache_l.dtype)
+        pos = jnp.asarray(pos)
+        if pos.ndim == 0:
+            return jax.lax.dynamic_update_slice(cache_l, new, (0, pos, 0, 0))
+        return jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+        )(cache_l, new, pos)
+
     def apply_decode(self, layers, x, cache, length):
         """x: (B, 1, D) embedded token; cache k/v (L, B, S, KV, hd);
-        length: scalar int32 — number of valid tokens already cached."""
+        length: number of valid tokens already cached — a scalar int32
+        (slot-chunked serving: every slot at the same position) or a (B,)
+        int32 vector of per-slot lengths (continuous batching: each slot's
+        token writes at its own cache offset and attends its own prefix)."""
         cfg = self.cfg
         b = x.shape[0]
-        positions = jnp.full((b, 1), length, jnp.int32)
+        length = jnp.asarray(length)
+        if length.ndim:
+            positions = length[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.full((b, 1), length, jnp.int32)
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))
 
@@ -261,17 +358,15 @@ class DenseStack:
             if cfg.kv_cache_bits == 8:
                 kc, ks = self._quant_kv(k)
                 vc, vs = self._quant_kv(v)
-                k_l = jax.lax.dynamic_update_slice(k_l, kc, (0, length, 0, 0))
-                v_l = jax.lax.dynamic_update_slice(v_l, vc, (0, length, 0, 0))
-                ks_l = jax.lax.dynamic_update_slice(ks_l, ks, (0, length, 0, 0))
-                vs_l = jax.lax.dynamic_update_slice(vs_l, vs, (0, length, 0, 0))
+                k_l = self._cache_insert(k_l, kc, length)
+                v_l = self._cache_insert(v_l, vc, length)
+                ks_l = self._cache_insert(ks_l, ks, length)
+                vs_l = self._cache_insert(vs_l, vs, length)
                 k_use = k_l.astype(cfg.dtype) * ks_l.astype(cfg.dtype)
                 v_use = v_l.astype(cfg.dtype) * vs_l.astype(cfg.dtype)
             else:
-                k_l = jax.lax.dynamic_update_slice(
-                    k_l, k.astype(k_l.dtype), (0, length, 0, 0))
-                v_l = jax.lax.dynamic_update_slice(
-                    v_l, v.astype(v_l.dtype), (0, length, 0, 0))
+                k_l = self._cache_insert(k_l, k, length)
+                v_l = self._cache_insert(v_l, v, length)
                 k_use, v_use = k_l, v_l
             win = self._layer_window(idx, k_l.shape[1])
             if cfg.grouped_decode_attn:

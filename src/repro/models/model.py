@@ -137,9 +137,31 @@ class LM:
     def init_cache(self, batch: int, seq: int):
         return self.stack.init_cache(batch, seq)
 
+    def prefill_slot(self, params, tokens, cache, slot, start, last):
+        """Chunked prefill of ONE prompt into its decode-cache slot region:
+        tokens (1, C) int32 is the chunk, ``slot`` the cache row it owns,
+        ``start`` the chunk's offset in the prompt and ``last`` the chunk
+        index of its last REAL token (all traced scalars, so one executable
+        serves every slot and every resume point). Returns (logits (1, 1, V)
+        for position ``last`` ONLY — the final chunk's seed for the first
+        sampled token; unembedding all C chunk positions would burn C·D·V
+        FLOPs per chunk for rows nothing reads — and the updated full
+        decode cache)."""
+        if not hasattr(self.stack, "apply_prefill_slot"):
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no slot-granular prefill "
+                f"(continuous batching serves dense-stack families)")
+        x = self._embed_tokens(params, tokens)
+        h, cache = self.stack.apply_prefill_slot(
+            params["layers"], x, cache, slot, start)
+        h_last = jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1)
+        return self._logits_last(params, h_last), cache
+
     def decode_step(self, params, tokens, cache, length):
         """tokens: (B,) or (B, 1) int32; length: scalar int32 count of valid
-        cache entries. Returns (logits (B, 1, V), new cache)."""
+        cache entries, or a (B,) int32 vector of per-slot counts (continuous
+        batching: each slot writes and attends at its own position).
+        Returns (logits (B, 1, V), new cache)."""
         if tokens.ndim == 1:
             tokens = tokens[:, None]
         x = self._embed_tokens(params, tokens)

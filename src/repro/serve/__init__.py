@@ -1,0 +1,8 @@
+"""Serving runtime: slot-batched engine + continuous-batching scheduler."""
+from .engine import Engine, Request, Result, ServeConfig
+from .scheduler import ContinuousScheduler, SchedResult, StepTrace, bucket_sizes
+
+__all__ = [
+    "Engine", "Request", "Result", "ServeConfig",
+    "ContinuousScheduler", "SchedResult", "StepTrace", "bucket_sizes",
+]

@@ -1,10 +1,18 @@
 """Batched serving engine with KV-cache management and FLRQ-quantized
 weights as a first-class path.
 
-The engine serves a fixed-shape decode slot-batch (continuous batching):
-requests occupy slots; prefill fills a slot's cache region; every decode
-step advances all active slots by one token. Fixed shapes keep a single
-compiled executable for the whole serving lifetime (no recompiles at scale).
+Two serving modes share the engine's compiled executables:
+
+  * **Slot-chunked** (``generate``): requests are batched into fixed
+    slot-chunks that prefill together and decode until the whole chunk
+    drains. Simple, and kept as the A/B oracle for the scheduler.
+  * **Slot-granular** (``serve.scheduler.ContinuousScheduler``): the
+    engine exposes per-slot primitives — ``new_cache`` (one long-lived
+    decode cache), ``prefill_slot_chunk`` (a bounded chunk of ONE prompt
+    into its slot's cache region via ``dynamic_update_slice``), and
+    ``decode_slots`` (one global decode step over per-slot lengths) — so
+    a continuous-batching scheduler can admit/retire requests per slot
+    without ever changing the compiled decode executable's shapes.
 
 Quantized serving: pass ``params`` whose matrices are QuantizedLinear
 (from ``quant.stacked.quantize_model_stacked``) — the stacked tensors ride
@@ -40,6 +48,19 @@ class ServeConfig:
     interpret: Optional[bool] = None  # force Pallas interpret (CPU testing)
     donate_cache: Optional[bool] = None  # None: donate where XLA supports it
 
+    def resolve_donate(self) -> bool:
+        """Whether the cache-threading executables donate their cache
+        argument. ``None`` resolves from the backend ONCE, here — every
+        executable (chunked decode, slot prefill, slot decode) must agree,
+        or the scheduler's long-lived cache would be consumed by one step
+        and then handed, deleted, to the next. XLA:CPU ignores donation
+        (with a warning) but JAX still invalidates the donated buffer, so
+        default it off there; an explicit True/False always wins (tests
+        force True on CPU to exercise the invalidation discipline)."""
+        if self.donate_cache is None:
+            return jax.default_backend() != "cpu"
+        return bool(self.donate_cache)
+
 
 @dataclasses.dataclass
 class Request:
@@ -52,8 +73,10 @@ class Request:
 class Result:
     id: int
     tokens: List[int]
-    prefill_s: float
-    decode_s: float
+    prefill_s: float            # this request's batched-prefill wall time
+    decode_s: float             # first-token -> ITS last token (duration)
+    queue_s: float = 0.0        # wait before its prefill started
+    ttft_s: float = 0.0         # queue_s + prefill_s: submit -> first token
 
 
 class Engine:
@@ -61,6 +84,10 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        # trace-time counters: the scheduler's length-bucketing claim
+        # ("compile count bounded by the bucket set") is asserted on these.
+        self.prefill_slot_traces = 0
+        self.decode_traces = 0
 
         # The backend scope lives INSIDE the jitted callables so the policy
         # binds at trace time; each Engine owns its wrappers (and therefore
@@ -70,31 +97,74 @@ class Engine:
                 return model.prefill(p, toks)
 
         def decode(p, tok, cache, length):
+            self.decode_traces += 1  # runs at trace time only
             with backend_scope(cfg.backend, cfg.interpret):
                 return model.decode_step(p, tok, cache, length)
 
-        # Donate the decode cache: each step's cache update then reuses the
-        # previous step's buffers instead of allocating a second full-size
-        # KV cache (the decode-memory floor at long context). XLA:CPU
-        # ignores donation with a warning, so default it off there.
-        donate = cfg.donate_cache
-        if donate is None:
-            donate = jax.default_backend() != "cpu"
+        def prefill_slot(p, toks, cache, slot, start, last):
+            self.prefill_slot_traces += 1  # runs at trace time only
+            with backend_scope(cfg.backend, cfg.interpret):
+                return model.prefill_slot(p, toks, cache, slot, start, last)
+
+        # Donate the cache through every cache-threading executable: each
+        # step's update then reuses the previous step's buffers instead of
+        # allocating a second full-size KV cache (the decode-memory floor
+        # at long context). One resolution (cfg.resolve_donate) covers the
+        # chunked decode AND the scheduler's prefill-chunk/decode pair —
+        # the cache is consumed exactly once per call, and callers must
+        # rebind to the returned cache (the donated input is deleted).
+        donate = cfg.resolve_donate()
+        self._donate = donate
         self._decode = jax.jit(decode, donate_argnums=(2,)) if donate \
             else jax.jit(decode)
         self._prefill = jax.jit(prefill)
+        self._prefill_slot = jax.jit(prefill_slot, donate_argnums=(2,)) \
+            if donate else jax.jit(prefill_slot)
+
+    # ----------------------------------------------- slot-granular serving
+    # Primitives for the continuous-batching scheduler. The cache argument
+    # is DONATED when resolve_donate() says so: after a call returns, the
+    # passed-in cache is dead — always thread the returned one.
+    def new_cache(self):
+        """One long-lived decode cache covering all slots."""
+        return self.model.init_cache(self.cfg.max_slots, self.cfg.max_seq)
+
+    def prefill_slot_chunk(self, cache, slot: int, tokens, start: int,
+                           last: int):
+        """Prefill one bucketed chunk of one prompt into ``slot`` at offset
+        ``start``. tokens: (C,) int32 (C must be a bucket size — the caller
+        pads the final partial chunk); ``last`` is the chunk index of the
+        last real token, whose unembedded logits seed the first sampled
+        token on a final chunk. Returns (logits (1, 1, V), cache)."""
+        toks = jnp.asarray(np.asarray(tokens, np.int32))[None]
+        return self._prefill_slot(self.params, toks, cache,
+                                  jnp.int32(slot), jnp.int32(start),
+                                  jnp.int32(last))
+
+    def decode_slots(self, cache, tokens, lengths):
+        """One global decode step over per-slot lengths. tokens: (B,) int32
+        current token per slot; lengths: (B,) int32 per-slot cache lengths
+        (= each slot's write position; idle slots pass their length too, so
+        their masked garbage write lands exactly where the slot's next real
+        write will overwrite it). Returns (logits (B, 1, V), cache)."""
+        return self._decode(
+            self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
+            jnp.asarray(np.asarray(lengths, np.int32)))
 
     # -------------------------------------------------------------- serving
     def generate(self, requests: List[Request]) -> List[Result]:
         """Slot-batched generation. Requests are padded/batched to the
-        engine's fixed shapes; same-length prompt groups share one prefill."""
+        engine's fixed shapes; a chunk prefills together and decodes until
+        the whole chunk drains (the scheduler's A/B oracle)."""
         out = []
+        t_submit = time.perf_counter()
         for chunk_start in range(0, len(requests), self.cfg.max_slots):
             chunk = requests[chunk_start:chunk_start + self.cfg.max_slots]
-            out.extend(self._generate_chunk(chunk))
+            out.extend(self._generate_chunk(chunk, t_submit))
         return out
 
-    def _generate_chunk(self, chunk: List[Request]) -> List[Result]:
+    def _generate_chunk(self, chunk: List[Request],
+                        t_submit: Optional[float] = None) -> List[Result]:
         cfg = self.cfg
         b = cfg.max_slots
         plen = max(len(r.prompt) for r in chunk)
@@ -102,9 +172,22 @@ class Engine:
         for i, r in enumerate(chunk):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
         t0 = time.perf_counter()
+        # queue time: how long this chunk sat behind earlier chunks still
+        # draining (0 for the first chunk) — per-request truth, where the
+        # old shared prefill_s silently absorbed it.
+        queue_s = 0.0 if t_submit is None else t0 - t_submit
         logits, cache = self._prefill(self.params, jnp.asarray(toks))
         # move prefill cache into the full-size decode cache
         full = self.model.init_cache(b, cfg.max_seq)
+        if "k_scale" in full and "k_scale" not in cache:
+            # int8 KV cache: prefill returns fp K/V — quantize per
+            # (token, head) into codes+scales with the serving stack's own
+            # quantizer, like its decode step does (the fp cache
+            # previously crashed the tree_map below).
+            quant_kv = self.model.stack._quant_kv
+            kc, ks = quant_kv(cache["k"])
+            vc, vs = quant_kv(cache["v"])
+            cache = {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
 
         def place(dst, src):
             if dst.shape == src.shape:
@@ -113,12 +196,19 @@ class Engine:
             return jnp.pad(src.astype(dst.dtype), pad)
 
         cache = jax.tree.map(place, full, cache)
+        # prefill_s must cover EXECUTION, not JAX's async dispatch — without
+        # the block the timestamp lands in microseconds and the first decode
+        # step silently absorbs the real prefill wall time.
+        jax.block_until_ready(logits)
         prefill_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         max_new = max(r.max_new_tokens for r in chunk)
         cur = self._sample(logits)
         generated = [[int(cur[i])] for i in range(b)]
+        # per-token timestamps (decode-relative): token i of a request that
+        # stops early was emitted at step_s[i], not at full-drain time.
+        step_s = [0.0]
         length = plen
         for _ in range(max_new - 1):
             logits, cache = self._decode(
@@ -127,14 +217,17 @@ class Engine:
             cur = self._sample(logits)
             for i in range(b):
                 generated[i].append(int(cur[i]))
-        decode_s = time.perf_counter() - t0
+            step_s.append(time.perf_counter() - t0)
 
         results = []
         for i, r in enumerate(chunk):
             toks_i = generated[i][: r.max_new_tokens]
             if self.cfg.eos_token in toks_i:
                 toks_i = toks_i[: toks_i.index(self.cfg.eos_token) + 1]
-            results.append(Result(r.id, toks_i, prefill_s, decode_s))
+            results.append(Result(
+                r.id, toks_i, prefill_s,
+                decode_s=step_s[len(toks_i) - 1] if toks_i else 0.0,
+                queue_s=queue_s, ttft_s=queue_s + prefill_s))
         return results
 
     def _sample(self, logits) -> jax.Array:

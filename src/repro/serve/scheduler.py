@@ -1,0 +1,337 @@
+"""Continuous-batching request scheduler over the slot-granular Engine.
+
+The missing piece between "quantization engine" and production serving:
+the slot-chunked ``Engine.generate`` prefills a whole chunk together and
+decodes until the LAST request drains, so mixed-length workloads idle most
+slots most of the time. This scheduler keeps the quantized stacks
+saturated instead:
+
+  * **Per-slot admission** — requests queue with arrival times and are
+    admitted into an individual slot the moment one frees (FIFO by
+    arrival), not when a whole chunk forms.
+  * **Chunked prefill** — prompts prefill ``prefill_chunk`` tokens per
+    scheduler step, each chunk length-bucketed (powers of two up to
+    ``prefill_chunk``) so compile count is bounded by the bucket set, and
+    interleaved with the global decode step so a long prompt never stalls
+    in-flight decodes for its whole prefill.
+  * **Immediate retirement** — EOS / max-token completion frees the slot
+    this step; the next queued request is admitted at the next step's
+    admission pass.
+  * **Fixed decode shapes** — all cache writes go through
+    ``dynamic_update_slice`` on the one long-lived (donated) decode cache,
+    and per-slot lengths ride a (B,) vector, so the compiled decode
+    executable never changes shape over the serve's lifetime.
+
+Scheduling changes WHEN a request's tokens are computed, never WHAT they
+are: each slot's cache region is isolated (attention masks to the slot's
+own length; batched matmuls are row-independent), so per-request tokens
+are bitwise-identical to the chunked engine's under greedy sampling —
+tested in tests/test_scheduler.py.
+
+Cache-write invariant (why idle/prefilling slots are safe inside the
+global decode step): every slot's length entry is its NEXT write
+position, so the decode step's masked garbage write for a non-decoding
+slot lands exactly where that slot's next real write (its next prefill
+chunk, or an admitted prompt's first chunk at 0) overwrites it — and
+attention never reads past a slot's length.
+
+Streaming: ``on_token(request_id, token, done)`` fires per sampled token;
+``on_drain()`` fires whenever the system goes idle (queue empty, all
+slots free) — long-running serves flush e.g. the quant dispatch report
+there. Metrics: per-request TTFT / queue / inter-token latency / tok/s
+(``SchedResult``) plus a step-level utilization trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import Engine, Request
+
+# slot states
+_FREE, _PREFILL, _DECODE = 0, 1, 2
+
+
+def bucket_sizes(prefill_chunk: int) -> Tuple[int, ...]:
+    """The chunk-length bucket set: powers of two from 8 up to (and always
+    including) ``prefill_chunk``. Every prefill call pads its chunk to the
+    smallest covering bucket, so the number of prefill executables is
+    bounded by ``len(bucket_sizes(prefill_chunk))`` regardless of how many
+    distinct prompt lengths the workload brings."""
+    if prefill_chunk < 1:
+        raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 1")
+    sizes = []
+    b = 8
+    while b < prefill_chunk:
+        sizes.append(b)
+        b *= 2
+    sizes.append(prefill_chunk)
+    return tuple(sorted(set(sizes)))
+
+
+def _bucket(c: int, buckets: Tuple[int, ...]) -> int:
+    for b in buckets:
+        if b >= c:
+            return b
+    return buckets[-1]
+
+
+def nearest_percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-index percentile over unsorted values (0.0 for an empty
+    sequence). One definition shared by the serve CLI and the serving
+    benchmark so reported TTFT percentiles cannot silently diverge."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    return float(vs[min(len(vs) - 1, int(q * len(vs)))])
+
+
+@dataclasses.dataclass
+class SchedResult:
+    """Per-request outcome + latency metrics (times relative to run start,
+    except the *_s durations)."""
+    id: int
+    tokens: List[int]
+    arrival_s: float            # when the request entered the queue
+    queue_s: float              # arrival -> slot admission
+    ttft_s: float               # arrival -> first token emitted
+    finish_s: float             # arrival -> last token emitted
+    token_times: List[float]    # run-relative emission time per token
+
+    @property
+    def decode_s(self) -> float:
+        """First token -> last token."""
+        return self.token_times[-1] - self.token_times[0]
+
+    @property
+    def itl_s(self) -> List[float]:
+        """Inter-token latencies."""
+        return [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+
+    @property
+    def tok_s(self) -> float:
+        """Decode tokens/s (0.0 for single-token results — no decode
+        interval exists, and an inf would poison workload aggregates)."""
+        dt = self.decode_s
+        return (len(self.tokens) - 1) / dt if dt > 0 else 0.0
+
+
+@dataclasses.dataclass
+class StepTrace:
+    """One scheduler step of the utilization trace."""
+    t_s: float                  # run-relative step start
+    queued: int
+    prefilling: int
+    decoding: int
+    free: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    state: int = _FREE
+    req: Optional[Request] = None
+    arrival: float = 0.0
+    admit_t: float = 0.0
+    pos: int = 0                # prompt tokens prefilled so far
+    length: int = 0             # cache length == next write position
+    cur_tok: int = 0            # last sampled token (decode input)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    ttft_t: float = 0.0
+
+
+class ContinuousScheduler:
+    """Drives a slot-granular ``Engine``. Each ``run`` creates one
+    long-lived decode cache, drains a workload through it and returns
+    per-request results in completion order (key by ``.id``); the
+    ``trace``/``admission_order`` diagnostics are reset per run."""
+
+    def __init__(self, engine: Engine, prefill_chunk: int = 32,
+                 on_token: Optional[Callable[[int, int, bool], None]] = None,
+                 on_drain: Optional[Callable[[], None]] = None):
+        self.engine = engine
+        self.prefill_chunk = int(prefill_chunk)
+        self.buckets = bucket_sizes(self.prefill_chunk)
+        self.on_token = on_token
+        self.on_drain = on_drain
+        self.trace: List[StepTrace] = []
+        self.admission_order: List[int] = []   # request ids, admission order
+
+    # ------------------------------------------------------------ validate
+    def validate(self, req: Request) -> None:
+        """Reject a request the cache cannot hold — CLEANLY, before any
+        slot state exists for it (the chunked engine would silently write
+        past the cache)."""
+        plen = len(req.prompt)
+        need = plen + req.max_new_tokens
+        if plen < 1:
+            raise ValueError(f"request {req.id}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.id}: max_new_tokens="
+                f"{req.max_new_tokens} must be >= 1")
+        if need > self.engine.cfg.max_seq:
+            raise ValueError(
+                f"request {req.id}: prompt_len={plen} + "
+                f"max_new_tokens={req.max_new_tokens} = {need} exceeds "
+                f"max_seq={self.engine.cfg.max_seq} — rejected")
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request],
+            arrivals: Optional[Sequence[float]] = None) -> List[SchedResult]:
+        """Serve ``requests``; ``arrivals[i]`` (seconds, relative to run
+        start) replays an arrival process — a request is admissible only
+        once the wall clock passes its arrival (None = all at t=0)."""
+        if arrivals is None:
+            arrivals = [0.0] * len(requests)
+        if len(arrivals) != len(requests):
+            raise ValueError("arrivals must match requests 1:1")
+        for r in requests:
+            self.validate(r)
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        queue: Deque[Tuple[float, Request]] = deque(
+            (arrivals[i], requests[i]) for i in order)
+        self.trace, self.admission_order = [], []
+
+        eng = self.engine
+        n_slots = eng.cfg.max_slots
+        slots = [_Slot() for _ in range(n_slots)]
+        cache = eng.new_cache()   # donated through every step: always rebind
+        results: List[SchedResult] = []
+        was_busy = False
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+
+        def emit(slot: _Slot, tok: int, t: float) -> bool:
+            """Record one sampled token; returns True if the slot retires."""
+            slot.tokens.append(tok)
+            slot.token_times.append(t)
+            done = (tok == eng.cfg.eos_token
+                    or len(slot.tokens) >= slot.req.max_new_tokens)
+            if self.on_token is not None:
+                self.on_token(slot.req.id, tok, done)
+            return done
+
+        def retire(slot: _Slot) -> None:
+            results.append(SchedResult(
+                id=slot.req.id, tokens=slot.tokens,
+                arrival_s=slot.arrival,
+                queue_s=slot.admit_t - slot.arrival,
+                ttft_s=slot.ttft_t - slot.arrival,
+                finish_s=slot.token_times[-1] - slot.arrival,
+                token_times=slot.token_times))
+            # free immediately — the next admission pass hands this slot to
+            # the next queued request. Cache needs no reset: the newcomer
+            # overwrites from position 0 and never reads past its length.
+            slot.state, slot.req = _FREE, None
+            slot.pos = slot.length = slot.cur_tok = 0
+            slot.tokens, slot.token_times = [], []
+
+        while queue or any(s.state != _FREE for s in slots):
+            t_step = now()
+            # -- admission: free slots take arrived requests, FIFO
+            for slot in slots:
+                if slot.state != _FREE or not queue:
+                    continue
+                arr, req = queue[0]
+                if arr > t_step:
+                    break  # queue is arrival-sorted
+                queue.popleft()
+                slot.state = _PREFILL
+                slot.req = req
+                slot.arrival, slot.admit_t = arr, t_step
+                slot.pos = slot.length = 0
+                self.admission_order.append(req.id)
+
+            active = [s for s in slots if s.state != _FREE]
+            if not active:
+                if was_busy and self.on_drain is not None:
+                    self.on_drain()
+                was_busy = False
+                if not queue:
+                    break
+                time.sleep(max(0.0, queue[0][0] - now()))
+                continue
+            was_busy = True
+            self.trace.append(StepTrace(
+                t_s=t_step, queued=len(queue),
+                prefilling=sum(s.state == _PREFILL for s in slots),
+                decoding=sum(s.state == _DECODE for s in slots),
+                free=sum(s.state == _FREE for s in slots)))
+
+            # -- chunked prefill: every prefilling slot advances one chunk
+            for idx, slot in enumerate(slots):
+                if slot.state != _PREFILL:
+                    continue
+                prompt = np.asarray(slot.req.prompt, np.int32)
+                c = min(self.prefill_chunk, len(prompt) - slot.pos)
+                cb = _bucket(c, self.buckets)
+                start = slot.pos
+                if start + cb > eng.cfg.max_seq:
+                    # a padded tail would write past the cache (and
+                    # dynamic_update_slice would clamp the start, corrupting
+                    # earlier entries). K/V are position-local, so the final
+                    # chunk can instead cover the LAST cb prompt tokens —
+                    # re-prefilling the overlap with bitwise-identical
+                    # values. When even that is impossible (the prompt so
+                    # far is shorter than the covering bucket), advance by
+                    # the largest bucket that divides off unpadded — the
+                    # tail continues next step, and after one such chunk
+                    # the overlap path is always reachable. Both keep the
+                    # executable count bounded by the bucket set; the
+                    # exact-size escape below is only reachable when
+                    # max_seq is smaller than the smallest bucket.
+                    if start + c >= cb:
+                        start = slot.pos + c - cb
+                    else:
+                        fit = [b for b in self.buckets if b <= c]
+                        c = cb = fit[-1] if fit else c
+                chunk = np.zeros((cb,), np.int32)
+                n_real = slot.pos + c - start
+                chunk[:n_real] = prompt[start:start + n_real]
+                logits, cache = eng.prefill_slot_chunk(
+                    cache, idx, chunk, start, n_real - 1)
+                slot.pos += c
+                slot.length = slot.pos
+                if slot.pos == len(prompt):
+                    # final chunk: its last REAL position seeds the first
+                    # token (the padded tail carries no information)
+                    tok = int(eng._sample(logits)[0])
+                    slot.state = _DECODE
+                    slot.cur_tok = tok
+                    slot.ttft_t = now()
+                    if emit(slot, tok, slot.ttft_t):
+                        retire(slot)
+
+            # -- global decode step over every decoding slot
+            if any(s.state == _DECODE for s in slots):
+                toks = np.array([s.cur_tok for s in slots], np.int32)
+                lens = np.array([s.length for s in slots], np.int32)
+                logits, cache = eng.decode_slots(cache, toks, lens)
+                sampled = np.asarray(eng._sample(logits))
+                t_tok = now()
+                for i, slot in enumerate(slots):
+                    if slot.state != _DECODE:
+                        continue
+                    slot.length += 1
+                    tok = int(sampled[i])
+                    slot.cur_tok = tok
+                    if emit(slot, tok, t_tok):
+                        retire(slot)
+
+        if was_busy and self.on_drain is not None:
+            self.on_drain()
+        return results
+
+    # -------------------------------------------------------------- metrics
+    def utilization(self) -> float:
+        """Mean fraction of slots doing useful work across trace steps."""
+        if not self.trace:
+            return 0.0
+        n = self.engine.cfg.max_slots
+        return float(np.mean([(t.prefilling + t.decoding) / n
+                              for t in self.trace]))

@@ -1,0 +1,366 @@
+"""Continuous-batching scheduler: parity vs the chunked oracle (mixed
+lengths, quantized + fp, scan + no-scan), chunked-prefill boundary cases,
+slot retirement/admission ordering, length-bucketed compile counts,
+streaming callbacks, metrics, and cache-donation discipline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_PROXIES
+from repro.core.flrq import FLRQConfig
+from repro.models import LM
+from repro.quant.stacked import quantize_model_stacked
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.scheduler import ContinuousScheduler, bucket_sizes
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    base = dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                head_dim=32, d_ff=128, vocab=128, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+def _mixed_requests(lens=(3, 9, 5, 14, 7), vocab=128, new=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(2, vocab, l).astype(np.int32),
+                    max_new_tokens=(new or 4 + i), id=i)
+            for i, l in enumerate(lens)]
+
+
+def _oracle(model, params, reqs, max_seq=32):
+    """Per-request ground truth: the chunked engine with one request per
+    chunk (max_slots=1 — no left-padding, exact lengths)."""
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=max_seq))
+    return {r.id: eng.generate([r])[0].tokens for r in reqs}
+
+
+def _sched_tokens(model, params, reqs, max_seq=32, slots=3, chunk=4,
+                  arrivals=None, **scfg):
+    eng = Engine(model, params, ServeConfig(max_slots=slots,
+                                            max_seq=max_seq, **scfg))
+    sched = ContinuousScheduler(eng, prefill_chunk=chunk)
+    res = sched.run(reqs, arrivals)
+    return {r.id: r.tokens for r in res}, sched, eng
+
+
+@pytest.fixture(scope="module")
+def tiny_fp(key):
+    model = LM(_tiny_cfg())
+    return model, model.init(key)
+
+
+@pytest.fixture(scope="module")
+def tiny_quant(tiny_fp):
+    model, params = tiny_fp
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=4, blc_epochs=1, max_rank=4))
+    return model, qparams
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "no-scan"])
+@pytest.mark.parametrize("quantized", [False, True], ids=["fp", "quant"])
+def test_scheduler_matches_chunked_oracle(tiny_fp, tiny_quant, scan,
+                                          quantized):
+    """Acceptance: on a mixed-length workload the scheduler produces
+    bitwise-identical per-request tokens vs the chunked oracle under
+    greedy sampling — scheduling changes WHEN tokens are computed, never
+    WHAT they are."""
+    model, params = tiny_quant if quantized else tiny_fp
+    if not scan:
+        model = model.with_scan(False)
+    reqs = _mixed_requests()
+    oracle = _oracle(model, params, reqs)
+    got, _, _ = _sched_tokens(model, params, reqs)
+    assert got == oracle
+
+
+def test_scheduler_matches_batched_chunk_on_equal_lengths(tiny_quant):
+    """With equal prompt lengths the slot-chunked engine has no padding —
+    the scheduler must match it at full batch too."""
+    model, qparams = tiny_quant
+    reqs = _mixed_requests(lens=(7, 7, 7, 7), new=6)
+    eng = Engine(model, qparams, ServeConfig(max_slots=2, max_seq=32))
+    oracle = {r.id: r.tokens for r in eng.generate(reqs)}
+    got, _, _ = _sched_tokens(model, qparams, reqs, slots=2)
+    assert got == oracle
+
+
+def test_scheduler_parity_kv8_cache(key):
+    """int8 KV cache: chunked prefill quantizes per (token, head) exactly
+    like the decode step (and the chunked engine's kv8 path — previously a
+    tree_map crash — now quantizes its prefill cache the same way)."""
+    model = LM(_tiny_cfg(kv_cache_bits=8))
+    params = model.init(key)
+    reqs = _mixed_requests(lens=(3, 9, 6))
+    oracle = _oracle(model, params, reqs)
+    got, _, _ = _sched_tokens(model, params, reqs)
+    assert got == oracle
+
+
+def test_scheduler_parity_under_arrivals(tiny_fp):
+    """Arrival timing (and therefore admission interleaving) must not
+    change any request's tokens."""
+    model, params = tiny_fp
+    reqs = _mixed_requests()
+    oracle = _oracle(model, params, reqs)
+    got, _, _ = _sched_tokens(model, params, reqs,
+                              arrivals=[0.0, 0.02, 0.02, 0.0, 0.05])
+    assert got == oracle
+
+
+def test_vector_lengths_match_scalar_decode(tiny_fp):
+    """Model-level invariant under the scheduler's (B,) lengths vector:
+    equal per-slot lengths must reproduce the scalar-length decode
+    bitwise, and each slot's output must depend only on ITS OWN length."""
+    model, params = tiny_fp
+    b, plen = 2, 8
+    prompts = jnp.asarray(
+        np.arange(b * plen, dtype=np.int32).reshape(b, plen) % 100 + 2)
+    logits, cache = model.prefill(params, prompts)
+    full = model.init_cache(b, 16)
+    cache = jax.tree.map(
+        lambda d, s: jnp.pad(s.astype(d.dtype),
+                             [(0, x - y) for x, y in zip(d.shape, s.shape)]),
+        full, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    l_scalar, c_scalar = model.decode_step(params, tok, cache, jnp.int32(plen))
+    l_vec, c_vec = model.decode_step(
+        params, tok, cache, jnp.full((b,), plen, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(l_scalar), np.asarray(l_vec))
+    for a, c in zip(jax.tree.leaves(c_scalar), jax.tree.leaves(c_vec)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(c, np.float32))
+    # slot isolation: perturbing slot 1's length must not move slot 0
+    l_mixed, _ = model.decode_step(
+        params, tok, cache, jnp.asarray([plen, plen - 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(l_mixed[0]),
+                                  np.asarray(l_vec[0]))
+
+
+# ------------------------------------------------- prefill chunk boundaries
+@pytest.mark.parametrize("plen", [1, 3, 4, 5, 8, 11])
+def test_prefill_chunk_boundary_lengths(tiny_fp, plen):
+    """Prompt length below / at / above the chunk and off the chunk grid:
+    same tokens as the unchunked oracle (chunk=4 -> lengths 1..11 cover
+    partial-final, exact-multiple and multi-chunk cases)."""
+    model, params = tiny_fp
+    reqs = _mixed_requests(lens=(plen,), new=5)
+    oracle = _oracle(model, params, reqs)
+    got, _, _ = _sched_tokens(model, params, reqs, chunk=4)
+    assert got == oracle
+
+
+def test_prefill_final_chunk_overlap_near_max_seq(tiny_fp):
+    """The padded final chunk would write past max_seq — the scheduler
+    left-overlaps the last bucket of REAL prompt tokens instead
+    (recomputing position-local K/V bitwise) and still matches."""
+    model, params = tiny_fp
+    rng = np.random.default_rng(3)
+    reqs = [Request(rng.integers(2, 128, 19).astype(np.int32),
+                    max_new_tokens=1, id=0)]
+    oracle = _oracle(model, params, reqs, max_seq=20)
+    # chunk=8: final chunk c=3 buckets to 8; start 16+8 > max_seq=20
+    got, _, _ = _sched_tokens(model, params, reqs, max_seq=20, chunk=8)
+    assert got == oracle
+
+
+def test_prefill_smaller_bucket_when_overlap_impossible(tiny_fp):
+    """Prompt shorter than its covering bucket on a cache too small for
+    the pad: the scheduler advances by the largest smaller bucket
+    UNPADDED (tail next step, overlap then reachable) — still bucketed,
+    still matching the oracle."""
+    model, params = tiny_fp
+    rng = np.random.default_rng(5)
+    # buckets (8, 16): plen=11 -> bucket(11)=16 > max_seq=12 and 0+11 < 16
+    # -> first chunk is an unpadded 8, then overlap start=3 for the tail
+    reqs = [Request(rng.integers(2, 128, 11).astype(np.int32),
+                    max_new_tokens=1, id=0)]
+    oracle = _oracle(model, params, reqs, max_seq=12)
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=12))
+    sched = ContinuousScheduler(eng, prefill_chunk=16)
+    got = {r.id: r.tokens for r in sched.run(reqs)}
+    assert got == oracle
+    assert eng.prefill_slot_traces <= len(sched.buckets)
+
+
+def test_prompt_too_long_rejected_cleanly(tiny_fp):
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=16))
+    sched = ContinuousScheduler(eng, prefill_chunk=4)
+    bad = Request(np.arange(14, dtype=np.int32) + 2, max_new_tokens=8, id=9)
+    with pytest.raises(ValueError, match="exceeds max_seq=16"):
+        sched.run([bad])
+    # rejection happens before ANY slot state exists — no partial serve
+    assert sched.trace == [] and sched.admission_order == []
+    with pytest.raises(ValueError, match="max_new_tokens=0"):
+        sched.run([Request(np.arange(4, dtype=np.int32) + 2,
+                           max_new_tokens=0, id=1)])
+
+
+# ------------------------------------------------ admission and retirement
+def test_admission_fifo_and_slot_reuse(tiny_fp):
+    """More requests than slots: admission follows arrival order FIFO, a
+    retired slot is re-admitted while other slots are still serving, and
+    concurrency never exceeds max_slots."""
+    model, params = tiny_fp
+    reqs = _mixed_requests(lens=(3, 12, 4, 5, 6, 3), new=None)
+    oracle = _oracle(model, params, reqs)
+    got, sched, _ = _sched_tokens(model, params, reqs, slots=2, chunk=4)
+    assert got == oracle
+    assert sched.admission_order == [r.id for r in reqs]
+    for t in sched.trace:
+        assert t.prefilling + t.decoding <= 2
+    # with 6 requests on 2 slots, some step must have run with a non-empty
+    # queue while both slots were busy (continuous refill, not chunk drain)
+    assert any(t.queued > 0 and t.prefilling + t.decoding == 2
+               for t in sched.trace)
+
+
+def test_retirement_frees_slot_immediately(tiny_fp):
+    """A request hitting max_new_tokens=1 retires at its prefill step; the
+    queued request must be admitted at the very next step."""
+    model, params = tiny_fp
+    rng = np.random.default_rng(1)
+    reqs = [Request(rng.integers(2, 128, 4).astype(np.int32),
+                    max_new_tokens=1, id=0),
+            Request(rng.integers(2, 128, 4).astype(np.int32),
+                    max_new_tokens=3, id=1)]
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=32))
+    sched = ContinuousScheduler(eng, prefill_chunk=4)
+    res = sched.run(reqs)
+    assert [r.id for r in res] == [0, 1]
+    assert len(res[0].tokens) == 1 and len(res[1].tokens) == 3
+    assert res[0].tok_s == 0.0  # no decode interval — not inf
+
+
+# ------------------------------------------------------ compile bounding
+def test_length_bucketing_bounds_compiles(tiny_fp):
+    """Many distinct prompt lengths, bounded executables: prefill traces
+    <= |bucket set|, decode traces == 1 (the (B,) lengths vector keeps one
+    decode executable for the serve's whole lifetime)."""
+    model, params = tiny_fp
+    lens = (1, 2, 3, 5, 7, 9, 11, 13, 17, 19, 21, 23)
+    reqs = _mixed_requests(lens=lens, new=2)
+    eng = Engine(model, params, ServeConfig(max_slots=3, max_seq=40))
+    sched = ContinuousScheduler(eng, prefill_chunk=16)
+    assert sched.buckets == (8, 16)
+    sched.run(reqs)
+    assert eng.prefill_slot_traces <= len(sched.buckets)
+    assert eng.decode_traces == 1
+
+
+def test_bucket_sizes():
+    assert bucket_sizes(32) == (8, 16, 32)
+    assert bucket_sizes(16) == (8, 16)
+    assert bucket_sizes(8) == (8,)
+    assert bucket_sizes(4) == (4,)
+    assert bucket_sizes(12) == (8, 12)
+    with pytest.raises(ValueError):
+        bucket_sizes(0)
+
+
+# ----------------------------------------------------------- cache donation
+def test_donate_cache_resolution():
+    cfg = ServeConfig()
+    assert cfg.resolve_donate() == (jax.default_backend() != "cpu")
+    assert ServeConfig(donate_cache=True).resolve_donate() is True
+    assert ServeConfig(donate_cache=False).resolve_donate() is False
+
+
+def test_donated_cache_never_reused(tiny_fp):
+    """Donation discipline: with donate_cache=True every cache-threading
+    call consumes its cache input exactly once — the scheduler must never
+    hand a consumed cache back (e.g. a stale reference kept across a
+    mid-step slot retirement). JAX invalidates donated buffers even on
+    CPU, so both the id-tracking assertion and the run itself (a stale
+    reuse raises 'deleted buffer') are exercised here."""
+    model, params = tiny_fp
+    reqs = _mixed_requests(lens=(3, 9, 4, 5), new=None)
+    oracle = _oracle(model, params, reqs)
+    eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32,
+                                            donate_cache=True))
+    assert eng._donate
+    consumed = []
+    orig_prefill, orig_decode = eng.prefill_slot_chunk, eng.decode_slots
+
+    def track(cache):
+        leaf = jax.tree.leaves(cache)[0]
+        assert not any(leaf is c for c in consumed), \
+            "scheduler passed an already-donated cache"
+        consumed.append(leaf)
+
+    def prefill(cache, slot, toks, start, last):
+        track(cache)
+        return orig_prefill(cache, slot, toks, start, last)
+
+    def decode(cache, toks, lens):
+        track(cache)
+        return orig_decode(cache, toks, lens)
+
+    eng.prefill_slot_chunk, eng.decode_slots = prefill, decode
+    sched = ContinuousScheduler(eng, prefill_chunk=4)
+    res = sched.run(reqs)  # any stale reuse would also raise RuntimeError
+    assert {r.id: r.tokens for r in res} == oracle
+    assert len(consumed) > 4  # the cache really threaded through many calls
+
+
+# ------------------------------------------------- streaming and metrics
+def test_streaming_callbacks_and_metrics(tiny_fp):
+    model, params = tiny_fp
+    reqs = _mixed_requests(lens=(3, 9, 5), new=None)
+    streamed = {}
+    done_flags = {}
+
+    def on_token(rid, tok, done):
+        streamed.setdefault(rid, []).append(tok)
+        done_flags[rid] = done
+
+    drains = []
+    eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32))
+    sched = ContinuousScheduler(eng, prefill_chunk=4, on_token=on_token,
+                                on_drain=lambda: drains.append(1))
+    res = sched.run(reqs)
+    for r in res:
+        assert streamed[r.id] == r.tokens  # streamed == returned, in order
+        assert done_flags[r.id] is True
+        assert len(r.token_times) == len(r.tokens)
+        assert 0.0 <= r.queue_s <= r.ttft_s <= r.finish_s + 1e-9
+        assert all(b >= a for a, b in
+                   zip(r.token_times, r.token_times[1:]))
+        if len(r.tokens) > 1:
+            assert r.decode_s >= 0 and r.tok_s > 0
+            assert len(r.itl_s) == len(r.tokens) - 1
+    assert drains == [1]  # one drain event for one contiguous burst
+    assert 0.0 < sched.utilization() <= 1.0
+
+
+def test_chunked_engine_per_request_queue_and_ttft(tiny_fp):
+    """Satellite regression: the chunked engine reports true per-request
+    queue/prefill/TTFT — the second chunk's requests carry the first
+    chunk's full drain in queue_s, and an early-EOS/max_new request's
+    decode_s stops at ITS last token instead of the chunk drain."""
+    model, params = tiny_fp
+    rng = np.random.default_rng(2)
+    reqs = [Request(rng.integers(2, 128, 5).astype(np.int32),
+                    max_new_tokens=n, id=i)
+            for i, n in enumerate((8, 2))]
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=32))
+    r0, r1 = eng.generate(reqs)
+    assert r0.queue_s < r1.queue_s  # chunk 2 waited for chunk 1's drain
+    assert r1.queue_s >= r0.prefill_s + r0.decode_s
+    for r in (r0, r1):
+        assert abs(r.ttft_s - (r.queue_s + r.prefill_s)) < 1e-9
+    # r1 generated 2 tokens in an 8-step-capable chunk of its own: its
+    # decode_s covers exactly its own steps (strictly less than r0's)
+    assert r1.decode_s <= r0.decode_s
+    # same-chunk requests share one batched prefill wall time
+    eng2 = Engine(model, params, ServeConfig(max_slots=2, max_seq=32))
+    b0, b1 = eng2.generate([reqs[0], dataclasses.replace(reqs[1], id=9)])
+    assert b0.prefill_s == b1.prefill_s and b0.queue_s == b1.queue_s
+    assert b1.decode_s <= b0.decode_s  # early stop at its own last token
