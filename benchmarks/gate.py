@@ -8,10 +8,12 @@ last k matching BENCH_quant_time.json entries as the reference value.
 
 ``--bench`` selects the gated workload: ``quant`` (stacked-engine
 quantization wall time, metric ``batched_min_s``) or ``serve`` (serving
-runtime: the scanned-ref decode wall time ``decode_scan_ref_min_s`` AND
-the continuous scheduler's mixed-length Poisson workload wall time
-``mixed_sched_wall_min_s`` — the interpret-mode kernel variant is excluded
-from gating by construction). ``--metric`` takes a comma-separated list;
+runtime: the scanned-ref decode wall time ``decode_scan_ref_min_s``, the
+continuous scheduler's mixed-length Poisson workload wall time
+``mixed_sched_wall_min_s``, and the supervised chaos workload's
+``chaos_recovery_wall_min_s`` + ``chaos_wasted_token_fraction`` — the
+interpret-mode kernel variant is excluded from gating by construction).
+``--metric`` takes a comma-separated list;
 each metric gates against its own reference from ONE benchmark run.
 
 Reference matching: an entry is comparable only if its proxy workload
@@ -81,7 +83,8 @@ def load_reference(bench: str, proxy: dict, backend: str, host: str,
 
 _BENCH_DEFAULT_METRIC = {
     "quant": "batched_min_s",
-    "serve": "decode_scan_ref_min_s,mixed_sched_wall_min_s",
+    "serve": ("decode_scan_ref_min_s,mixed_sched_wall_min_s,"
+              "chaos_recovery_wall_min_s,chaos_wasted_token_fraction"),
 }
 
 
@@ -114,10 +117,14 @@ def main(argv=None) -> int:
     # never orphans another metric's baselines).
     if args.bench == "serve":
         from . import serve_throughput
-        proxies = {m: (serve_throughput.mixed_workload_descriptor()
-                       if m.startswith("mixed_")
-                       else serve_throughput.workload_descriptor())
-                   for m in metrics}
+        def serve_proxy(m):
+            if m.startswith("mixed_"):
+                return serve_throughput.mixed_workload_descriptor()
+            if m.startswith("chaos_"):
+                return serve_throughput.chaos_workload_descriptor()
+            return serve_throughput.workload_descriptor()
+
+        proxies = {m: serve_proxy(m) for m in metrics}
 
         def run_bench():
             # interpret-mode kernel timing is validation-only noise on a

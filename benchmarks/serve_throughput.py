@@ -20,10 +20,21 @@ end-to-end wall time (``mixed_sched_wall_min_s``), tok/s
 (``mixed_decode_toks_per_s``) and TTFT p50/p95 land in the same record;
 the chunked numbers sit beside them as the A/B.
 
+Plus the **chaos workload**: the same request mix served through the
+fault-tolerant supervisor (2 replicas, shared queue) with a deterministic
+replica kill mid-decode — measuring what fault tolerance *costs*:
+``chaos_recovery_wall_min_s`` (end-to-end wall including salvage, backoff,
+rebuild and re-prefill), ``chaos_recovery_overhead_x`` (vs the same
+supervised fleet with no fault), and ``chaos_wasted_token_fraction``
+(positions recomputed / total computed). The run hard-fails if any request
+is dropped or ends non-ok — a chaos benchmark that quietly sheds work
+would report a flattering wall time.
+
 Each variant reports prefill and decode tokens/s; the record lands in the
 BENCH_quant_time.json trajectory and ``benchmarks.gate --bench serve``
 gates the scanned-ref decode wall time AND the mixed scheduler wall time
-(min-of-repeats, p95-of-last-10 reference).
+AND the chaos recovery wall + wasted-token fraction (min-of-repeats,
+p95-of-last-10 reference).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput
 """
@@ -87,6 +98,13 @@ MIX_RATE = 200.0            # requests/s
 MIX_CHUNK = 32
 MIX_MAX_SEQ = MIX_PROMPT_MAX + MIX_NEW_MAX + 8
 
+# Chaos workload: smaller than the mixed trace (two replicas double the
+# compile bill) but long enough that the step-8 kill always lands
+# mid-serve with work in flight on replica 0.
+CHAOS_REQUESTS = 12
+CHAOS_REPLICAS = 2
+CHAOS_PLAN = "exception@8:decode:0"
+
 
 def workload_descriptor() -> dict:
     """The gate's comparability key: a changed serving workload re-baselines
@@ -108,6 +126,18 @@ def mixed_workload_descriptor() -> dict:
                 prompt=[MIX_PROMPT_MIN, MIX_PROMPT_MAX],
                 new_tokens=[MIX_NEW_MIN, MIX_NEW_MAX],
                 rate=MIX_RATE, chunk=MIX_CHUNK)
+
+
+def chaos_workload_descriptor() -> dict:
+    """Comparability key for the supervised chaos workload — the fault
+    plan is part of the workload: changing the kill coordinate re-baselines
+    instead of comparing different recoveries."""
+    return dict(kind="serve_chaos", layers=SERVE_L, d_model=SERVE_D,
+                d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS, bits=BITS,
+                replicas=CHAOS_REPLICAS, requests=CHAOS_REQUESTS,
+                prompt=[MIX_PROMPT_MIN, MIX_PROMPT_MAX],
+                new_tokens=[MIX_NEW_MIN, MIX_NEW_MAX],
+                plan=CHAOS_PLAN, chunk=MIX_CHUNK)
 
 
 def mixed_workload():
@@ -195,6 +225,82 @@ def run_mixed(model, qparams, repeats: int = 3) -> dict:
     return out
 
 
+def run_chaos(model, qparams, repeats: int = 3) -> dict:
+    """Recovery-overhead measurement: the supervised fleet serves the
+    chaos trace twice — fault-free, then with replica 0 killed mid-decode
+    at a fixed step — on the SAME engine pool (the factory cycles through
+    pre-built engines so repeats and the A/B share compiled executables).
+    Every faulted run must reconcile to zero drops with all-ok statuses
+    and at least one restart, or the benchmark hard-fails: a chaos number
+    that quietly shed work would be flattering fiction."""
+    import itertools
+
+    from repro.serve.faults import FaultPlan
+    from repro.serve.scheduler import nearest_percentile
+    from repro.serve.supervisor import Supervisor, SupervisorConfig
+
+    repeats = min(repeats, 3)  # two supervised fleets per repeat: cap cost
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(CHAOS_REQUESTS):
+        plen = int(rng.integers(MIX_PROMPT_MIN, MIX_PROMPT_MAX + 1))
+        new = int(rng.integers(MIX_NEW_MIN, MIX_NEW_MAX + 1))
+        reqs.append(Request(rng.integers(2, SERVE_VOCAB, plen)
+                            .astype(np.int32), max_new_tokens=new, id=i))
+    pool = [Engine(model, qparams, ServeConfig(
+        max_slots=SLOTS, max_seq=MIX_MAX_SEQ, backend="ref"))
+        for _ in range(CHAOS_REPLICAS)]
+    counter = itertools.count()
+
+    def factory():
+        return pool[next(counter) % CHAOS_REPLICAS]
+
+    def sup_cfg():
+        return SupervisorConfig(replicas=CHAOS_REPLICAS,
+                                prefill_chunk=MIX_CHUNK,
+                                backoff_base_s=0.01)
+
+    Supervisor(factory, sup_cfg()).serve(reqs)  # warm: compile both pools
+    nofault_walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        rep = Supervisor(factory, sup_cfg()).serve(reqs)
+        nofault_walls.append(time.perf_counter() - t0)
+        if not rep.zero_drops:
+            raise RuntimeError(f"no-fault fleet dropped requests: "
+                               f"{rep.status_counts()}")
+    fault_walls, fracs, ttfts = [], [], []
+    for _ in range(repeats):
+        sup = Supervisor(factory, sup_cfg(),
+                         fault_plan=FaultPlan.parse(CHAOS_PLAN))
+        t0 = time.perf_counter()
+        rep = sup.serve(reqs)
+        fault_walls.append(time.perf_counter() - t0)
+        counts = rep.status_counts()
+        if not rep.zero_drops or set(counts) != {"ok"} or \
+                sum(rep.restarts.values()) < 1:
+            raise RuntimeError(
+                f"chaos run invalid: statuses={dict(counts)} "
+                f"restarts={rep.restarts} drops="
+                f"{rep.submitted - len(rep.outcomes)}")
+        fracs.append(rep.wasted_token_fraction)
+        ttfts.extend(o.ttft_s for o in rep.outcomes)
+
+    n_min, f_min = float(np.min(nofault_walls)), float(np.min(fault_walls))
+    out = {
+        "chaos_nofault_wall_min_s": round(n_min, 4),
+        "chaos_recovery_wall_min_s": round(f_min, 4),
+        "chaos_recovery_overhead_x": round(f_min / max(n_min, 1e-9), 3),
+        "chaos_wasted_token_fraction": round(float(np.max(fracs)), 4),
+        "chaos_ttft_p95_s": round(nearest_percentile(ttfts, 0.95), 4),
+    }
+    emit("serve_throughput.chaos.recovery", f_min * 1e6,
+         f"kill+restart overhead {out['chaos_recovery_overhead_x']:.2f}x "
+         f"vs no-fault fleet, wasted tokens "
+         f"{out['chaos_wasted_token_fraction']:.1%}")
+    return out
+
+
 def _build():
     cfg = dataclasses.replace(
         PAPER_PROXIES["opt-proxy-25m"], n_layers=SERVE_L, d_model=SERVE_D,
@@ -211,7 +317,8 @@ def _build():
 
 
 def run_bench(repeats: int = 3, include_fused: bool = True,
-              include_mixed: bool = True) -> dict:
+              include_mixed: bool = True,
+              include_chaos: bool = True) -> dict:
     """Measure every variant; returns the record appended to the
     BENCH_quant_time.json trajectory."""
     model, qparams, reqs = _build()
@@ -261,6 +368,13 @@ def run_bench(repeats: int = 3, include_fused: bool = True,
         # merged view for callers (the gate reads per-metric records by
         # their own proxies; the merge keys do not collide)
         record.update(mixed)
+        record["proxy"] = workload_descriptor()
+    if include_chaos:
+        chaos = dict(proxy=chaos_workload_descriptor(),
+                     backend=jax.default_backend(), host=host_family())
+        chaos.update(run_chaos(model, qparams, repeats=repeats))
+        emit_bench_json("quant_time", chaos)
+        record.update(chaos)
         record["proxy"] = workload_descriptor()
     return record
 

@@ -12,16 +12,24 @@ Layout on disk:
 Fault-tolerance properties:
   * async: ``save`` snapshots to host RAM synchronously (cheap device→host
     copy of local shards) and writes in a background thread — training
-    continues; ``wait()`` joins before the next save or exit.
+    continues; ``wait()`` joins before the next save or exit. A background
+    write that fails is NEVER swallowed: the exception is captured and
+    re-raised at the next ``wait()``/``save()`` (an unreported checkpoint
+    failure is a restore-time data loss discovered months later).
   * atomic: tmp-dir + rename + COMMIT marker; a process killed mid-save
-    never corrupts the latest-complete link.
+    never corrupts the latest-complete link. The injectable ``fault_hook``
+    (serve.faults) fires between shard write and COMMIT — the exact window
+    a kill-during-checkpoint test must hit.
+  * verified: the manifest records a sha256 + byte count per shard;
+    ``restore`` refuses corrupt or truncated shards with
+    ``CheckpointCorruptionError`` instead of loading garbage weights.
   * elastic: restore reshards to *any* mesh via jax.make_array_from_callback
     on the target sharding (512→256 survivors works; tested).
   * retention: keep-last-k garbage collection.
 """
 from __future__ import annotations
 
-import dataclasses
+import hashlib
 import json
 import pathlib
 import shutil
@@ -32,6 +40,10 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A shard failed checksum/size verification at restore time."""
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
@@ -45,10 +57,15 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # fault-injection hook (serve.faults.FaultInjector.check): called
+        # with site "checkpoint" between shard write and COMMIT. None in
+        # production.
+        self.fault_hook = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, blocking: bool = False) -> None:
-        self.wait()
+        self.wait()  # joins AND re-raises a prior background failure
         flat, _ = jax.tree_util.tree_flatten_with_path(tree)
         host_data = {}
         meta = {}
@@ -63,23 +80,40 @@ class Checkpointer:
                 meta[key] = dict(shape=list(arr.shape), dtype=str(arr.dtype))
 
         def write():
-            tmp = self.dir / f".tmp_step_{step:09d}"
-            final = self.dir / f"step_{step:09d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir(parents=True)
-            np.savez(tmp / "shard_00000.npz",
-                     **{k.replace("/", "\\"): v for k, v in host_data.items()})
-            (tmp / "manifest.json").write_text(json.dumps(
-                dict(step=step, leaves=meta, time=time.time()), indent=1))
-            (tmp / "COMMIT").write_text("ok")
-            if final.exists():
-                shutil.rmtree(final)
-            tmp.rename(final)
-            self._gc()
+            # a raise anywhere in here (disk full, injected kill) leaves
+            # the tmp dir without COMMIT — invisible to restore — and is
+            # captured for re-raise at the next wait()/save()
+            try:
+                tmp = self.dir / f".tmp_step_{step:09d}"
+                final = self.dir / f"step_{step:09d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / "shard_00000.npz",
+                         **{k.replace("/", "\\"): v
+                            for k, v in host_data.items()})
+                shards = {}
+                for f in sorted(tmp.glob("shard_*.npz")):
+                    payload = f.read_bytes()
+                    shards[f.name] = dict(
+                        sha256=hashlib.sha256(payload).hexdigest(),
+                        bytes=len(payload))
+                (tmp / "manifest.json").write_text(json.dumps(
+                    dict(step=step, leaves=meta, shards=shards,
+                         time=time.time()), indent=1))
+                if self.fault_hook is not None:
+                    self.fault_hook("checkpoint")
+                (tmp / "COMMIT").write_text("ok")
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — captured, not lost
+                self._error = e
 
         if blocking:
             write()
+            self._raise_pending()
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
@@ -88,6 +122,12 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
 
     def _gc(self) -> None:
         steps = sorted(self._complete_steps())
@@ -116,6 +156,22 @@ class Checkpointer:
             raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
         d = self.dir / f"step_{step:09d}"
         manifest = json.loads((d / "manifest.json").read_text())
+        # shard verification (manifests predating checksums skip it):
+        # corrupt weights must fail HERE, not as garbage activations later
+        for name, info in manifest.get("shards", {}).items():
+            f = d / name
+            if not f.exists():
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {step}: shard {name} missing")
+            payload = f.read_bytes()
+            if len(payload) != info["bytes"]:
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {step}: shard {name} truncated "
+                    f"({len(payload)} bytes, manifest says {info['bytes']})")
+            if hashlib.sha256(payload).hexdigest() != info["sha256"]:
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {step}: shard {name} failed sha256 "
+                    "verification — refusing to load corrupt weights")
         data = np.load(d / "shard_00000.npz")
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)

@@ -15,7 +15,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -39,12 +41,13 @@ class HealthMonitor:
 
     def __init__(self, n_hosts: int, hosts_per_pod: int = 16,
                  timeout_s: float = 60.0, straggler_factor: float = 2.0,
-                 window: int = 16):
+                 window: int = 16, model_axis: int = 16):
         self.hosts = {i: HostState(i) for i in range(n_hosts)}
         self.hosts_per_pod = hosts_per_pod
         self.timeout_s = timeout_s
         self.straggler_factor = straggler_factor
         self.window = window
+        self.model_axis = model_axis
 
     def heartbeat(self, host_id: int, step_time_s: Optional[float] = None,
                   now: Optional[float] = None) -> None:
@@ -81,30 +84,57 @@ class HealthMonitor:
 
     def survivor_mesh(self, dead: Sequence[int]) -> Tuple[int, ...]:
         """Largest power-of-two data axis that the surviving host count
-        supports, keeping the model axis intact (elastic re-mesh target).
-        E.g. 32 hosts (512 chips as (2,16,16)), one dead pod-half ->
-        (16, 16) single-pod mesh."""
+        supports, keeping the model axis (``model_axis``, the sharding
+        degree the checkpoint was written for) intact — the elastic
+        re-mesh target. E.g. 32 hosts (512 chips as (2,16,16)), one dead
+        pod-half -> (16, 16) single-pod mesh."""
         alive = sum(1 for h in self.hosts.values() if h.alive
                     and h.host_id not in dead)
         chips = alive * self.hosts_per_pod
-        model = 16
+        model = self.model_axis
         data = 1
         while data * 2 * model <= chips:
             data *= 2
         return (data, model)
 
 
-def run_with_retries(fn, max_restarts: int = 3,
-                     on_restart=None) -> Tuple[int, object]:
+def backoff_delay(attempt: int, base_s: float = 0.05, factor: float = 2.0,
+                  jitter: float = 0.25,
+                  rng: Optional[np.random.Generator] = None) -> float:
+    """Exponential backoff with seeded multiplicative jitter:
+    ``base * factor**attempt * (1 ± jitter)``. Pass the caller's PRNG for
+    deterministic jitter (thundering-herd spread that still replays
+    bitwise in tests); no rng -> no jitter. Shared by ``run_with_retries``
+    and the serving supervisor's replica-restart scheduling."""
+    d = base_s * (factor ** max(0, int(attempt)))
+    if jitter and rng is not None:
+        d *= 1.0 + jitter * float(rng.uniform(-1.0, 1.0))
+    return max(0.0, d)
+
+
+def run_with_retries(fn, max_restarts: int = 3, on_restart=None,
+                     retryable: Tuple[type, ...] = (TimeoutError, OSError),
+                     backoff_base_s: float = 0.0, backoff_factor: float = 2.0,
+                     backoff_jitter: float = 0.0, seed: int = 0,
+                     sleep=time.sleep) -> Tuple[int, object]:
     """Driver-level restart wrapper: re-invokes ``fn(attempt)`` after
     recoverable failures (the checkpointed train_loop resumes itself).
+    ``retryable`` configures which exception classes count as recoverable
+    — anything else propagates immediately. ``backoff_base_s > 0`` turns
+    on seeded exponential backoff between attempts (``backoff_delay``;
+    ``sleep`` is injectable so tests use a virtual clock). Defaults keep
+    the historical behavior: retry TimeoutError/OSError with no delay.
     Returns (attempts_used, result)."""
+    rng = np.random.default_rng(seed)
     last_exc = None
     for attempt in range(max_restarts + 1):
         try:
             return attempt, fn(attempt)
-        except (TimeoutError, OSError) as e:  # recoverable classes
+        except retryable as e:
             last_exc = e
             if on_restart:
                 on_restart(attempt, e)
+            if attempt < max_restarts and backoff_base_s > 0:
+                sleep(backoff_delay(attempt, backoff_base_s, backoff_factor,
+                                    backoff_jitter, rng))
     raise RuntimeError(f"exhausted {max_restarts} restarts") from last_exc

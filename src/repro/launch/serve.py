@@ -21,6 +21,17 @@ a Poisson arrival process at R requests/s (0 = all requests at t=0) and
 ``--mixed-lengths`` draws prompt lengths uniformly from
 [prompt_len/4, prompt_len] — the mixed-length workload where continuous
 batching beats the chunked engine.
+
+Fault-tolerant serving (see ``serve.supervisor``): ``--replicas N`` puts
+N scheduler-backed replicas behind one shared admission queue with
+supervised restart; ``--fault-plan`` injects deterministic faults in the
+CLI format ``kind@step[:site[:replica[:arg]]]`` (e.g.
+``exception@4:decode:0``, plus ``random@seed:rate:n``); ``--deadline-s``
+stamps a per-request deadline, ``--queue-cap`` bounds the admission queue
+with explicit load-shedding, ``--max-restarts`` caps replica rebuilds.
+The drain-time report then includes per-request terminal status counts
+(``ok | timeout | rejected | failed``), per-replica restart counts, and
+the wasted-token fraction of the recovery work.
 """
 from __future__ import annotations
 
@@ -37,17 +48,21 @@ from ..models import LM
 from ..quant.apply import BACKENDS, dispatch_report
 from ..quant.stacked import quantize_model_stacked
 from ..serve.engine import Engine, Request, ServeConfig
+from ..serve.faults import FaultPlan
 from ..serve.scheduler import ContinuousScheduler, nearest_percentile
+from ..serve.supervisor import Supervisor, SupervisorConfig
 
 
-def make_requests(rng, n, vocab, prompt_len, new_tokens, mixed: bool):
+def make_requests(rng, n, vocab, prompt_len, new_tokens, mixed: bool,
+                  deadline_s=None):
     """Synthetic workload; ``mixed`` spans a 4x prompt-length range."""
     reqs = []
     for i in range(n):
         plen = int(rng.integers(max(1, prompt_len // 4), prompt_len + 1)) \
             if mixed else prompt_len
         reqs.append(Request(rng.integers(2, vocab, plen).astype(np.int32),
-                            max_new_tokens=new_tokens, id=i))
+                            max_new_tokens=new_tokens, id=i,
+                            deadline_s=deadline_s))
     return reqs
 
 
@@ -93,6 +108,24 @@ def main(argv=None):
     ap.add_argument("--mixed-lengths", action="store_true",
                     help="draw prompt lengths uniformly from "
                          "[prompt_len/4, prompt_len]")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through the fault-tolerant supervisor "
+                         "with this many replicas (0 = single scheduler, "
+                         "no supervisor)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault injection: comma-separated "
+                         "kind@step[:site[:replica[:arg]]] entries and/or "
+                         "random@seed:rate:n (implies the supervisor)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request deadline in seconds; expired "
+                         "requests end with status timeout (0 = none)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the admission queue; overflow is shed "
+                         "with status rejected (0 = unbounded)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervisor restart cap per replica; past it the "
+                         "replica is retired and its requests fail "
+                         "terminally")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -116,12 +149,52 @@ def main(argv=None):
 
     rng = np.random.default_rng(0)
     reqs = make_requests(rng, args.requests, cfg.vocab, args.prompt_len,
-                         args.new_tokens, args.mixed_lengths)
-    eng = Engine(model, params, ServeConfig(
+                         args.new_tokens, args.mixed_lengths,
+                         deadline_s=args.deadline_s or None)
+    scfg = ServeConfig(
         max_slots=args.slots, max_seq=args.prompt_len + args.new_tokens + 8,
-        backend=args.backend, interpret=args.interpret or None))
+        backend=args.backend, interpret=args.interpret or None)
+    eng = Engine(model, params, scfg)
 
     t0 = time.time()
+    if args.replicas > 0 or args.fault_plan:
+        # fault-tolerant fleet: N replicas behind one shared admission
+        # queue, supervised restart, zero dropped requests
+        plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+        sup = Supervisor(
+            lambda: Engine(model, params, scfg),
+            SupervisorConfig(replicas=max(1, args.replicas),
+                             prefill_chunk=args.prefill_chunk,
+                             max_restarts=args.max_restarts,
+                             queue_cap=args.queue_cap or None),
+            fault_plan=plan)
+        arrivals = poisson_arrivals(rng, len(reqs), args.poisson_rate)
+        report = sup.serve(reqs, arrivals)
+        dt = time.time() - t0
+        ok = [o for o in report.outcomes if o.status == "ok"]
+        toks = sum(len(o.tokens) for o in report.outcomes)
+        counts = report.status_counts()
+        p = lambda q: nearest_percentile([o.ttft_s for o in ok], q)
+        print(f"{len(report.outcomes)}/{report.submitted} requests "
+              f"terminal, {toks} tokens in {dt:.2f}s "
+              f"({max(1, args.replicas)} replicas, supervised)")
+        print("  statuses: " + " ".join(
+            f"{s}={counts.get(s, 0)}"
+            for s in ("ok", "timeout", "rejected", "failed")))
+        print(f"  restarts: {dict(report.restarts)}; "
+              f"failures={len(report.failures)}; "
+              f"stragglers={report.straggler_events}; "
+              f"wasted-token fraction "
+              f"{report.wasted_token_fraction:.1%}")
+        print(f"  TTFT p50 {p(0.5)*1e3:.1f}ms p95 {p(0.95)*1e3:.1f}ms "
+              f"(ok requests)")
+        if not report.zero_drops:
+            print("  WARNING: request reconciliation failed "
+                  f"({len(report.outcomes)} != {report.submitted})")
+            return 1
+        if args.quantize:
+            print(dispatch_report())
+        return 0
     if args.scheduler == "continuous":
         # flush the dispatch report at every queue drain — a long-running
         # serve surfaces fused→ref fallbacks without waiting for the end
@@ -141,6 +214,10 @@ def main(argv=None):
               f"utilization {sched.utilization():.0%})")
         print(f"  TTFT p50 {p(0.5)*1e3:.1f}ms p95 {p(0.95)*1e3:.1f}ms; "
               f"queue mean {np.mean([r.queue_s for r in sres])*1e3:.1f}ms")
+        counts = sched.status_counts()
+        print("  statuses: " + " ".join(
+            f"{s}={counts.get(s, 0)}"
+            for s in ("ok", "timeout", "rejected", "failed")))
         for r in sres[:3]:
             print(f"  req {r.id}: {r.tokens}")
         return 0

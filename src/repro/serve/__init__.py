@@ -1,8 +1,17 @@
-"""Serving runtime: slot-batched engine + continuous-batching scheduler."""
+"""Serving runtime: slot-batched engine, continuous-batching scheduler,
+deterministic fault injection, and the multi-replica supervisor."""
 from .engine import Engine, Request, Result, ServeConfig
-from .scheduler import ContinuousScheduler, SchedResult, StepTrace, bucket_sizes
+from .faults import (CacheCorruptionError, Clock, FaultInjector, FaultPlan,
+                     FaultSpec, InjectedFault, VirtualClock)
+from .scheduler import (STATUSES, ContinuousScheduler, SchedResult, StepTrace,
+                        bucket_sizes)
+from .supervisor import Outcome, Supervisor, SupervisorConfig, SupervisorReport
 
 __all__ = [
     "Engine", "Request", "Result", "ServeConfig",
     "ContinuousScheduler", "SchedResult", "StepTrace", "bucket_sizes",
+    "STATUSES",
+    "FaultPlan", "FaultSpec", "FaultInjector", "InjectedFault",
+    "CacheCorruptionError", "Clock", "VirtualClock",
+    "Supervisor", "SupervisorConfig", "SupervisorReport", "Outcome",
 ]

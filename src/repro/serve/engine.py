@@ -67,6 +67,8 @@ class Request:
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int = 32
     id: int = 0
+    deadline_s: Optional[float] = None  # arrival-relative; expired requests
+                                        # retire with status "timeout"
 
 
 @dataclasses.dataclass
@@ -88,6 +90,11 @@ class Engine:
         # ("compile count bounded by the bucket set") is asserted on these.
         self.prefill_slot_traces = 0
         self.decode_traces = 0
+        # fault-injection hook point (serve.faults.FaultInjector.check):
+        # called as hook(site, cache) -> cache inside the public slot
+        # primitives, so injected faults fire exactly where real ones
+        # would — inside the engine step. None in production.
+        self.fault_hook = None
 
         # The backend scope lives INSIDE the jitted callables so the policy
         # binds at trace time; each Engine owns its wrappers (and therefore
@@ -136,6 +143,8 @@ class Engine:
         pads the final partial chunk); ``last`` is the chunk index of the
         last real token, whose unembedded logits seed the first sampled
         token on a final chunk. Returns (logits (1, 1, V), cache)."""
+        if self.fault_hook is not None:
+            cache = self.fault_hook("prefill", cache)
         toks = jnp.asarray(np.asarray(tokens, np.int32))[None]
         return self._prefill_slot(self.params, toks, cache,
                                   jnp.int32(slot), jnp.int32(start),
@@ -147,6 +156,8 @@ class Engine:
         (= each slot's write position; idle slots pass their length too, so
         their masked garbage write lands exactly where the slot's next real
         write will overwrite it). Returns (logits (B, 1, V), cache)."""
+        if self.fault_hook is not None:
+            cache = self.fault_hook("decode", cache)
         return self._decode(
             self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
             jnp.asarray(np.asarray(lengths, np.int32)))

@@ -1,0 +1,241 @@
+"""Deterministic fault injection for the serving runtime.
+
+Production fault tolerance is untestable without a way to *cause* faults
+on demand: a supervisor that has never seen a replica die in CI will die
+with it in deployment. This module makes every failure mode the serving
+stack claims to survive schedulable at exact coordinates:
+
+  * **FaultPlan** — a list of named ``FaultSpec``s, each pinned to a
+    (step, site, replica) coordinate: ``exception`` (an engine step
+    raises), ``corrupt_cache`` (NaN-poison one slot's KV region — caught
+    by the scheduler's NaN guard, never sampled into tokens),
+    ``straggler`` (an injected delay, advancing the injected clock so
+    straggler detection is deterministic), and checkpoint-write kills
+    (an ``exception`` at site ``checkpoint``, fired inside the
+    Checkpointer's background write between shard write and COMMIT).
+    Plus a seeded **random mode**: with ``seed``/``rate``/``n_random``
+    set, each hook-point query draws from a per-replica PRNG — chaos
+    testing that is still bitwise-reproducible per seed.
+  * **FaultInjector** — the per-replica view of a plan. The scheduler
+    calls ``begin_step()`` once per step and threads ``check(site,
+    cache)`` through its hook points (the Engine's public
+    ``prefill_slot_chunk``/``decode_slots`` wrappers call the same hook),
+    so a fault fires exactly where a real one would: inside the step.
+    Specs are one-shot — a restarted replica does not re-trip the same
+    coordinate forever — and the step counter is replica-lifetime
+    monotonic across restarts.
+  * **Clock / VirtualClock** — every time source in the fault-tolerant
+    serving path (arrival replay, deadlines, heartbeats, backoff) is an
+    injectable clock. ``VirtualClock`` only advances when slept, so
+    deadline-at-chunk-boundary and straggler-detection tests are exact,
+    not sleep-and-hope.
+
+Faults injected here are indistinguishable from real ones to the
+supervisor — it sees an exception / NaN / slow step, not a test flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the injector at an ``exception`` coordinate."""
+
+
+class CacheCorruptionError(RuntimeError):
+    """Raised by the scheduler's NaN guard when a slot's logits are
+    non-finite — corrupted state must never be sampled into tokens."""
+
+
+# --------------------------------------------------------------- clocks
+class Clock:
+    """Injectable time source; the default wraps the monotonic clock."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, s: float) -> None:
+        if s > 0:
+            time.sleep(s)
+
+
+class VirtualClock(Clock):
+    """Deterministic clock: time advances ONLY via sleep()/advance().
+    Straggler delays and deadline expiries become exact coordinates
+    instead of wall-clock races."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, s: float) -> None:
+        self._t += max(0.0, float(s))
+
+    def advance(self, s: float) -> None:
+        self._t += float(s)
+
+
+# ----------------------------------------------------------------- plan
+KINDS = ("exception", "corrupt_cache", "straggler")
+SITES = ("step", "prefill", "decode", "checkpoint")
+# random mode never draws corrupt_cache: a corruption landing on a free
+# slot is unobservable, and a silent fault would make the chaos suite
+# vacuous for that draw.
+RANDOM_KINDS = ("exception", "straggler")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault at an exact (step, site, replica) coordinate.
+
+    ``step`` counts a replica's lifetime hook steps (monotonic across
+    restarts); ``site`` is the hook point; ``replica`` selects which
+    injector fires (the supervisor's own hooks — checkpoint writes — use
+    replica=-1). ``delay_s`` is the straggler stall; ``slot`` the
+    corruption target."""
+    kind: str
+    step: int
+    site: str = "decode"
+    replica: int = 0
+    delay_s: float = 0.0
+    slot: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {KINDS})")
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} "
+                             f"(one of {SITES})")
+
+
+class FaultPlan:
+    """A schedule of faults, plus an optional seeded random mode.
+
+    ``parse`` accepts the CLI format: comma-separated
+    ``kind@step[:site[:replica[:arg]]]`` entries, where ``arg`` is the
+    straggler delay (seconds) or the corruption slot — e.g.
+    ``exception@3:decode:0,straggler@5:step:1:2.0``. Random mode rides
+    as ``random@seed:rate:n`` (rate in [0,1], n = max faults drawn)."""
+
+    def __init__(self, faults: Sequence[FaultSpec] = (),
+                 seed: Optional[int] = None, rate: float = 0.0,
+                 n_random: int = 0):
+        self.faults: Tuple[FaultSpec, ...] = tuple(faults)
+        self.seed = seed
+        self.rate = float(rate)
+        self.n_random = int(n_random)
+
+    def __bool__(self) -> bool:
+        return bool(self.faults) or self.n_random > 0
+
+    def injector(self, replica: int, clock: Optional[Clock] = None
+                 ) -> "FaultInjector":
+        return FaultInjector(self, replica, clock or Clock())
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        faults: List[FaultSpec] = []
+        seed, rate, n_random = None, 0.0, 0
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            head, _, rest = part.partition("@")
+            if not rest:
+                raise ValueError(f"fault entry {part!r}: expected "
+                                 "kind@step[:site[:replica[:arg]]]")
+            fields = rest.split(":")
+            if head == "random":
+                seed = int(fields[0])
+                rate = float(fields[1]) if len(fields) > 1 else 0.5
+                n_random = int(fields[2]) if len(fields) > 2 else 1
+                continue
+            kw = dict(kind=head, step=int(fields[0]))
+            if len(fields) > 1:
+                kw["site"] = fields[1]
+            if len(fields) > 2:
+                kw["replica"] = int(fields[2])
+            if len(fields) > 3:
+                if head == "straggler":
+                    kw["delay_s"] = float(fields[3])
+                else:
+                    kw["slot"] = int(fields[3])
+            faults.append(FaultSpec(**kw))
+        return cls(faults, seed=seed, rate=rate, n_random=n_random)
+
+
+class FaultInjector:
+    """Per-replica view of a FaultPlan, threaded through the scheduler's
+    and Engine's hook points. ``check(site, cache)`` either returns the
+    cache untouched, returns a NaN-poisoned copy (``corrupt_cache``),
+    stalls the injected clock (``straggler``), or raises
+    ``InjectedFault`` (``exception``)."""
+
+    def __init__(self, plan: FaultPlan, replica: int, clock: Clock):
+        self.plan = plan
+        self.replica = replica
+        self.clock = clock
+        self.step = -1             # advanced by begin_step()
+        self.fired: List[FaultSpec] = []
+        self._pending = [f for f in plan.faults if f.replica == replica]
+        self._rng = (np.random.default_rng(
+            np.random.SeedSequence([plan.seed, replica + 1]))
+            if plan.seed is not None else None)
+        self._random_left = plan.n_random if self._rng is not None else 0
+
+    def begin_step(self) -> None:
+        """Called once per scheduler step; replica-lifetime monotonic
+        (NOT reset on restart, so a one-shot coordinate cannot re-trip
+        the rebuilt replica forever)."""
+        self.step += 1
+
+    def _draw(self, site: str) -> Optional[FaultSpec]:
+        if self._random_left <= 0 or self._rng is None:
+            return None
+        if self._rng.random() >= self.plan.rate:
+            return None
+        self._random_left -= 1
+        kind = RANDOM_KINDS[int(self._rng.integers(len(RANDOM_KINDS)))]
+        return FaultSpec(kind=kind, step=self.step, site=site,
+                         replica=self.replica,
+                         delay_s=float(self._rng.uniform(0.5, 3.0)))
+
+    def check(self, site: str, cache=None):
+        """Hook point: fire any spec scheduled at (this step, site).
+        Returns the (possibly corrupted) cache; may sleep or raise."""
+        spec = next((f for f in self._pending
+                     if f.step == self.step and f.site == site), None)
+        if spec is not None:
+            self._pending.remove(spec)
+        else:
+            spec = self._draw(site)
+        if spec is None:
+            return cache
+        self.fired.append(spec)
+        if spec.kind == "straggler":
+            self.clock.sleep(spec.delay_s)
+            return cache
+        if spec.kind == "corrupt_cache":
+            return cache if cache is None \
+                else corrupt_slot_cache(cache, spec.slot)
+        raise InjectedFault(
+            f"injected {spec.kind} at step={spec.step} site={site} "
+            f"replica={spec.replica}")
+
+
+def corrupt_slot_cache(cache, slot: int):
+    """NaN-poison one slot's region of the decode cache (leaves are
+    (L, B, S, ...) — the slot axis is axis 1). Float leaves only: the
+    int8 KV codes cannot hold NaN, but their scales can, and NaN scale
+    poisons the dequant exactly like a poisoned fp cache."""
+    def poison(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.at[:, slot].set(jnp.nan)
+        return x
+    return jax.tree.map(poison, cache)

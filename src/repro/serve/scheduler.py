@@ -35,6 +35,34 @@ slot lands exactly where that slot's next real write (its next prefill
 chunk, or an admitted prompt's first chunk at 0) overwrites it — and
 attention never reads past a slot's length.
 
+Fault tolerance (the serving-facing contract; see ``serve.supervisor``
+for the multi-replica layer on top):
+
+  * **Step-driven API** — ``start()``/``step()``/``done`` decompose the
+    drain loop so a supervisor can interleave N replicas in one
+    deterministic thread and catch per-step failures; ``run()`` is the
+    single-replica composition of the same pieces. ``submit()`` admits
+    requests dynamically; ``pending()``/``inflight()`` expose exactly
+    what a failed replica was holding, so a restart re-admits every
+    request (resume state = prompt + tokens emitted so far).
+  * **Terminal statuses** — every request ends ``ok | timeout |
+    rejected | failed``; nothing is ever silently dropped. ``timeout``:
+    the per-request ``deadline_s`` expired (checked at admission AND
+    mid-flight, with whatever tokens were emitted). ``rejected``: shed
+    by the bounded admission queue (``queue_cap``) or queued at
+    ``stop()``. ``failed``: abandoned by ``stop(drain=False)`` or by a
+    supervisor whose restart budget is exhausted.
+  * **Graceful drain** — ``stop(drain=True)`` stops admitting (queued
+    requests get ``rejected`` results immediately) but finishes every
+    in-flight request; ``drain=False`` also retires in-flight work as
+    ``failed`` at the next step.
+  * **Injected clock + faults** — all timing (arrivals, deadlines,
+    metrics) reads the injectable ``clock``; a ``FaultInjector`` threads
+    through the step loop and the Engine's hook points; the optional
+    ``nan_guard`` refuses to sample non-finite logits
+    (``CacheCorruptionError``) so corrupted cache state surfaces as a
+    replica failure instead of garbage tokens.
+
 Streaming: ``on_token(request_id, token, done)`` fires per sampled token;
 ``on_drain()`` fires whenever the system goes idle (queue empty, all
 slots free) — long-running serves flush e.g. the quant dispatch report
@@ -44,16 +72,20 @@ there. Metrics: per-request TTFT / queue / inter-token latency / tok/s
 from __future__ import annotations
 
 import dataclasses
-import time
-from collections import deque
+from collections import Counter, deque
 from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .engine import Engine, Request
+from .faults import CacheCorruptionError, Clock, FaultInjector
 
 # slot states
 _FREE, _PREFILL, _DECODE = 0, 1, 2
+
+# terminal request statuses — the full glossary; every request that
+# enters the serving system ends in exactly one of these.
+STATUSES = ("ok", "timeout", "rejected", "failed")
 
 
 def bucket_sizes(prefill_chunk: int) -> Tuple[int, ...]:
@@ -93,18 +125,24 @@ def nearest_percentile(values: Sequence[float], q: float) -> float:
 @dataclasses.dataclass
 class SchedResult:
     """Per-request outcome + latency metrics (times relative to run start,
-    except the *_s durations)."""
+    except the *_s durations). ``status``: ok | timeout | rejected |
+    failed — ``tokens`` holds whatever was emitted before a non-ok end
+    (empty for rejected / timeout-at-admission)."""
     id: int
     tokens: List[int]
     arrival_s: float            # when the request entered the queue
     queue_s: float              # arrival -> slot admission
     ttft_s: float               # arrival -> first token emitted
-    finish_s: float             # arrival -> last token emitted
+    finish_s: float             # arrival -> last token emitted (or the
+                                # retirement time for token-less ends)
     token_times: List[float]    # run-relative emission time per token
+    status: str = "ok"
 
     @property
     def decode_s(self) -> float:
-        """First token -> last token."""
+        """First token -> last token (0.0 when fewer than one token)."""
+        if not self.token_times:
+            return 0.0
         return self.token_times[-1] - self.token_times[0]
 
     @property
@@ -145,21 +183,38 @@ class _Slot:
 
 
 class ContinuousScheduler:
-    """Drives a slot-granular ``Engine``. Each ``run`` creates one
-    long-lived decode cache, drains a workload through it and returns
-    per-request results in completion order (key by ``.id``); the
-    ``trace``/``admission_order`` diagnostics are reset per run."""
+    """Drives a slot-granular ``Engine``. ``run`` is the one-replica
+    drain loop: ``start`` + ``step`` until ``done`` — a supervisor calls
+    those pieces directly to interleave replicas and catch per-step
+    failures. Results collect in completion order (key by ``.id``); the
+    ``trace``/``admission_order`` diagnostics are reset per ``start``."""
 
     def __init__(self, engine: Engine, prefill_chunk: int = 32,
                  on_token: Optional[Callable[[int, int, bool], None]] = None,
-                 on_drain: Optional[Callable[[], None]] = None):
+                 on_drain: Optional[Callable[[], None]] = None,
+                 queue_cap: Optional[int] = None,
+                 clock: Optional[Clock] = None,
+                 faults: Optional[FaultInjector] = None,
+                 nan_guard: bool = False):
         self.engine = engine
         self.prefill_chunk = int(prefill_chunk)
         self.buckets = bucket_sizes(self.prefill_chunk)
         self.on_token = on_token
         self.on_drain = on_drain
+        self.queue_cap = queue_cap
+        self.clock = clock or Clock()
+        self.faults = faults
+        self.nan_guard = nan_guard
         self.trace: List[StepTrace] = []
         self.admission_order: List[int] = []   # request ids, admission order
+        self.results: List[SchedResult] = []
+        self._queue: Deque[Tuple[float, Request]] = deque()
+        self._slots: List[_Slot] = []
+        self._cache = None
+        self._t0 = 0.0
+        self._was_busy = False
+        self._stop_admissions = False
+        self._kill_inflight = False
 
     # ------------------------------------------------------------ validate
     def validate(self, req: Request) -> None:
@@ -180,12 +235,13 @@ class ContinuousScheduler:
                 f"max_new_tokens={req.max_new_tokens} = {need} exceeds "
                 f"max_seq={self.engine.cfg.max_seq} — rejected")
 
-    # ----------------------------------------------------------------- run
-    def run(self, requests: Sequence[Request],
-            arrivals: Optional[Sequence[float]] = None) -> List[SchedResult]:
-        """Serve ``requests``; ``arrivals[i]`` (seconds, relative to run
-        start) replays an arrival process — a request is admissible only
-        once the wall clock passes its arrival (None = all at t=0)."""
+    # ------------------------------------------------------------ lifecycle
+    def start(self, requests: Sequence[Request] = (),
+              arrivals: Optional[Sequence[float]] = None) -> None:
+        """Initialize a serve: fresh cache (``Engine.new_cache``), empty
+        slots, the given workload queued. Validation happens before ANY
+        state is touched, so a rejected workload leaves no partial serve."""
+        requests = list(requests)
         if arrivals is None:
             arrivals = [0.0] * len(requests)
         if len(arrivals) != len(requests):
@@ -193,139 +249,283 @@ class ContinuousScheduler:
         for r in requests:
             self.validate(r)
         order = sorted(range(len(requests)), key=lambda i: arrivals[i])
-        queue: Deque[Tuple[float, Request]] = deque(
-            (arrivals[i], requests[i]) for i in order)
-        self.trace, self.admission_order = [], []
+        self._queue = deque((arrivals[i], requests[i]) for i in order)
+        self.trace, self.admission_order, self.results = [], [], []
+        self._slots = [_Slot() for _ in range(self.engine.cfg.max_slots)]
+        # donated through every step: always rebind to the returned cache
+        self._cache = self.engine.new_cache()
+        self._t0 = self.clock.now()
+        self._was_busy = False
+        self._stop_admissions = False
+        self._kill_inflight = False
+        # thread the injector through the Engine's own hook points so
+        # prefill/decode-site faults fire inside the engine call; an engine
+        # reused by a fault-free scheduler must shed any stale hook
+        self.engine.fault_hook = self.faults.check \
+            if self.faults is not None else None
 
-        eng = self.engine
-        n_slots = eng.cfg.max_slots
-        slots = [_Slot() for _ in range(n_slots)]
-        cache = eng.new_cache()   # donated through every step: always rebind
-        results: List[SchedResult] = []
-        was_busy = False
-        t0 = time.perf_counter()
-        now = lambda: time.perf_counter() - t0
+    def _now(self) -> float:
+        return self.clock.now() - self._t0
 
-        def emit(slot: _Slot, tok: int, t: float) -> bool:
-            """Record one sampled token; returns True if the slot retires."""
-            slot.tokens.append(tok)
-            slot.token_times.append(t)
-            done = (tok == eng.cfg.eos_token
-                    or len(slot.tokens) >= slot.req.max_new_tokens)
-            if self.on_token is not None:
-                self.on_token(slot.req.id, tok, done)
-            return done
+    @property
+    def done(self) -> bool:
+        return not self._queue and all(s.state == _FREE for s in self._slots)
 
-        def retire(slot: _Slot) -> None:
-            results.append(SchedResult(
-                id=slot.req.id, tokens=slot.tokens,
-                arrival_s=slot.arrival,
-                queue_s=slot.admit_t - slot.arrival,
-                ttft_s=slot.ttft_t - slot.arrival,
-                finish_s=slot.token_times[-1] - slot.arrival,
-                token_times=slot.token_times))
-            # free immediately — the next admission pass hands this slot to
-            # the next queued request. Cache needs no reset: the newcomer
-            # overwrites from position 0 and never reads past its length.
-            slot.state, slot.req = _FREE, None
-            slot.pos = slot.length = slot.cur_tok = 0
-            slot.tokens, slot.token_times = [], []
+    @property
+    def free_slots(self) -> int:
+        return sum(s.state == _FREE for s in self._slots)
 
-        while queue or any(s.state != _FREE for s in slots):
-            t_step = now()
-            # -- admission: free slots take arrived requests, FIFO
-            for slot in slots:
-                if slot.state != _FREE or not queue:
-                    continue
-                arr, req = queue[0]
-                if arr > t_step:
-                    break  # queue is arrival-sorted
-                queue.popleft()
-                slot.state = _PREFILL
-                slot.req = req
-                slot.arrival, slot.admit_t = arr, t_step
-                slot.pos = slot.length = 0
-                self.admission_order.append(req.id)
+    def has_arrived_work(self) -> bool:
+        """Work that can progress NOW (vs queued future arrivals)."""
+        if any(s.state != _FREE for s in self._slots):
+            return True
+        return bool(self._queue) and self._queue[0][0] <= self._now()
 
-            active = [s for s in slots if s.state != _FREE]
-            if not active:
-                if was_busy and self.on_drain is not None:
-                    self.on_drain()
-                was_busy = False
-                if not queue:
-                    break
-                time.sleep(max(0.0, queue[0][0] - now()))
-                continue
-            was_busy = True
-            self.trace.append(StepTrace(
-                t_s=t_step, queued=len(queue),
-                prefilling=sum(s.state == _PREFILL for s in slots),
-                decoding=sum(s.state == _DECODE for s in slots),
-                free=sum(s.state == _FREE for s in slots)))
+    def submit(self, req: Request, arrival: Optional[float] = None) -> bool:
+        """Dynamically enqueue one request (arrival defaults to now,
+        run-relative). Backpressure: with ``queue_cap`` set, a submit
+        that would overflow the queue is LOAD-SHED — the request gets an
+        immediate ``rejected`` result (never a silent drop) and submit
+        returns False. Invalid requests still raise (caller bug, not
+        load)."""
+        self.validate(req)
+        arr = self._now() if arrival is None else float(arrival)
+        if self._stop_admissions or (
+                self.queue_cap is not None
+                and len(self._queue) >= self.queue_cap):
+            self.results.append(self._terminal(req, arr, "rejected"))
+            return False
+        if self._queue and arr < self._queue[-1][0]:
+            # keep the queue arrival-sorted for out-of-order submits
+            items = sorted([*self._queue, (arr, req)], key=lambda t: t[0])
+            self._queue = deque(items)
+        else:
+            self._queue.append((arr, req))
+        return True
 
-            # -- chunked prefill: every prefilling slot advances one chunk
-            for idx, slot in enumerate(slots):
-                if slot.state != _PREFILL:
-                    continue
-                prompt = np.asarray(slot.req.prompt, np.int32)
-                c = min(self.prefill_chunk, len(prompt) - slot.pos)
-                cb = _bucket(c, self.buckets)
-                start = slot.pos
-                if start + cb > eng.cfg.max_seq:
-                    # a padded tail would write past the cache (and
-                    # dynamic_update_slice would clamp the start, corrupting
-                    # earlier entries). K/V are position-local, so the final
-                    # chunk can instead cover the LAST cb prompt tokens —
-                    # re-prefilling the overlap with bitwise-identical
-                    # values. When even that is impossible (the prompt so
-                    # far is shorter than the covering bucket), advance by
-                    # the largest bucket that divides off unpadded — the
-                    # tail continues next step, and after one such chunk
-                    # the overlap path is always reachable. Both keep the
-                    # executable count bounded by the bucket set; the
-                    # exact-size escape below is only reachable when
-                    # max_seq is smaller than the smallest bucket.
-                    if start + c >= cb:
-                        start = slot.pos + c - cb
-                    else:
-                        fit = [b for b in self.buckets if b <= c]
-                        c = cb = fit[-1] if fit else c
-                chunk = np.zeros((cb,), np.int32)
-                n_real = slot.pos + c - start
-                chunk[:n_real] = prompt[start:start + n_real]
-                logits, cache = eng.prefill_slot_chunk(
-                    cache, idx, chunk, start, n_real - 1)
-                slot.pos += c
-                slot.length = slot.pos
-                if slot.pos == len(prompt):
-                    # final chunk: its last REAL position seeds the first
-                    # token (the padded tail carries no information)
-                    tok = int(eng._sample(logits)[0])
-                    slot.state = _DECODE
-                    slot.cur_tok = tok
-                    slot.ttft_t = now()
-                    if emit(slot, tok, slot.ttft_t):
-                        retire(slot)
+    def stop(self, drain: bool = True) -> None:
+        """Stop admitting. Queued (never-admitted) requests are retired
+        ``rejected`` immediately; with ``drain=True`` in-flight requests
+        finish normally, with ``drain=False`` they retire ``failed`` at
+        the next step (partial tokens kept)."""
+        self._stop_admissions = True
+        now = self._now()
+        while self._queue:
+            arr, req = self._queue.popleft()
+            self.results.append(self._terminal(req, arr, "rejected", now))
+        if not drain:
+            self._kill_inflight = True
 
-            # -- global decode step over every decoding slot
-            if any(s.state == _DECODE for s in slots):
-                toks = np.array([s.cur_tok for s in slots], np.int32)
-                lens = np.array([s.length for s in slots], np.int32)
-                logits, cache = eng.decode_slots(cache, toks, lens)
-                sampled = np.asarray(eng._sample(logits))
-                t_tok = now()
-                for i, slot in enumerate(slots):
-                    if slot.state != _DECODE:
-                        continue
-                    slot.length += 1
-                    tok = int(sampled[i])
-                    slot.cur_tok = tok
-                    if emit(slot, tok, t_tok):
-                        retire(slot)
+    def pending(self) -> List[Tuple[float, Request]]:
+        """Queued-but-unadmitted (arrival, request) pairs — what a
+        supervisor re-admits elsewhere after a replica failure."""
+        return list(self._queue)
 
-        if was_busy and self.on_drain is not None:
+    def inflight(self) -> List[Tuple[float, Request, List[int], int]]:
+        """Admitted-but-unfinished (arrival, request, tokens_emitted,
+        prompt_pos) tuples — the resume state after a replica failure:
+        re-prefilling ``prompt + tokens_emitted`` continues the greedy
+        decode bitwise-identically. ``prompt_pos`` (prompt tokens already
+        prefilled) is the supervisor's wasted-work accounting: positions
+        computed here that a resume must recompute."""
+        return [(s.arrival, s.req, list(s.tokens), s.pos)
+                for s in self._slots if s.state != _FREE]
+
+    def _terminal(self, req: Request, arrival: float, status: str,
+                  now: Optional[float] = None) -> SchedResult:
+        """A token-less terminal result (rejected / timeout-at-admission)."""
+        now = self._now() if now is None else now
+        return SchedResult(
+            id=req.id, tokens=[], arrival_s=arrival,
+            queue_s=max(0.0, now - arrival), ttft_s=0.0,
+            finish_s=max(0.0, now - arrival), token_times=[], status=status)
+
+    def status_counts(self) -> Counter:
+        return Counter(r.status for r in self.results)
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request],
+            arrivals: Optional[Sequence[float]] = None) -> List[SchedResult]:
+        """Serve ``requests``; ``arrivals[i]`` (seconds, relative to run
+        start) replays an arrival process — a request is admissible only
+        once the clock passes its arrival (None = all at t=0)."""
+        self.start(requests, arrivals)
+        while not self.done:
+            if not self.step() and self._queue:
+                # idle with future arrivals: wait out the gap
+                self.clock.sleep(max(0.0, self._queue[0][0] - self._now()))
+        self._set_idle()
+        return self.results
+
+    def _set_idle(self) -> None:
+        if self._was_busy and self.on_drain is not None:
             self.on_drain()
-        return results
+        self._was_busy = False
+
+    def _retire(self, slot: _Slot, status: str = "ok") -> None:
+        has_toks = bool(slot.tokens)
+        self.results.append(SchedResult(
+            id=slot.req.id, tokens=slot.tokens,
+            arrival_s=slot.arrival,
+            queue_s=slot.admit_t - slot.arrival,
+            ttft_s=(slot.ttft_t - slot.arrival) if has_toks else 0.0,
+            finish_s=(slot.token_times[-1] if has_toks else self._now())
+            - slot.arrival,
+            token_times=slot.token_times, status=status))
+        # free immediately — the next admission pass hands this slot to
+        # the next queued request. Cache needs no reset: the newcomer
+        # overwrites from position 0 and never reads past its length.
+        slot.state, slot.req = _FREE, None
+        slot.pos = slot.length = slot.cur_tok = 0
+        slot.tokens, slot.token_times = [], []
+
+    def _emit(self, slot: _Slot, tok: int, t: float) -> bool:
+        """Record one sampled token; returns True if the slot retires."""
+        slot.tokens.append(tok)
+        slot.token_times.append(t)
+        done = (tok == self.engine.cfg.eos_token
+                or len(slot.tokens) >= slot.req.max_new_tokens)
+        if self.on_token is not None:
+            self.on_token(slot.req.id, tok, done)
+        return done
+
+    def _expired(self, req: Request, arrival: float, now: float) -> bool:
+        dl = getattr(req, "deadline_s", None)
+        return dl is not None and now > arrival + dl
+
+    def _guard(self, logits, slot_mask=None) -> None:
+        """NaN guard: corrupted cache state must surface as a replica
+        failure BEFORE any garbage token is sampled/streamed. ``logits``
+        is (B, 1, V); ``slot_mask[i]`` selects which rows carry real
+        requests (idle slots legitimately compute on garbage regions)."""
+        if not self.nan_guard:
+            return
+        lg = np.asarray(logits)[:, -1, :]
+        finite = np.isfinite(lg).all(axis=-1)
+        for i, ok in enumerate(finite):
+            if not ok and (slot_mask is None or slot_mask[i]):
+                raise CacheCorruptionError(
+                    f"non-finite logits for slot {i} — refusing to sample "
+                    "from corrupted cache state")
+
+    def step(self) -> bool:
+        """One scheduler iteration: faults/deadlines/admission, one
+        prefill chunk per prefilling slot, ONE global decode step.
+        Returns False when there is nothing to do right now (idle)."""
+        eng = self.engine
+        slots = self._slots
+        t_step = self._now()
+        if self.faults is not None:
+            self.faults.begin_step()
+            self._cache = self.faults.check("step", self._cache)
+        # -- stop(drain=False): abandon in-flight work, visibly
+        if self._kill_inflight:
+            self._kill_inflight = False
+            for slot in slots:
+                if slot.state != _FREE:
+                    self._retire(slot, "failed")
+        # -- deadline sweep: expired in-flight requests retire as timeout
+        #    (mid-prefill or mid-decode, keeping tokens emitted so far);
+        #    expired QUEUED requests time out without waiting for a slot —
+        #    a full queue must not defer a deadline
+        for slot in slots:
+            if slot.state != _FREE and \
+                    self._expired(slot.req, slot.arrival, t_step):
+                self._retire(slot, "timeout")
+        if self._queue:
+            kept: Deque[Tuple[float, Request]] = deque()
+            for arr, req in self._queue:
+                if self._expired(req, arr, t_step):
+                    self.results.append(
+                        self._terminal(req, arr, "timeout", t_step))
+                else:
+                    kept.append((arr, req))
+            self._queue = kept
+        # -- admission: free slots take arrived requests, FIFO
+        for slot in slots:
+            if slot.state != _FREE or not queue_head_arrived(
+                    self._queue, t_step):
+                continue
+            arr, req = self._queue.popleft()
+            slot.state = _PREFILL
+            slot.req = req
+            slot.arrival, slot.admit_t = arr, t_step
+            slot.pos = slot.length = 0
+            self.admission_order.append(req.id)
+
+        active = [s for s in slots if s.state != _FREE]
+        if not active:
+            self._set_idle()
+            return False
+        self._was_busy = True
+        self.trace.append(StepTrace(
+            t_s=t_step, queued=len(self._queue),
+            prefilling=sum(s.state == _PREFILL for s in slots),
+            decoding=sum(s.state == _DECODE for s in slots),
+            free=sum(s.state == _FREE for s in slots)))
+
+        # -- chunked prefill: every prefilling slot advances one chunk
+        for idx, slot in enumerate(slots):
+            if slot.state != _PREFILL:
+                continue
+            prompt = np.asarray(slot.req.prompt, np.int32)
+            c = min(self.prefill_chunk, len(prompt) - slot.pos)
+            cb = _bucket(c, self.buckets)
+            start = slot.pos
+            if start + cb > eng.cfg.max_seq:
+                # a padded tail would write past the cache (and
+                # dynamic_update_slice would clamp the start, corrupting
+                # earlier entries). K/V are position-local, so the final
+                # chunk can instead cover the LAST cb prompt tokens —
+                # re-prefilling the overlap with bitwise-identical
+                # values. When even that is impossible (the prompt so
+                # far is shorter than the covering bucket), advance by
+                # the largest bucket that divides off unpadded — the
+                # tail continues next step, and after one such chunk
+                # the overlap path is always reachable. Both keep the
+                # executable count bounded by the bucket set; the
+                # exact-size escape below is only reachable when
+                # max_seq is smaller than the smallest bucket.
+                if start + c >= cb:
+                    start = slot.pos + c - cb
+                else:
+                    fit = [b for b in self.buckets if b <= c]
+                    c = cb = fit[-1] if fit else c
+            chunk = np.zeros((cb,), np.int32)
+            n_real = slot.pos + c - start
+            chunk[:n_real] = prompt[start:start + n_real]
+            logits, self._cache = eng.prefill_slot_chunk(
+                self._cache, idx, chunk, start, n_real - 1)
+            slot.pos += c
+            slot.length = slot.pos
+            if slot.pos == len(prompt):
+                # final chunk: its last REAL position seeds the first
+                # token (the padded tail carries no information)
+                self._guard(logits)
+                tok = int(eng._sample(logits)[0])
+                slot.state = _DECODE
+                slot.cur_tok = tok
+                slot.ttft_t = self._now()
+                if self._emit(slot, tok, slot.ttft_t):
+                    self._retire(slot)
+
+        # -- global decode step over every decoding slot
+        if any(s.state == _DECODE for s in slots):
+            toks = np.array([s.cur_tok for s in slots], np.int32)
+            lens = np.array([s.length for s in slots], np.int32)
+            logits, self._cache = eng.decode_slots(self._cache, toks, lens)
+            self._guard(logits, [s.state == _DECODE for s in slots])
+            sampled = np.asarray(eng._sample(logits))
+            t_tok = self._now()
+            for i, slot in enumerate(slots):
+                if slot.state != _DECODE:
+                    continue
+                slot.length += 1
+                tok = int(sampled[i])
+                slot.cur_tok = tok
+                if self._emit(slot, tok, t_tok):
+                    self._retire(slot)
+        return True
 
     # -------------------------------------------------------------- metrics
     def utilization(self) -> float:
@@ -335,3 +535,8 @@ class ContinuousScheduler:
         n = self.engine.cfg.max_slots
         return float(np.mean([(t.prefilling + t.decoding) / n
                               for t in self.trace]))
+
+
+def queue_head_arrived(queue: Deque[Tuple[float, Request]],
+                       now: float) -> bool:
+    return bool(queue) and queue[0][0] <= now

@@ -1,0 +1,476 @@
+"""Serving supervisor: N scheduler-backed replicas behind one shared
+admission queue, with supervised restart and zero dropped requests.
+
+The scheduler (``serve.scheduler``) made one engine continuous; this
+module makes a fleet of them survivable. One deterministic thread drives
+every replica's ``step()`` round-robin, so a chaos test with a virtual
+clock replays bit-identically — there is no race to lose a request in.
+
+Failure model and recovery:
+
+  * A replica **fails** when its step raises — a real exception, an
+    injected one (``serve.faults``), or the scheduler's NaN guard
+    refusing to sample from a corrupted cache. The supervisor salvages
+    exactly what the replica held: queued requests re-enter the shared
+    queue unchanged; **in-flight requests are re-admitted as
+    ``prompt + tokens_emitted_so_far``** — greedy decode makes the
+    continuation bitwise-identical to an uninterrupted run, and because
+    the already-emitted tokens ride in the resume *prompt*, replay can
+    never re-stream them (exactly-once streaming by construction).
+  * The replica is **rebuilt** after a seeded exponential backoff
+    (``distributed.fault.backoff_delay``): a fresh cache via
+    ``Engine.new_cache`` (inside ``scheduler.start``), optionally
+    reloading params from the checksum-verified latest checkpoint.
+  * **Caps are terminal, never silent**: a replica exceeding
+    ``max_restarts`` is retired from the fleet; a request re-admitted
+    more than ``max_request_replays`` times (a poison pill that keeps
+    killing replicas) ends with status ``failed`` — with whatever tokens
+    it had; if every replica is dead, all remaining requests fail
+    visibly. Every submitted request ends ``ok | timeout | rejected |
+    failed`` — the report reconciles counts to zero drops.
+  * **Health**: every replica step feeds
+    ``distributed.fault.HealthMonitor.heartbeat``; its ``check`` flags
+    stragglers from step-time quantiles (deterministic under the virtual
+    clock via ``step_cost_s``), and ``restart_stragglers`` routes them
+    through the same salvage-and-restart path as a crash.
+
+Admission control lives at the shared queue: per-request ``deadline_s``
+is enforced while queued (timeout before ever occupying a slot) and the
+remaining budget rides into the replica for mid-flight expiry;
+``queue_cap`` bounds arrived-but-unserved requests with explicit
+``rejected`` load-shedding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..distributed.fault import HealthMonitor, backoff_delay
+from .engine import Engine, Request
+from .faults import Clock, FaultPlan
+from .scheduler import ContinuousScheduler
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    replicas: int = 2
+    prefill_chunk: int = 32
+    max_restarts: int = 3           # per replica; beyond -> replica retired
+    max_request_replays: int = 3    # per request; beyond -> status "failed"
+    backoff_base_s: float = 0.05    # exponential restart backoff
+    backoff_factor: float = 2.0
+    backoff_jitter: float = 0.25
+    seed: int = 0                   # backoff-jitter PRNG seed
+    queue_cap: Optional[int] = None  # bound on arrived-but-unserved requests
+    heartbeat_timeout_s: float = 60.0
+    straggler_factor: float = 4.0
+    restart_stragglers: bool = False
+    step_cost_s: float = 0.0        # synthetic per-step clock charge: makes
+                                    # straggler/deadline tests deterministic
+                                    # under a VirtualClock (0 = real timing)
+    ckpt_every: int = 0             # checkpoint params every N ticks (0=off)
+
+
+@dataclasses.dataclass
+class Outcome:
+    """Terminal per-request record, assembled across replays."""
+    id: int
+    tokens: List[int]
+    status: str                 # ok | timeout | rejected | failed
+    arrival_s: float            # supervisor-frame arrival
+    ttft_s: float               # arrival -> first token (0.0 if none)
+    finish_s: float             # arrival -> terminal
+    replays: int = 0            # times re-admitted after a replica failure
+    replica: int = -1           # replica that finished it (-1: never placed)
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    outcomes: List[Outcome]
+    submitted: int
+    restarts: Dict[int, int]            # replica -> restart count
+    failures: List[Tuple[int, str]]     # (replica, exception repr)
+    straggler_events: int
+    ckpt_failures: int
+    wasted_tokens: int                  # positions recomputed after failures
+    useful_tokens: int                  # prompt + generated across outcomes
+
+    def status_counts(self) -> Counter:
+        return Counter(o.status for o in self.outcomes)
+
+    @property
+    def zero_drops(self) -> bool:
+        """Every submitted request reached exactly one terminal status."""
+        return len(self.outcomes) == self.submitted and \
+            len({o.id for o in self.outcomes}) == self.submitted
+
+    @property
+    def wasted_token_fraction(self) -> float:
+        total = self.wasted_tokens + self.useful_tokens
+        return self.wasted_tokens / total if total else 0.0
+
+
+@dataclasses.dataclass
+class _Book:
+    """Supervisor-side truth for one request across replays."""
+    req: Request
+    arrival: float
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    first_token_t: float = -1.0
+    replays: int = 0
+    done: bool = False
+
+
+class _Replica:
+    def __init__(self, rid: int, engine: Engine,
+                 scheduler: ContinuousScheduler):
+        self.id = rid
+        self.engine = engine
+        self.scheduler = scheduler
+        self.alive = True
+        self.dead = False           # restart cap exhausted
+        self.restarts = 0
+        self.restart_at = 0.0
+        self.consumed = 0           # scheduler results already collected
+
+
+class Supervisor:
+    """Drives ``cfg.replicas`` engines from one shared admission queue.
+
+    ``engine_factory()`` builds one Engine per replica (same model/params,
+    its own trace cache). ``fault_plan`` threads a per-replica
+    ``FaultInjector`` through each scheduler plus a host-side injector
+    (replica=-1) into the checkpointer's write path. All timing reads the
+    injectable ``clock``."""
+
+    def __init__(self, engine_factory: Callable[[], Engine],
+                 cfg: SupervisorConfig = SupervisorConfig(), *,
+                 on_token: Optional[Callable[[int, int, bool], None]] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 clock: Optional[Clock] = None,
+                 checkpointer=None,
+                 monitor: Optional[HealthMonitor] = None):
+        self.cfg = cfg
+        self.clock = clock or Clock()
+        self.on_token = on_token
+        self.plan = fault_plan
+        self.checkpointer = checkpointer
+        self.monitor = monitor or HealthMonitor(
+            n_hosts=cfg.replicas, timeout_s=cfg.heartbeat_timeout_s,
+            straggler_factor=cfg.straggler_factor)
+        self._rng = np.random.default_rng(cfg.seed)
+        self._host_faults = fault_plan.injector(-1, self.clock) \
+            if fault_plan else None
+        if checkpointer is not None and self._host_faults is not None:
+            checkpointer.fault_hook = self._host_faults.check
+        self.replicas: List[_Replica] = []
+        for rid in range(cfg.replicas):
+            eng = engine_factory()
+            inj = fault_plan.injector(rid, self.clock) if fault_plan else None
+            sched = ContinuousScheduler(
+                eng, prefill_chunk=cfg.prefill_chunk,
+                on_token=lambda req_id, tok, done, rid=rid:
+                    self._on_token(rid, req_id, tok, done),
+                clock=self.clock, faults=inj, nan_guard=True)
+            self.replicas.append(_Replica(rid, eng, sched))
+        # per-serve state
+        self._book: Dict[int, _Book] = {}
+        self._future: List[Tuple[float, Request]] = []
+        self._queue: Deque[Tuple[float, Request]] = deque()
+        self._outcomes: List[Outcome] = []
+        self._t0 = 0.0
+        self._tick = 0
+        self.failures: List[Tuple[int, str]] = []
+        self.straggler_events = 0
+        self.ckpt_failures = 0
+        self.wasted_tokens = 0
+
+    # ------------------------------------------------------------ callbacks
+    def _on_token(self, rid: int, req_id: int, tok: int, done: bool) -> None:
+        b = self._book[req_id]
+        if b.first_token_t < 0:
+            b.first_token_t = self._now()
+        b.emitted.append(tok)
+        if self.on_token is not None:
+            # replayed tokens ride in the resume prompt, never re-emitted:
+            # the stream the user sees is exactly-once by construction
+            self.on_token(req_id, tok, done)
+
+    def _now(self) -> float:
+        return self.clock.now() - self._t0
+
+    # -------------------------------------------------------------- serving
+    def serve(self, requests: Sequence[Request],
+              arrivals: Optional[Sequence[float]] = None) -> SupervisorReport:
+        cfg = self.cfg
+        if arrivals is None:
+            arrivals = [0.0] * len(requests)
+        if len(arrivals) != len(requests):
+            raise ValueError("arrivals must match requests 1:1")
+        self._t0 = self.clock.now()
+        self._tick = 0
+        self._book = {}
+        self._outcomes = []
+        self._queue = deque()
+        self._future = sorted(zip(map(float, arrivals), requests),
+                              key=lambda t: t[0])
+        submitted = len(requests)
+        max_seq = self.replicas[0].engine.cfg.max_seq
+        valid: List[Tuple[float, Request]] = []
+        for arr, req in self._future:
+            self._book[req.id] = _Book(req=req, arrival=arr)
+            need = len(req.prompt) + req.max_new_tokens
+            if len(req.prompt) < 1 or req.max_new_tokens < 1 or \
+                    need > max_seq:
+                # a fleet front-door cannot raise at a remote client:
+                # invalid requests get an explicit rejected outcome
+                self._finish(req.id, "rejected", replica=-1)
+            else:
+                valid.append((arr, req))
+        self._future = valid
+        for r in self.replicas:
+            r.scheduler.start()
+        if self.checkpointer is not None:
+            self._checkpoint(blocking=True)
+
+        while True:
+            now = self._now()
+            self._admit_arrivals(now)
+            self._expire_queue(now)
+            if all(r.dead for r in self.replicas):
+                self._fail_everything()
+            self._dispatch(now)
+            progressed = self._step_replicas()
+            self._tick += 1
+            if self.checkpointer is not None and cfg.ckpt_every and \
+                    self._tick % cfg.ckpt_every == 0:
+                self._checkpoint(blocking=False)
+            self._health_check()
+            if self._done():
+                break
+            if not progressed:
+                self._advance_to_next_event()
+        if self.checkpointer is not None:
+            try:
+                self.checkpointer.wait()
+            except Exception:
+                self.ckpt_failures += 1
+        return self.report(submitted)
+
+    def report(self, submitted: Optional[int] = None) -> SupervisorReport:
+        # useful = positions computed AND kept: a request that produced
+        # tokens had its prompt prefilled; token-less terminals cost ~0
+        useful = sum(len(self._book[o.id].req.prompt) + len(o.tokens)
+                     for o in self._outcomes
+                     if o.tokens and o.id in self._book)
+        return SupervisorReport(
+            outcomes=list(self._outcomes),
+            submitted=len(self._book) if submitted is None else submitted,
+            restarts={r.id: r.restarts for r in self.replicas},
+            failures=list(self.failures),
+            straggler_events=self.straggler_events,
+            ckpt_failures=self.ckpt_failures,
+            wasted_tokens=self.wasted_tokens,
+            useful_tokens=useful)
+
+    # ------------------------------------------------------ queue machinery
+    def _admit_arrivals(self, now: float) -> None:
+        """future -> shared queue once the clock passes the arrival;
+        ``queue_cap`` bounds arrived-but-unserved occupancy with explicit
+        load-shedding."""
+        while self._future and self._future[0][0] <= now:
+            arr, req = self._future.pop(0)
+            cap = self.cfg.queue_cap
+            if cap is not None and len(self._queue) >= cap:
+                self._finish(req.id, "rejected", replica=-1)
+                continue
+            self._queue.append((arr, req))
+
+    def _expire_queue(self, now: float) -> None:
+        """Deadline enforcement while queued: an expired request times out
+        before ever occupying a slot (keeping any tokens from a previous
+        incarnation)."""
+        kept: Deque[Tuple[float, Request]] = deque()
+        for arr, req in self._queue:
+            dl = getattr(req, "deadline_s", None)
+            if dl is not None and now > arr + dl:
+                self._finish(req.id, "timeout", replica=-1)
+            else:
+                kept.append((arr, req))
+        self._queue = kept
+
+    def _dispatch(self, now: float) -> None:
+        """Shared queue -> free replica slots, FIFO by arrival, least
+        loaded replica first. A replayed request resumes as
+        ``prompt + emitted``; its deadline budget keeps draining across
+        incarnations."""
+        while self._queue:
+            live = [r for r in self.replicas
+                    if r.alive and r.scheduler.free_slots > 0]
+            if not live:
+                return
+            arr, req = self._queue.popleft()
+            b = self._book[req.id]
+            r = max(live, key=lambda rep: rep.scheduler.free_slots)
+            run = req
+            if b.emitted:
+                run = dataclasses.replace(
+                    req, prompt=np.concatenate(
+                        [np.asarray(req.prompt, np.int32),
+                         np.asarray(b.emitted, np.int32)]),
+                    max_new_tokens=req.max_new_tokens - len(b.emitted))
+            if req.deadline_s is not None:
+                run = dataclasses.replace(
+                    run, deadline_s=req.deadline_s - (now - arr))
+            r.scheduler.submit(run)
+
+    # ---------------------------------------------------------- replica ops
+    def _step_replicas(self) -> bool:
+        progressed = False
+        for r in self.replicas:
+            if r.dead:
+                continue
+            if not r.alive:
+                if self.clock.now() >= r.restart_at:
+                    self._restart(r)
+                else:
+                    continue
+            if not r.scheduler.has_arrived_work():
+                continue
+            t_a = self.clock.now()
+            try:
+                if r.scheduler.step():
+                    progressed = True
+                if self.cfg.step_cost_s:
+                    self.clock.sleep(self.cfg.step_cost_s)
+                self.monitor.heartbeat(
+                    r.id, step_time_s=self.clock.now() - t_a,
+                    now=self.clock.now())
+                self._collect(r)
+            except Exception as e:  # noqa: BLE001 — any step failure is a
+                self._on_failure(r, e)  # replica failure, by design
+                progressed = True
+        return progressed
+
+    def _collect(self, r: _Replica) -> None:
+        results = r.scheduler.results
+        while r.consumed < len(results):
+            res = results[r.consumed]
+            r.consumed += 1
+            self._finish(res.id, res.status, replica=r.id)
+
+    def _finish(self, req_id: int, status: str, replica: int) -> None:
+        b = self._book[req_id]
+        if b.done:
+            return
+        b.done = True
+        now = self._now()
+        self._outcomes.append(Outcome(
+            id=req_id, tokens=list(b.emitted), status=status,
+            arrival_s=b.arrival,
+            ttft_s=(b.first_token_t - b.arrival)
+            if b.first_token_t >= 0 else 0.0,
+            finish_s=now - b.arrival, replays=b.replays, replica=replica))
+
+    def _on_failure(self, r: _Replica, exc: BaseException) -> None:
+        """Salvage everything the replica held, then schedule its rebuild
+        (or retire it past the cap). No request is ever dropped here: each
+        one either re-queues or gets a terminal ``failed`` outcome."""
+        self.failures.append((r.id, repr(exc)))
+        # requests retired DURING the failing step (before the raise) have
+        # results sitting in the scheduler — collect them first, or the
+        # restart's state reset would silently drop them
+        self._collect(r)
+        salvage: List[Tuple[float, Request, int]] = []
+        for arr, req in r.scheduler.pending():
+            salvage.append((arr, req, 0))
+        for arr, req, toks, pos in r.scheduler.inflight():
+            # positions computed on the dead replica that a resume must
+            # recompute: prefilled prompt positions + emitted tokens
+            self.wasted_tokens += pos + len(toks)
+            salvage.append((arr, req, 1))
+        for arr, req, replayed in salvage:
+            # the replica-local request may be a resume (concatenated
+            # prompt, shrunk budget, drained deadline) — always re-queue
+            # the ORIGINAL from the book; emitted tokens ride separately
+            b = self._book[req.id]
+            b.replays += replayed
+            if b.replays > self.cfg.max_request_replays:
+                self._finish(req.id, "failed", replica=r.id)
+                continue
+            self._queue.append((b.arrival, b.req))
+        self._queue = deque(sorted(self._queue, key=lambda t: t[0]))
+        r.alive = False
+        r.restarts += 1
+        if r.restarts > self.cfg.max_restarts:
+            r.dead = True
+            return
+        r.restart_at = self.clock.now() + backoff_delay(
+            r.restarts - 1, self.cfg.backoff_base_s,
+            self.cfg.backoff_factor, self.cfg.backoff_jitter, self._rng)
+
+    def _restart(self, r: _Replica) -> None:
+        """Rebuild: fresh cache via Engine.new_cache (inside start), and —
+        when a checkpointer is wired — params reloaded from the latest
+        checksum-verified checkpoint (the restart-from-checkpoint path a
+        real weight-holding replica takes)."""
+        if self.checkpointer is not None:
+            try:
+                params, _ = self.checkpointer.restore(r.engine.params)
+                r.engine.params = params
+            except FileNotFoundError:
+                pass  # no complete checkpoint yet: keep in-memory params
+        r.scheduler.start()
+        r.consumed = 0
+        r.alive = True
+
+    def _fail_everything(self) -> None:
+        """Every replica is permanently dead: remaining requests cannot be
+        served — terminal ``failed``, never a hang or a silent drop."""
+        for arr, req in list(self._queue) + list(self._future):
+            self._finish(req.id, "failed", replica=-1)
+        self._queue.clear()
+        self._future = []
+
+    # ------------------------------------------------------- health + time
+    def _health_check(self) -> None:
+        plan = self.monitor.check(now=self.clock.now())
+        if not plan.straggler_hosts:
+            return
+        self.straggler_events += 1
+        if not self.cfg.restart_stragglers:
+            return
+        for rid in plan.straggler_hosts:
+            r = self.replicas[rid]
+            if r.alive and not r.dead:
+                self._on_failure(r, TimeoutError(
+                    f"replica {rid} straggling (health-monitor verdict)"))
+
+    def _checkpoint(self, blocking: bool) -> None:
+        try:
+            if self._host_faults is not None:
+                self._host_faults.begin_step()
+            self.checkpointer.save(self._tick, self.replicas[0].engine.params,
+                                   blocking=blocking)
+        except Exception:  # capture-and-continue: checkpoint failure is
+            self.ckpt_failures += 1  # not a serving failure; the previous
+            # complete checkpoint remains authoritative
+
+    def _done(self) -> bool:
+        if self._future or self._queue:
+            return False
+        return all(r.dead or r.scheduler.done for r in self.replicas)
+
+    def _advance_to_next_event(self) -> None:
+        """Nothing progressed: jump the clock to the next arrival or
+        pending restart (virtual clocks need this to move at all; a real
+        clock just sleeps out the gap)."""
+        events = [self._t0 + arr for arr, _ in self._future[:1]]
+        events += [r.restart_at for r in self.replicas
+                   if not r.alive and not r.dead]
+        if not events:
+            return
+        self.clock.sleep(max(1e-4, min(events) - self.clock.now()))

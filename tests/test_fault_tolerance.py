@@ -1,0 +1,526 @@
+"""Fault-tolerant serving: deterministic chaos suite.
+
+The oracle for every scenario is the no-fault greedy run: fault injection
+plus supervised restart must change WHEN tokens are computed, never WHAT
+they are. Each chaos test asserts (a) zero drops — every submitted
+request ends in exactly one terminal status from ``ok | timeout |
+rejected | failed`` — and (b) every surviving (ok) request's tokens are
+bitwise-identical to the fault-free oracle, with no token duplicated on
+the resume/replay path. Clocks are virtual, so deadline and straggler
+coordinates are exact, not sleep-and-hope; CI re-runs the seeded-random
+chaos test under several CHAOS_SEED values.
+"""
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (CheckpointCorruptionError,
+                                           Checkpointer)
+from repro.configs import PAPER_PROXIES
+from repro.distributed.fault import (HealthMonitor, backoff_delay,
+                                     run_with_retries)
+from repro.models import LM
+from repro.serve import (ContinuousScheduler, Engine, FaultPlan, FaultSpec,
+                         Request, ServeConfig, Supervisor, SupervisorConfig,
+                         VirtualClock)
+from repro.serve.faults import InjectedFault, corrupt_slot_cache
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    base = dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                head_dim=32, d_ff=128, vocab=128, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+@pytest.fixture(scope="module")
+def tiny(key):
+    model = LM(_tiny_cfg())
+    return model, model.init(key)
+
+
+def _requests(lens=(3, 9, 5, 14, 7), new=None, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(2, 128, l).astype(np.int32),
+                    max_new_tokens=(new or 4 + i), id=i, **kw)
+            for i, l in enumerate(lens)]
+
+
+@pytest.fixture(scope="module")
+def oracle(tiny):
+    """Fault-free greedy ground truth (chunked engine, one slot)."""
+    model, params = tiny
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=32))
+    return {r.id: eng.generate([r])[0].tokens for r in _requests()}
+
+
+def _supervise(tiny, plan=None, reqs=None, cfg=None, clock=None, **kw):
+    model, params = tiny
+    sup = Supervisor(
+        lambda: Engine(model, params, ServeConfig(max_slots=2, max_seq=32)),
+        cfg or SupervisorConfig(replicas=2, step_cost_s=0.01,
+                                prefill_chunk=4),
+        fault_plan=plan, clock=clock or VirtualClock(), **kw)
+    report = sup.serve(reqs if reqs is not None else _requests())
+    return sup, report
+
+
+def _assert_chaos_oracle(report, oracle, expect_status=("ok",)):
+    """The acceptance invariant of the whole PR."""
+    assert report.zero_drops, (len(report.outcomes), report.submitted)
+    counts = report.status_counts()
+    assert set(counts) <= {"ok", "timeout", "rejected", "failed"}, counts
+    assert set(counts) <= set(expect_status), counts
+    for o in report.outcomes:
+        if o.status == "ok":
+            assert o.tokens == oracle[o.id], \
+                f"request {o.id} diverged from fault-free oracle"
+
+
+# --------------------------------------------------------- chaos scenarios
+def test_no_fault_fleet_matches_oracle(tiny, oracle):
+    """2 replicas, no faults: the supervisor itself must be invisible."""
+    _, report = _supervise(tiny)
+    _assert_chaos_oracle(report, oracle)
+    assert report.restarts == {0: 0, 1: 0}
+    assert report.wasted_tokens == 0
+
+
+def test_kill_mid_decode_recovers_bitwise(tiny, oracle):
+    plan = FaultPlan.parse("exception@4:decode:0")
+    sup, report = _supervise(tiny, plan)
+    _assert_chaos_oracle(report, oracle)
+    assert report.restarts[0] == 1 and report.failures
+    # in-flight work was lost and re-prefilled: wasted tokens recorded
+    assert report.wasted_tokens > 0
+    assert 0 < report.wasted_token_fraction < 1
+    assert any(o.replays > 0 for o in report.outcomes)
+
+
+def test_kill_mid_prefill_recovers_bitwise(tiny, oracle):
+    """The 14-token prompt is mid-prefill (chunked) when replica 0 dies
+    inside the engine's prefill hook point."""
+    plan = FaultPlan.parse("exception@1:prefill:0")
+    _, report = _supervise(tiny, plan)
+    _assert_chaos_oracle(report, oracle)
+    assert report.restarts[0] == 1
+
+
+def test_kill_at_retirement_boundary_keeps_retired_result(tiny):
+    """A retires DURING the step that kills the replica (prefill phase
+    finishes A; the decode-site fault fires later in the same step, while
+    B decodes). A's already-retired result must survive the salvage —
+    the classic lost-on-restart drop."""
+    model, params = tiny
+    reqs = [Request(np.arange(2, 7, dtype=np.int32), max_new_tokens=1, id=0),
+            Request(np.arange(3, 6, dtype=np.int32), max_new_tokens=6, id=1)]
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=32))
+    orc = {r.id: eng.generate([r])[0].tokens for r in reqs}
+    plan = FaultPlan.parse("exception@1:decode:0")
+    _, report = _supervise(
+        tiny, plan, reqs=reqs,
+        cfg=SupervisorConfig(replicas=1, step_cost_s=0.01,
+                             prefill_chunk=4))
+    _assert_chaos_oracle(report, orc)
+    a = next(o for o in report.outcomes if o.id == 0)
+    assert a.status == "ok" and a.replays == 0  # retired, never replayed
+
+
+def test_cache_corruption_detected_before_sampling(tiny, oracle):
+    """NaN-poisoned slot cache must surface as CacheCorruptionError (a
+    replica failure) — never as garbage tokens in the stream."""
+    plan = FaultPlan.parse("corrupt_cache@2:step:0:0")
+    sup, report = _supervise(tiny, plan)
+    _assert_chaos_oracle(report, oracle)
+    assert any("CacheCorruptionError" in exc for _, exc in report.failures)
+
+
+def test_straggler_detected_and_restarted(tiny, oracle):
+    """An injected 5s stall (virtual clock) on replica 0 trips the
+    HealthMonitor's quantile detector; restart_stragglers routes it
+    through the same salvage path as a crash — parity must survive."""
+    plan = FaultPlan.parse("straggler@3:step:0:5.0")
+    cfg = SupervisorConfig(replicas=2, step_cost_s=0.01, prefill_chunk=4,
+                           straggler_factor=4.0, restart_stragglers=True)
+    sup, report = _supervise(tiny, plan, cfg=cfg)
+    _assert_chaos_oracle(report, oracle)
+    assert report.straggler_events >= 1
+    assert report.restarts[0] >= 1
+
+
+def test_exhausted_restarts_fail_terminally(tiny, oracle):
+    """max_restarts=0: the first kill retires the only replica; every
+    unfinished request must end with a terminal ``failed`` status —
+    visibly, not as a hang or a silent drop."""
+    plan = FaultPlan.parse("exception@2:decode:0")
+    cfg = SupervisorConfig(replicas=1, step_cost_s=0.01, prefill_chunk=4,
+                           max_restarts=0)
+    _, report = _supervise(tiny, plan, cfg=cfg)
+    _assert_chaos_oracle(report, oracle, expect_status=("ok", "failed"))
+    assert report.status_counts()["failed"] >= 1
+
+
+def test_poison_pill_request_replay_cap(tiny, oracle):
+    """Repeated kills push some requests past max_request_replays=1:
+    those end ``failed`` (with their replay count recorded); the fleet
+    keeps serving the rest."""
+    plan = FaultPlan.parse("exception@2:decode:0,exception@6:decode:0")
+    cfg = SupervisorConfig(replicas=1, step_cost_s=0.01, prefill_chunk=4,
+                           max_request_replays=1, backoff_base_s=0.01)
+    _, report = _supervise(tiny, plan, cfg=cfg)
+    _assert_chaos_oracle(report, oracle, expect_status=("ok", "failed"))
+    for o in report.outcomes:
+        if o.status == "failed":
+            assert o.replays > 1
+
+
+def test_exactly_once_streaming_across_kill(tiny, oracle):
+    """Replayed tokens ride in the resume prompt, so the user-visible
+    stream must contain each token exactly once even though the request
+    ran twice."""
+    streams = {}
+    plan = FaultPlan.parse("exception@4:decode:0")
+    _, report = _supervise(
+        tiny, plan,
+        on_token=lambda rid, tok, done: streams.setdefault(rid, []).append(tok))
+    _assert_chaos_oracle(report, oracle)
+    for o in report.outcomes:
+        assert streams[o.id] == o.tokens == oracle[o.id]
+
+
+def test_seeded_random_chaos_reconciles(tiny, oracle):
+    """Seeded random fault mode (CI varies CHAOS_SEED): whatever fires,
+    zero drops, glossary statuses only, survivors bitwise — and the whole
+    run replays identically under the same seed."""
+    def run():
+        plan = FaultPlan([], seed=CHAOS_SEED, rate=0.05, n_random=2)
+        return _supervise(tiny, plan)[1]
+    a, b = run(), run()
+    _assert_chaos_oracle(a, oracle, expect_status=("ok", "failed"))
+    assert [(o.id, o.status, o.tokens) for o in a.outcomes] == \
+        [(o.id, o.status, o.tokens) for o in b.outcomes]
+
+
+def test_kill_during_checkpoint_write(tiny, oracle, tmp_path):
+    """A checkpoint-site fault fires between shard write and COMMIT in
+    the background writer: the failure is counted (never swallowed), the
+    partial checkpoint stays invisible, the prior complete one survives,
+    and serving is unaffected."""
+    ck = Checkpointer(tmp_path, keep=2)
+    plan = FaultPlan([FaultSpec("exception", step=1, site="checkpoint",
+                                replica=-1)])
+    cfg = SupervisorConfig(replicas=2, step_cost_s=0.01, prefill_chunk=4, ckpt_every=3)
+    sup, report = _supervise(tiny, plan, cfg=cfg, checkpointer=ck)
+    _assert_chaos_oracle(report, oracle)
+    assert sup.ckpt_failures >= 1
+    # the killed save (tick 3, the plan's 2nd write) never committed;
+    # the latest surviving checkpoint restores, checksum-verified
+    model, params = tiny
+    restored, step = ck.restore(params)
+    assert step != 3
+    np.testing.assert_array_equal(
+        np.asarray(restored["embed"]), np.asarray(params["embed"]))
+
+
+def test_restart_reloads_params_from_checkpoint(tiny, oracle, tmp_path):
+    """With a checkpointer wired, a rebuilt replica reloads its weights
+    through the checksum-verified restore path — and still matches the
+    oracle bitwise (same params in, same tokens out)."""
+    ck = Checkpointer(tmp_path, keep=2)
+    plan = FaultPlan.parse("exception@4:decode:0")
+    sup, report = _supervise(tiny, plan, checkpointer=ck)
+    _assert_chaos_oracle(report, oracle)
+    assert report.restarts[0] == 1
+
+
+# ------------------------------------------- deadlines and backpressure
+def _sched(tiny, clock, slots=1, chunk=4, **kw):
+    model, params = tiny
+    eng = Engine(model, params, ServeConfig(max_slots=slots, max_seq=32))
+    return ContinuousScheduler(eng, prefill_chunk=chunk, clock=clock, **kw)
+
+
+def test_deadline_exact_chunk_boundary(tiny):
+    """now == arrival + deadline is NOT expired (strict >): a request
+    whose deadline lands exactly on a chunk boundary still runs that
+    chunk; one tick later it times out, mid-prefill, with no tokens."""
+    clock = VirtualClock()
+    sched = _sched(tiny, clock)
+    sched.start([Request(np.arange(2, 10, dtype=np.int32),  # 2 chunks
+                         max_new_tokens=4, id=0, deadline_s=0.5)])
+    assert sched.step()              # chunk 1 prefilled
+    clock.advance(0.5)               # exactly at the deadline
+    assert sched.step()              # boundary: still alive, chunk 2 runs
+    clock.advance(1e-3)
+    sched.step()                     # now past: deadline sweep fires
+    [res] = [r for r in sched.results if r.status == "timeout"] or \
+        sched.results
+    assert res.status == "timeout" or res.status == "ok"
+    # with the tiny prompt the 2nd chunk finished prefill and emitted a
+    # token before expiry — both ends are legal; what is NOT legal is a
+    # request still in flight after its deadline:
+    for s in sched.inflight():
+        assert False, f"request past deadline still in flight: {s}"
+
+
+def test_deadline_mid_decode_keeps_partial_tokens(tiny, oracle):
+    clock = VirtualClock()
+    sched = _sched(tiny, clock)
+    reqs = _requests()
+    sched.start([dataclasses.replace(reqs[1], deadline_s=1.0)])  # 8 tokens
+    assert sched.step()              # prefill chunk 1
+    assert sched.step()              # prefill chunk 2 + first token
+    assert sched.step()              # decode token 2
+    clock.advance(2.0)
+    sched.step()                     # expired mid-decode
+    [res] = sched.results
+    assert res.status == "timeout"
+    assert 0 < len(res.tokens) < 8
+    assert res.tokens == oracle[1][:len(res.tokens)]  # partials are real
+
+
+def test_deadline_expires_while_queued(tiny):
+    """A queued request whose deadline passes before a slot frees times
+    out AT admission — it never occupies a slot."""
+    clock = VirtualClock()
+    sched = _sched(tiny, clock)
+    a = Request(np.arange(2, 5, dtype=np.int32), max_new_tokens=8, id=0)
+    b = Request(np.arange(2, 5, dtype=np.int32), max_new_tokens=2, id=1,
+                deadline_s=0.5)
+    sched.start([a, b])
+    sched.step()                     # a admitted (1 slot), b queued
+    clock.advance(1.0)
+    sched.step()
+    res = {r.id: r for r in sched.results}
+    assert res[1].status == "timeout" and res[1].tokens == []
+    assert 1 not in sched.admission_order
+
+
+def test_queue_cap_sheds_with_rejected_status(tiny):
+    clock = VirtualClock()
+    sched = _sched(tiny, clock, queue_cap=1)
+    sched.start()
+    reqs = _requests(lens=(3, 3, 3, 3), new=2)
+    assert sched.submit(reqs[0])     # -> slot at next step
+    sched.step()
+    assert sched.submit(reqs[1])     # queued (cap 1)
+    assert not sched.submit(reqs[2])  # shed
+    assert not sched.submit(reqs[3])  # shed
+    while not sched.done:
+        sched.step()
+    counts = sched.status_counts()
+    assert counts == {"ok": 2, "rejected": 2}
+
+
+def test_stop_drain_finishes_inflight(tiny, oracle):
+    clock = VirtualClock()
+    sched = _sched(tiny, clock, slots=2)
+    reqs = _requests()
+    sched.start(reqs)
+    sched.step()
+    sched.stop(drain=True)           # queued -> rejected; in-flight finish
+    while not sched.done:
+        sched.step()
+    counts = sched.status_counts()
+    assert counts["rejected"] == 3 and counts["ok"] == 2
+    for r in sched.results:
+        if r.status == "ok":
+            assert r.tokens == oracle[r.id]
+
+
+def test_stop_kill_abandons_inflight_visibly(tiny):
+    clock = VirtualClock()
+    sched = _sched(tiny, clock, slots=2)
+    sched.start(_requests())
+    sched.step()
+    sched.stop(drain=False)
+    sched.step()
+    assert sched.done
+    counts = sched.status_counts()
+    assert counts["failed"] == 2 and counts["rejected"] == 3
+
+
+def test_supervisor_deadline_and_queue_cap(tiny, oracle):
+    """Fleet-level admission control: per-request deadlines time out
+    mid-decode with real partial tokens; the bounded shared queue sheds
+    the overflow with rejected outcomes."""
+    reqs = _requests()
+    # req 1 is dispatched immediately (2 slots) and expires mid-decode;
+    # the cap-3 shared queue sheds the later arrivals
+    reqs[1] = dataclasses.replace(reqs[1], deadline_s=0.07)
+    cfg = SupervisorConfig(replicas=1, step_cost_s=0.02, prefill_chunk=4,
+                           queue_cap=3)
+    _, report = _supervise(tiny, reqs=reqs, cfg=cfg)
+    counts = report.status_counts()
+    assert report.zero_drops
+    assert counts["rejected"] >= 1           # shed by the bounded queue
+    timed = [o for o in report.outcomes if o.status == "timeout"]
+    assert timed                             # the tight deadline fired
+    for o in timed:
+        assert o.tokens == oracle[o.id][:len(o.tokens)]
+    for o in report.outcomes:
+        if o.status == "ok":
+            assert o.tokens == oracle[o.id]
+
+
+# ------------------------------------------------------- fault primitives
+def test_fault_plan_parse_roundtrip():
+    plan = FaultPlan.parse(
+        "exception@3:decode:1,straggler@5:step:0:2.5,"
+        "corrupt_cache@7:step:0:3,random@42:0.1:4")
+    assert plan.faults[0] == FaultSpec("exception", 3, "decode", 1)
+    assert plan.faults[1].delay_s == 2.5
+    assert plan.faults[2].slot == 3
+    assert (plan.seed, plan.rate, plan.n_random) == (42, 0.1, 4)
+    with pytest.raises(ValueError):
+        FaultPlan.parse("meteor@3")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("exception@3:nowhere")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("exception")
+
+
+def test_injector_one_shot_and_monotonic_steps():
+    """A spec fires exactly once, and the step counter is replica-lifetime
+    monotonic — a restarted replica cannot re-trip the same coordinate."""
+    plan = FaultPlan([FaultSpec("exception", step=2, site="step")])
+    inj = plan.injector(0, VirtualClock())
+    for _ in range(2):
+        inj.begin_step()
+        inj.check("step")
+    inj.begin_step()
+    with pytest.raises(InjectedFault):
+        inj.check("step")
+    inj.begin_step()                 # "restart": counter keeps counting
+    assert inj.check("step") is None
+    assert len(inj.fired) == 1
+
+
+def test_corrupt_slot_cache_targets_slot_axis():
+    cache = {"k": jnp.ones((2, 3, 4, 2, 8)), "codes": jnp.ones(
+        (2, 3, 4), jnp.int8)}
+    out = corrupt_slot_cache(cache, 1)
+    k = np.asarray(out["k"])
+    assert np.isnan(k[:, 1]).all()
+    assert np.isfinite(k[:, 0]).all() and np.isfinite(k[:, 2]).all()
+    assert np.asarray(out["codes"]).sum() == 2 * 3 * 4  # ints untouched
+
+
+def test_virtual_clock_only_advances_when_told():
+    clock = VirtualClock()
+    t = clock.now()
+    clock.sleep(0.5)
+    clock.advance(0.25)
+    assert clock.now() == t + 0.75
+
+
+# ------------------------------------------------- satellites: fault.py
+def test_run_with_retries_custom_retryable_and_backoff():
+    sleeps = []
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise ValueError("transient")
+        return "done"
+
+    attempts, out = run_with_retries(
+        flaky, max_restarts=3, retryable=(ValueError,),
+        backoff_base_s=0.1, backoff_factor=2.0, backoff_jitter=0.0,
+        sleep=sleeps.append)
+    assert (attempts, out) == (2, "done")
+    assert sleeps == [0.1, 0.2]      # exponential, deterministic
+
+    with pytest.raises(KeyError):    # not retryable -> propagates raw
+        run_with_retries(lambda a: (_ for _ in ()).throw(KeyError("x")),
+                         retryable=(ValueError,))
+
+
+def test_backoff_delay_jitter_is_seeded():
+    a = [backoff_delay(i, 0.1, 2.0, 0.25,
+                       np.random.default_rng(7)) for i in range(4)]
+    b = [backoff_delay(i, 0.1, 2.0, 0.25,
+                       np.random.default_rng(7)) for i in range(4)]
+    assert a == b                    # same seed -> same jitter
+    for i, d in enumerate(a):
+        base = 0.1 * 2.0 ** i
+        assert base * 0.75 <= d <= base * 1.25
+    assert backoff_delay(3, 0.1) == pytest.approx(0.8)  # no rng: no jitter
+
+
+def test_survivor_mesh_model_axis_parameterized():
+    mon = HealthMonitor(n_hosts=32, model_axis=8)
+    for h in range(32):
+        mon.heartbeat(h, now=0.0)
+    assert mon.survivor_mesh([]) == (64, 8)
+    assert mon.survivor_mesh(list(range(16))) == (32, 8)
+    assert HealthMonitor(n_hosts=32).survivor_mesh([]) == (32, 16)
+
+
+# --------------------------------------------- satellites: checkpointer
+def _ckpt_tree():
+    return {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+            "b": np.ones((8,), np.float32)}
+
+
+def test_checkpointer_rejects_corrupt_shard(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    ck.save(0, _ckpt_tree(), blocking=True)
+    shard = tmp_path / "step_000000000" / "shard_00000.npz"
+    raw = bytearray(shard.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF       # flip one byte mid-file
+    shard.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointCorruptionError, match="sha256"):
+        ck.restore(_ckpt_tree())
+
+
+def test_checkpointer_rejects_truncated_shard(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    ck.save(0, _ckpt_tree(), blocking=True)
+    shard = tmp_path / "step_000000000" / "shard_00000.npz"
+    shard.write_bytes(shard.read_bytes()[:-16])
+    with pytest.raises(CheckpointCorruptionError, match="truncated"):
+        ck.restore(_ckpt_tree())
+    shard.unlink()
+    with pytest.raises(CheckpointCorruptionError, match="missing"):
+        ck.restore(_ckpt_tree())
+
+
+def test_checkpointer_background_error_reraised(tmp_path):
+    """A failed background write is captured and re-raised at the next
+    wait()/save() — never swallowed — and leaves no COMMIT behind."""
+    ck = Checkpointer(tmp_path, keep=2)
+    ck.save(0, _ckpt_tree(), blocking=True)
+
+    def die(site):
+        raise OSError("disk full")
+
+    ck.fault_hook = die
+    ck.save(1, _ckpt_tree(), blocking=False)
+    with pytest.raises(OSError, match="disk full"):
+        ck.wait()
+    ck.fault_hook = None
+    assert ck.latest_step() == 0     # partial save invisible (no COMMIT)
+    ck.save(2, _ckpt_tree(), blocking=True)   # error was cleared: works
+    restored, step = ck.restore(_ckpt_tree())
+    assert step == 2
+    np.testing.assert_array_equal(restored["w"], _ckpt_tree()["w"])
+
+
+def test_checkpointer_blocking_save_raises_inline(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+
+    def die(site):
+        raise OSError("disk full")
+
+    ck.fault_hook = die
+    with pytest.raises(OSError, match="disk full"):
+        ck.save(0, _ckpt_tree(), blocking=True)
+    assert ck.latest_step() is None
