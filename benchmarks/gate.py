@@ -10,9 +10,10 @@ last k matching BENCH_quant_time.json entries as the reference value.
 quantization wall time, metric ``batched_min_s``) or ``serve`` (serving
 runtime: the scanned-ref decode wall time ``decode_scan_ref_min_s``, the
 continuous scheduler's mixed-length Poisson workload wall time
-``mixed_sched_wall_min_s``, and the supervised chaos workload's
-``chaos_recovery_wall_min_s`` + ``chaos_wasted_token_fraction`` — the
-interpret-mode kernel variant is excluded from gating by construction).
+``mixed_sched_wall_min_s``, the supervised chaos workload's
+``chaos_recovery_wall_min_s`` + ``chaos_wasted_token_fraction``, and the
+paged prefix-reuse workload's ``paged_wall_min_s`` — the interpret-mode
+kernel variant is excluded from gating by construction).
 ``--metric`` takes a comma-separated list;
 each metric gates against its own reference from ONE benchmark run.
 
@@ -84,7 +85,8 @@ def load_reference(bench: str, proxy: dict, backend: str, host: str,
 _BENCH_DEFAULT_METRIC = {
     "quant": "batched_min_s",
     "serve": ("decode_scan_ref_min_s,mixed_sched_wall_min_s,"
-              "chaos_recovery_wall_min_s,chaos_wasted_token_fraction"),
+              "chaos_recovery_wall_min_s,chaos_wasted_token_fraction,"
+              "paged_wall_min_s"),
 }
 
 
@@ -122,6 +124,8 @@ def main(argv=None) -> int:
                 return serve_throughput.mixed_workload_descriptor()
             if m.startswith("chaos_"):
                 return serve_throughput.chaos_workload_descriptor()
+            if m.startswith(("paged_", "prefix_", "page_")):
+                return serve_throughput.prefix_workload_descriptor()
             return serve_throughput.workload_descriptor()
 
         proxies = {m: serve_proxy(m) for m in metrics}

@@ -30,11 +30,19 @@ supervised fleet with no fault), and ``chaos_wasted_token_fraction``
 is dropped or ends non-ok — a chaos benchmark that quietly sheds work
 would report a flattering wall time.
 
+Plus the **prefix-reuse workload**: 16 requests sharing one system
+prompt, served dense vs ``--cache-backend paged`` (block-table cache +
+radix prefix trie, ``serve.kv_cache``). The paged run must match the
+dense tokens bitwise AND demonstrably reuse the shared prefix (non-zero
+``prefix_hit_rate``, fewer prefill tokens) or it hard-fails; it records
+``paged_wall_min_s``, ``paged_decode_toks_per_s``, ``prefix_hit_rate``
+and the steady-state ``page_utilization``.
+
 Each variant reports prefill and decode tokens/s; the record lands in the
 BENCH_quant_time.json trajectory and ``benchmarks.gate --bench serve``
 gates the scanned-ref decode wall time AND the mixed scheduler wall time
-AND the chaos recovery wall + wasted-token fraction (min-of-repeats,
-p95-of-last-10 reference).
+AND the chaos recovery wall + wasted-token fraction AND the paged
+prefix-reuse wall time (min-of-repeats, p95-of-last-10 reference).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput
 """
@@ -105,6 +113,17 @@ CHAOS_REQUESTS = 12
 CHAOS_REPLICAS = 2
 CHAOS_PLAN = "exception@8:decode:0"
 
+# Prefix-reuse workload: every request opens with the same system prompt
+# (3 full pages at PREFIX_PAGE) and diverges into a short user tail — the
+# regime the paged backend's radix trie exists for. Dense serves it by
+# re-prefilling the prefix 16 times; paged prefills it once and maps the
+# shared pages read-only into each slot.
+PREFIX_REQUESTS = 16
+PREFIX_LEN = 24
+PREFIX_TAILS = (2, 5, 3, 7, 4, 6, 2, 8)
+PREFIX_NEW = 8
+PREFIX_PAGE = 8
+
 
 def workload_descriptor() -> dict:
     """The gate's comparability key: a changed serving workload re-baselines
@@ -138,6 +157,16 @@ def chaos_workload_descriptor() -> dict:
                 prompt=[MIX_PROMPT_MIN, MIX_PROMPT_MAX],
                 new_tokens=[MIX_NEW_MIN, MIX_NEW_MAX],
                 plan=CHAOS_PLAN, chunk=MIX_CHUNK)
+
+
+def prefix_workload_descriptor() -> dict:
+    """Comparability key for the same-system-prompt paged workload — its
+    own trajectory entries, gated independently of decode/mixed/chaos."""
+    return dict(kind="serve_prefix", layers=SERVE_L, d_model=SERVE_D,
+                d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS, bits=BITS,
+                requests=PREFIX_REQUESTS, prefix=PREFIX_LEN,
+                tails=list(PREFIX_TAILS), new_tokens=PREFIX_NEW,
+                page=PREFIX_PAGE)
 
 
 def mixed_workload():
@@ -222,6 +251,71 @@ def run_mixed(model, qparams, repeats: int = 3) -> dict:
          f"{sched_toks / s_min:.0f} tok/s, TTFT p50 {p(0.5)*1e3:.0f}ms "
          f"p95 {p(0.95)*1e3:.0f}ms, "
          f"sched/chunked tok/s {out['mixed_sched_vs_chunked_x']:.2f}x")
+    return out
+
+
+def run_prefix(model, qparams, repeats: int = 3) -> dict:
+    """Dense vs paged on the same-system-prompt workload. The paged run
+    must (a) emit bitwise-identical tokens to the dense oracle and
+    (b) actually reuse the shared prefix — fewer prefill launches AND
+    fewer prefill tokens, with a non-zero trie hit rate — or the
+    benchmark hard-fails: a paged number without reuse is just a slower
+    gather/scatter dense run."""
+    from repro.serve.kv_cache import CacheConfig
+
+    rng = np.random.default_rng(23)
+    prefix = rng.integers(2, SERVE_VOCAB, PREFIX_LEN).astype(np.int32)
+    reqs = []
+    for i in range(PREFIX_REQUESTS):
+        tail = rng.integers(2, SERVE_VOCAB,
+                            PREFIX_TAILS[i % len(PREFIX_TAILS)])
+        reqs.append(Request(np.concatenate([prefix, tail.astype(np.int32)]),
+                            max_new_tokens=PREFIX_NEW, id=i))
+    max_seq = PREFIX_LEN + max(PREFIX_TAILS) + PREFIX_NEW + 8
+
+    def serve(backend):
+        cache = CacheConfig(backend=backend, max_slots=SLOTS,
+                            max_seq=max_seq, page_size=PREFIX_PAGE)
+        eng = Engine(model, qparams, ServeConfig(cache=cache,
+                                                 backend="ref"))
+        sched = ContinuousScheduler(eng, prefill_chunk=MIX_CHUNK)
+        sched.run(reqs)  # warm: compile prefill/decode (+gather/scatter)
+        walls, toks = [], None
+        for _ in range(repeats):
+            sched = ContinuousScheduler(eng, prefill_chunk=MIX_CHUNK)
+            t0 = time.perf_counter()
+            res = sched.run(reqs)
+            walls.append(time.perf_counter() - t0)
+            toks = {r.id: r.tokens for r in res}
+        return float(np.min(walls)), toks, eng.cache_backend.stats()
+
+    d_min, d_toks, d_stats = serve("dense")
+    p_min, p_toks, p_stats = serve("paged")
+    if p_toks != d_toks:
+        raise RuntimeError("paged tokens diverged from the dense oracle")
+    if not (p_stats["prefix_hit_rate"] > 0.0
+            and p_stats["prefill_tokens"] < d_stats["prefill_tokens"]
+            and p_stats["prefill_launches"] <= d_stats["prefill_launches"]):
+        raise RuntimeError(
+            f"paged run shows no prefix reuse: paged={p_stats} "
+            f"dense={d_stats}")
+    n_toks = sum(len(t) for t in p_toks.values())
+    out = {
+        "prefix_dense_wall_min_s": round(d_min, 4),
+        "paged_wall_min_s": round(p_min, 4),
+        "paged_decode_toks_per_s": round(n_toks / p_min, 1),
+        "prefix_hit_rate": round(p_stats["prefix_hit_rate"], 4),
+        "page_utilization": round(p_stats["page_utilization"], 4),
+        "prefix_prefill_tokens_dense": d_stats["prefill_tokens"],
+        "prefix_prefill_tokens_paged": p_stats["prefill_tokens"],
+        "prefix_cow_copies": p_stats["cow_copies"],
+    }
+    emit("serve_throughput.prefix.paged", p_min * 1e6,
+         f"{n_toks / p_min:.0f} tok/s, hit rate "
+         f"{p_stats['prefix_hit_rate']:.0%}, prefill tokens "
+         f"{p_stats['prefill_tokens']} vs dense "
+         f"{d_stats['prefill_tokens']}, steady-state page util "
+         f"{p_stats['page_utilization']:.0%}")
     return out
 
 
@@ -318,7 +412,8 @@ def _build():
 
 def run_bench(repeats: int = 3, include_fused: bool = True,
               include_mixed: bool = True,
-              include_chaos: bool = True) -> dict:
+              include_chaos: bool = True,
+              include_prefix: bool = True) -> dict:
     """Measure every variant; returns the record appended to the
     BENCH_quant_time.json trajectory."""
     model, qparams, reqs = _build()
@@ -375,6 +470,13 @@ def run_bench(repeats: int = 3, include_fused: bool = True,
         chaos.update(run_chaos(model, qparams, repeats=repeats))
         emit_bench_json("quant_time", chaos)
         record.update(chaos)
+        record["proxy"] = workload_descriptor()
+    if include_prefix:
+        pref = dict(proxy=prefix_workload_descriptor(),
+                    backend=jax.default_backend(), host=host_family())
+        pref.update(run_prefix(model, qparams, repeats=repeats))
+        emit_bench_json("quant_time", pref)
+        record.update(pref)
         record["proxy"] = workload_descriptor()
     return record
 

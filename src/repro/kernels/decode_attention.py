@@ -1,5 +1,5 @@
-"""Pallas flash-decode kernel: grouped-query single-token attention over a
-long KV cache — the serving-side hot loop that pairs with quant_matmul.
+"""Pallas flash-decode kernels: grouped-query single-token attention over
+a long KV cache — the serving-side hot loop that pairs with quant_matmul.
 
 One program per (batch, kv-head): the (G, hd) query group tile stays in
 VMEM while the (S, hd) K/V cache streams through in ``bk`` blocks with an
@@ -10,6 +10,14 @@ decode_attention_gqa, here with explicit VMEM control for TPU).
 Supports the int8 KV cache (kv_int8 lever): codes and per-entry scales
 stream together and dequantize in VREGs — cache HBM traffic stays 1 byte/
 element end-to-end.
+
+``flash_decode_gqa_paged`` is the block-table variant for the paged cache
+(serve.kv_cache.PagedCacheBackend): K/V live in one pooled
+``(num_pages, page, KV, hd)`` buffer and each slot's logical row is a
+list of physical page indices. The page table rides scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``) so each grid step's BlockSpec index
+map DMAs the RIGHT physical page directly from HBM — attention gathers
+by page table with no materialized (B, S, KV, hd) dense view at all.
 """
 from __future__ import annotations
 
@@ -92,4 +100,117 @@ def flash_decode_gqa(q, k_cache, v_cache, length, k_scale=None, v_scale=None,
         out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
         interpret=interpret,
     )(q4, k_cache, v_cache, k_scale, v_scale, length_arr)
+    return out.reshape(b, 1, h, hd)
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, page, scale, quantized):
+    """One grid step = one (batch, kv-head, logical-page) visit. The
+    BlockSpec index maps already routed k/v/scale blocks to the PHYSICAL
+    page (scalar-prefetched table), so the body is a plain online-softmax
+    block update into VMEM scratch that persists across the page walk."""
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    npages = pl.num_programs(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
+    g = q.shape[0]
+    k_blk = k_ref[0, :, 0, :].astype(jnp.float32)          # (page, hd)
+    v_blk = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        k_blk = k_blk * ks_ref[0, :, 0, :].astype(jnp.float32)
+        v_blk = v_blk * vs_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, page)
+    # mask by the slot's LOGICAL position: this physical page holds
+    # logical positions [pi*page, (pi+1)*page) of slot bi's row
+    kpos = pi * page + jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
+    s = jnp.where(kpos < len_ref[bi], s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]                # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pi == npages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_gqa_paged(q, k_pool, v_pool, page_table, lengths,
+                           k_scale_pool=None, v_scale_pool=None,
+                           interpret: bool = False):
+    """Gather-by-page-table flash decode. q: (B, 1, H, hd); pools:
+    (P, page, KV, hd) (fp, or int8 with (P, page, KV, 1) scale pools);
+    page_table: (B, pps) int32 physical page per logical page (entries
+    past a slot's allocation may point anywhere — masking by ``lengths``
+    keeps them invisible, matching the paged backend's scratch-page
+    convention); lengths: (B,) int32 valid prefix per slot, each >= 1
+    (same first-block-not-fully-masked precondition as
+    ``flash_decode_gqa``). Returns (B, 1, H, hd).
+
+    Grid (B, KV, pps) with the logical-page walk innermost: VMEM scratch
+    carries the online softmax across pages and the output tile is
+    written once on the last page."""
+    b, _, h, hd = q.shape
+    _, page, kv, _ = k_pool.shape
+    pps = page_table.shape[1]
+    g = h // kv
+    quantized = k_scale_pool is not None
+    if not quantized:  # dummy scale operands keep one kernel signature
+        p_total = k_pool.shape[0]
+        k_scale_pool = jnp.ones((p_total, page, kv, 1), jnp.bfloat16)
+        v_scale_pool = jnp.ones((p_total, page, kv, 1), jnp.bfloat16)
+    scale = 1.0 / (hd ** 0.5)
+    q4 = q.reshape(b, kv, g, hd)
+    flat = page_table.reshape(-1).astype(jnp.int32)
+
+    def page_map(bi, ki, pi, table_ref, len_ref):
+        return (table_ref[bi * pps + pi], 0, ki, 0)
+
+    def scale_map(bi, ki, pi, table_ref, len_ref):
+        return (table_ref[bi * pps + pi], 0, ki, 0)
+
+    def q_map(bi, ki, pi, table_ref, len_ref):
+        return (bi, ki, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page table + lengths drive the DMA routing
+        grid=(b, kv, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), q_map),
+            pl.BlockSpec((1, page, 1, hd), page_map),
+            pl.BlockSpec((1, page, 1, hd), page_map),
+            pl.BlockSpec((1, page, 1, 1), scale_map),
+            pl.BlockSpec((1, page, 1, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),   # acc
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running sum
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, scale=scale,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(flat, jnp.asarray(lengths, jnp.int32), q4, k_pool, v_pool,
+      k_scale_pool, v_scale_pool)
     return out.reshape(b, 1, h, hd)

@@ -22,6 +22,15 @@ a Poisson arrival process at R requests/s (0 = all requests at t=0) and
 [prompt_len/4, prompt_len] — the mixed-length workload where continuous
 batching beats the chunked engine.
 
+``--cache-backend paged`` swaps the scheduler's KV cache for the paged
+block-table backend (``serve.kv_cache``): fixed ``--page-size`` pages in
+one pooled buffer, per-slot page tables, free-list recycling, and (on by
+default) radix prefix sharing — a fleet of same-system-prompt requests
+prefills the shared prefix once; ``--no-prefix-cache`` disables sharing.
+The drain report prints backend, page utilization and prefix hit rate.
+The paged cache routes through the scheduler/supervisor paths; the
+chunked engine keeps its own dense cache.
+
 Fault-tolerant serving (see ``serve.supervisor``): ``--replicas N`` puts
 N scheduler-backed replicas behind one shared admission queue with
 supervised restart; ``--fault-plan`` injects deterministic faults in the
@@ -49,6 +58,7 @@ from ..quant.apply import BACKENDS, dispatch_report
 from ..quant.stacked import quantize_model_stacked
 from ..serve.engine import Engine, Request, ServeConfig
 from ..serve.faults import FaultPlan
+from ..serve.kv_cache import CacheConfig
 from ..serve.scheduler import ContinuousScheduler, nearest_percentile
 from ..serve.supervisor import Supervisor, SupervisorConfig
 
@@ -122,6 +132,18 @@ def main(argv=None):
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="bound the admission queue; overflow is shed "
                          "with status rejected (0 = unbounded)")
+    ap.add_argument("--cache-backend", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache backend: dense per-slot envelope (the "
+                         "reference) or the paged block-table cache with "
+                         "radix prefix sharing")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged backend)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share full prompt-prefix pages across requests "
+                         "via the radix trie (paged backend; "
+                         "--no-prefix-cache disables sharing)")
     ap.add_argument("--max-restarts", type=int, default=3,
                     help="supervisor restart cap per replica; past it the "
                          "replica is retired and its requests fail "
@@ -152,17 +174,37 @@ def main(argv=None):
                          args.new_tokens, args.mixed_lengths,
                          deadline_s=args.deadline_s or None)
     scfg = ServeConfig(
-        max_slots=args.slots, max_seq=args.prompt_len + args.new_tokens + 8,
+        cache=CacheConfig(backend=args.cache_backend,
+                          max_slots=args.slots,
+                          max_seq=args.prompt_len + args.new_tokens + 8,
+                          page_size=args.page_size,
+                          prefix_cache=args.prefix_cache),
         backend=args.backend, interpret=args.interpret or None)
     eng = Engine(model, params, scfg)
+
+    def cache_report(engine):
+        s = engine.cache_backend.stats()
+        line = (f"  cache: backend={s['backend']} "
+                f"page-utilization {s['page_utilization']:.1%}")
+        if s["backend"] == "paged":
+            line += (f" prefix-hit-rate {s['prefix_hit_rate']:.1%} "
+                     f"(hit {s['hit_tokens']}/{s['prompt_tokens']} prompt "
+                     f"tokens, {s['cow_copies']} CoW, "
+                     f"{s['evictions']} evictions)")
+        print(line)
 
     t0 = time.time()
     if args.replicas > 0 or args.fault_plan:
         # fault-tolerant fleet: N replicas behind one shared admission
         # queue, supervised restart, zero dropped requests
         plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+        fleet = []
+
+        def factory():
+            fleet.append(Engine(model, params, scfg))
+            return fleet[-1]
         sup = Supervisor(
-            lambda: Engine(model, params, scfg),
+            factory,
             SupervisorConfig(replicas=max(1, args.replicas),
                              prefill_chunk=args.prefill_chunk,
                              max_restarts=args.max_restarts,
@@ -188,6 +230,8 @@ def main(argv=None):
               f"{report.wasted_token_fraction:.1%}")
         print(f"  TTFT p50 {p(0.5)*1e3:.1f}ms p95 {p(0.95)*1e3:.1f}ms "
               f"(ok requests)")
+        for engine in fleet[-max(1, args.replicas):]:
+            cache_report(engine)
         if not report.zero_drops:
             print("  WARNING: request reconciliation failed "
                   f"({len(report.outcomes)} != {report.submitted})")
@@ -218,6 +262,7 @@ def main(argv=None):
         print("  statuses: " + " ".join(
             f"{s}={counts.get(s, 0)}"
             for s in ("ok", "timeout", "rejected", "failed")))
+        cache_report(eng)
         for r in sres[:3]:
             print(f"  req {r.id}: {r.tokens}")
         return 0

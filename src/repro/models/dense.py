@@ -293,6 +293,83 @@ class DenseStack:
                       cache["v"]), cfg.n_layers, cfg.scan_layers)
         return h, {"k": ks, "v": vs}
 
+    def apply_prefill_slots(self, layers, x, cache, starts, active):
+        """Batched slot prefill: every lane's chunk writes into ITS cache
+        row at ITS own offset in one launch (PR 5 follow-up (b) — the last
+        O(slots) dispatch in the scheduler step loop). x: (B, C, D) lane-
+        stacked chunk embeddings (lane b <-> cache row b); starts: (B,)
+        int32 per-lane absolute offsets; active: (B,) bool — inactive
+        lanes (idle/decoding slots riding along for the fixed batch shape)
+        compute garbage attention but their cache rows are passed through
+        bitwise-untouched via a per-lane select, so the launch never
+        perturbs a decoding slot's live entries. Per-lane math is bitwise
+        identical to ``apply_prefill_slot`` on the same row: batched
+        einsums are row-independent and the (B,) ``q_offset`` masks each
+        lane at its own positions. Returns (hidden (B, C, D), cache)."""
+        cfg = self.cfg
+        b, c, _ = x.shape
+        s_cache = cache["k"].shape[2]
+        positions = jnp.arange(c, dtype=jnp.int32)[None] + starts[:, None]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, c))
+        kv8 = cfg.kv_cache_bits == 8
+        lane_on = active.reshape(b, 1, 1, 1)
+
+        def rows_update(cache_l, new):
+            """Write lane b's chunk into cache_l (B, S, ...) at
+            (b, starts[b]); inactive lanes keep their original row.
+            Returns (updated cache_l, updated rows)."""
+            upd = jax.vmap(
+                lambda row, n, st: jax.lax.dynamic_update_slice_in_dim(
+                    row, n, st, axis=0))(cache_l, new.astype(cache_l.dtype),
+                                         starts)
+            out = jnp.where(lane_on, upd, cache_l)
+            return out, out
+
+        def body(h, xs):
+            if kv8:
+                pl, idx, k_l, v_l, ks_l, vs_l = xs
+            else:
+                pl, idx, k_l, v_l = xs
+            q, k, v = self._qkv(pl, h, positions)  # k/v: (B, C, KV, hd)
+            if kv8:
+                kc, kscale = self._quant_kv(k)
+                vc, vscale = self._quant_kv(v)
+                k_l, k_row = rows_update(k_l, kc)
+                v_l, v_row = rows_update(v_l, vc)
+                ks_l, ks_row = rows_update(ks_l, kscale)
+                vs_l, vs_row = rows_update(vs_l, vscale)
+                k_row = k_row.astype(cfg.dtype) * ks_row.astype(cfg.dtype)
+                v_row = v_row.astype(cfg.dtype) * vs_row.astype(cfg.dtype)
+            else:
+                k_l, k_row = rows_update(k_l, k)
+                v_l, v_row = rows_update(v_l, v)
+            kr = repeat_kv(k_row, cfg.n_heads // cfg.n_kv_heads)
+            vr = repeat_kv(v_row, cfg.n_heads // cfg.n_kv_heads)
+            win = self._layer_window(idx, s_cache)
+            attn = flash_attention(q, kr, vr, causal=True, window=win,
+                                   softcap_val=cfg.attn_softcap,
+                                   q_offset=starts)
+            attn = mm(attn.reshape(b, c, cfg.q_dim), pl["wo"])
+            if "post_attn_norm" in pl:
+                attn = rms_norm(attn, pl["post_attn_norm"])
+            h = h + attn
+            h = h + self._ffn(pl, h)
+            if kv8:
+                return h, (k_l, v_l, ks_l, vs_l)
+            return h, (k_l, v_l)
+
+        if kv8:
+            h, (ks, vs, kss, vss) = self._run_layers(
+                body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                          cache["v"], cache["k_scale"], cache["v_scale"]),
+                cfg.n_layers, cfg.scan_layers)
+            return h, {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+        h, (ks, vs) = self._run_layers(
+            body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                      cache["v"]), cfg.n_layers, cfg.scan_layers)
+        return h, {"k": ks, "v": vs}
+
     # -------------------------------------------------------------- decode
     def init_cache(self, batch: int, seq: int):
         cfg = self.cfg

@@ -156,7 +156,13 @@ def flash_attention(
     Two-level lax.scan with online softmax; never materializes (S_q, S_k).
     ``window`` may be a traced value (per-layer local/global selection in a
     scanned stack chooses window = S_k for global layers).
+    ``q_offset`` is a scalar, or a (B,) vector giving each batch lane its
+    OWN absolute offset (batched slot prefill: lane b resumes at its
+    slot's position) — per-lane masks, same row-independent einsums, so a
+    lane's output is bitwise what the scalar-offset call would produce.
     """
+    q_offset = jnp.asarray(q_offset)
+    per_lane = q_offset.ndim == 1
     b, sq, h, hd = q.shape
     sk = k.shape[1]
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
@@ -174,7 +180,10 @@ def flash_attention(
 
     def q_step(_, qi):
         q_blk, qidx = qi  # (b, q_block, h, hd), scalar block index
-        qpos = q_offset + qidx * q_block + jnp.arange(q_block)
+        base = qidx * q_block + jnp.arange(q_block)
+        # scalar offset: qpos (q_block,); per-lane offsets: qpos (B, q_block)
+        qpos = q_offset[:, None] + base[None, :] if per_lane \
+            else q_offset + base
 
         def k_step(carry, ki):
             acc, m, l = carry
@@ -186,12 +195,22 @@ def flash_attention(
             ) * scale
             if softcap_val:
                 s = softcap(s, softcap_val)
-            mask = kpos[None, :] < sk  # padding
-            if causal:
-                mask = mask & (kpos[None, :] <= qpos[:, None])
-            if window is not None:
-                mask = mask & (kpos[None, :] > qpos[:, None] - window)
-            s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+            if per_lane:  # masks carry a lane dim: (B, q_block, k_block)
+                mask = jnp.broadcast_to(kpos[None, None, :] < sk,
+                                        qpos.shape + (k_block,))
+                if causal:
+                    mask = mask & (kpos[None, None, :] <= qpos[:, :, None])
+                if window is not None:
+                    mask = mask & (kpos[None, None, :]
+                                   > qpos[:, :, None] - window)
+                s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+            else:
+                mask = kpos[None, :] < sk  # padding
+                if causal:
+                    mask = mask & (kpos[None, :] <= qpos[:, None])
+                if window is not None:
+                    mask = mask & (kpos[None, :] > qpos[:, None] - window)
+                s = jnp.where(mask[None, None, :, :], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)

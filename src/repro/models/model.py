@@ -157,6 +157,25 @@ class LM:
         h_last = jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1)
         return self._logits_last(params, h_last), cache
 
+    def prefill_slots(self, params, tokens, cache, starts, lasts, active):
+        """Batched slot prefill: one launch writing B chunks, lane b into
+        cache row b at its own offset. tokens (B, C) int32; starts (B,)
+        per-lane prompt offsets; lasts (B,) per-lane index of the chunk's
+        last REAL token; active (B,) bool — inactive lanes compute garbage
+        but their cache rows pass through bitwise-untouched (masked
+        write), so idle/decoding slots are unaffected by riding along.
+        Returns (logits (B, 1, V) at each lane's ``lasts`` position, and
+        the updated cache)."""
+        if not hasattr(self.stack, "apply_prefill_slots"):
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no slot-granular prefill "
+                f"(continuous batching serves dense-stack families)")
+        x = self._embed_tokens(params, tokens)
+        h, cache = self.stack.apply_prefill_slots(
+            params["layers"], x, cache, starts, active)
+        h_last = jnp.take_along_axis(h, lasts[:, None, None], axis=1)
+        return self._logits_last(params, h_last), cache
+
     def decode_step(self, params, tokens, cache, length):
         """tokens: (B,) or (B, 1) int32; length: scalar int32 count of valid
         cache entries, or a (B,) int32 vector of per-slot counts (continuous

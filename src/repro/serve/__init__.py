@@ -3,12 +3,16 @@ deterministic fault injection, and the multi-replica supervisor."""
 from .engine import Engine, Request, Result, ServeConfig
 from .faults import (CacheCorruptionError, Clock, FaultInjector, FaultPlan,
                      FaultSpec, InjectedFault, VirtualClock)
+from .kv_cache import (CacheBackend, CacheConfig, DenseCacheBackend,
+                       PagedCacheBackend, PageExhaustionError)
 from .scheduler import (STATUSES, ContinuousScheduler, SchedResult, StepTrace,
                         bucket_sizes)
 from .supervisor import Outcome, Supervisor, SupervisorConfig, SupervisorReport
 
 __all__ = [
     "Engine", "Request", "Result", "ServeConfig",
+    "CacheConfig", "CacheBackend", "DenseCacheBackend", "PagedCacheBackend",
+    "PageExhaustionError",
     "ContinuousScheduler", "SchedResult", "StepTrace", "bucket_sizes",
     "STATUSES",
     "FaultPlan", "FaultSpec", "FaultInjector", "InjectedFault",

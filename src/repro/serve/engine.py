@@ -7,12 +7,15 @@ Two serving modes share the engine's compiled executables:
     slot-chunks that prefill together and decode until the whole chunk
     drains. Simple, and kept as the A/B oracle for the scheduler.
   * **Slot-granular** (``serve.scheduler.ContinuousScheduler``): the
-    engine exposes per-slot primitives — ``new_cache`` (one long-lived
-    decode cache), ``prefill_slot_chunk`` (a bounded chunk of ONE prompt
-    into its slot's cache region via ``dynamic_update_slice``), and
-    ``decode_slots`` (one global decode step over per-slot lengths) — so
-    a continuous-batching scheduler can admit/retire requests per slot
-    without ever changing the compiled decode executable's shapes.
+    engine exposes a pluggable cache surface — ``engine.cache_backend``
+    (``serve.kv_cache.CacheBackend``: dense oracle or paged block-table
+    with radix prefix sharing) wrapping the private slot executables
+    (chunked/batched slot prefill via ``dynamic_update_slice``, one
+    global decode step over per-slot lengths) — so a continuous-batching
+    scheduler can admit/retire requests per slot without ever changing
+    the compiled decode executable's shapes. The old raw primitives
+    (``new_cache`` / ``prefill_slot_chunk`` / ``decode_slots``) remain as
+    one-release deprecation shims.
 
 Quantized serving: pass ``params`` whose matrices are QuantizedLinear
 (from ``quant.stacked.quantize_model_stacked``) — the stacked tensors ride
@@ -28,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -36,6 +40,7 @@ import numpy as np
 
 from ..models import LM
 from ..quant.apply import backend_scope
+from .kv_cache import CacheConfig, make_backend
 
 
 @dataclasses.dataclass
@@ -47,19 +52,34 @@ class ServeConfig:
     backend: str = "auto"       # quantized-matmul backend: ref|fused|auto
     interpret: Optional[bool] = None  # force Pallas interpret (CPU testing)
     donate_cache: Optional[bool] = None  # None: donate where XLA supports it
+    cache: Optional[CacheConfig] = None  # cache knobs; None = dense backend
+                                         # built from the legacy fields above
+    batched_prefill: bool = True  # one (B, C) launch per scheduler step
+
+    def __post_init__(self):
+        # One source of truth for cache knobs. An explicit CacheConfig wins
+        # (legacy fields mirror it so engine/scheduler/supervisor keep
+        # reading cfg.max_slots etc.); otherwise the legacy fields build it.
+        if self.cache is None:
+            self.cache = CacheConfig(max_slots=self.max_slots,
+                                     max_seq=self.max_seq,
+                                     donate_cache=self.donate_cache)
+        else:
+            self.max_slots = self.cache.max_slots
+            self.max_seq = self.cache.max_seq
+            self.donate_cache = self.cache.donate_cache
 
     def resolve_donate(self) -> bool:
         """Whether the cache-threading executables donate their cache
-        argument. ``None`` resolves from the backend ONCE, here — every
-        executable (chunked decode, slot prefill, slot decode) must agree,
-        or the scheduler's long-lived cache would be consumed by one step
-        and then handed, deleted, to the next. XLA:CPU ignores donation
-        (with a warning) but JAX still invalidates the donated buffer, so
-        default it off there; an explicit True/False always wins (tests
-        force True on CPU to exercise the invalidation discipline)."""
-        if self.donate_cache is None:
-            return jax.default_backend() != "cpu"
-        return bool(self.donate_cache)
+        argument. ``None`` resolves from the backend ONCE (in
+        ``CacheConfig.resolve_donate``) — every executable (chunked decode,
+        slot prefill, slot decode) must agree, or the scheduler's
+        long-lived cache would be consumed by one step and then handed,
+        deleted, to the next. XLA:CPU ignores donation (with a warning)
+        but JAX still invalidates the donated buffer, so default it off
+        there; an explicit True/False always wins (tests force True on CPU
+        to exercise the invalidation discipline)."""
+        return self.cache.resolve_donate()
 
 
 @dataclasses.dataclass
@@ -83,9 +103,17 @@ class Result:
 
 class Engine:
     def __init__(self, model: LM, params, cfg: ServeConfig):
+        if cfg.cache.kv_cache_bits is not None and \
+                cfg.cache.kv_cache_bits != model.cfg.kv_cache_bits:
+            # CacheConfig owns the cache-precision knob: rebuild the model
+            # view with the requested kv bits (params are unaffected — the
+            # KV quantizer is static, not learned).
+            model = type(model)(dataclasses.replace(
+                model.cfg, kv_cache_bits=cfg.cache.kv_cache_bits))
         self.model = model
         self.params = params
         self.cfg = cfg
+        self._cache_backend = None
         # trace-time counters: the scheduler's length-bucketing claim
         # ("compile count bounded by the bucket set") is asserted on these.
         self.prefill_slot_traces = 0
@@ -113,6 +141,12 @@ class Engine:
             with backend_scope(cfg.backend, cfg.interpret):
                 return model.prefill_slot(p, toks, cache, slot, start, last)
 
+        def prefill_slots(p, toks, cache, starts, lasts, active):
+            self.prefill_slot_traces += 1  # runs at trace time only
+            with backend_scope(cfg.backend, cfg.interpret):
+                return model.prefill_slots(p, toks, cache, starts, lasts,
+                                           active)
+
         # Donate the cache through every cache-threading executable: each
         # step's update then reuses the previous step's buffers instead of
         # allocating a second full-size KV cache (the decode-memory floor
@@ -127,16 +161,32 @@ class Engine:
         self._prefill = jax.jit(prefill)
         self._prefill_slot = jax.jit(prefill_slot, donate_argnums=(2,)) \
             if donate else jax.jit(prefill_slot)
+        self._prefill_slots = jax.jit(prefill_slots, donate_argnums=(2,)) \
+            if donate else jax.jit(prefill_slots)
 
     # ----------------------------------------------- slot-granular serving
-    # Primitives for the continuous-batching scheduler. The cache argument
-    # is DONATED when resolve_donate() says so: after a call returns, the
-    # passed-in cache is dead — always thread the returned one.
-    def new_cache(self):
+    # The scheduler reaches these THROUGH the cache backend (self.
+    # cache_backend), which owns the long-lived cache state. The private
+    # ``*_impl`` methods are the raw executables: their cache argument is
+    # DONATED when resolve_donate() says so — after a call returns, the
+    # passed-in cache is dead, always thread the returned one. The old
+    # public names (new_cache / prefill_slot_chunk / decode_slots) remain
+    # as deprecation shims for one release.
+    @property
+    def cache_backend(self):
+        """The engine's cache surface (serve.kv_cache.CacheBackend):
+        "dense" (reference oracle) or "paged" (block-table pool + radix
+        prefix sharing), per cfg.cache.backend. Built lazily so engines
+        used only through ``generate`` never allocate backend state."""
+        if self._cache_backend is None:
+            self._cache_backend = make_backend(self)
+        return self._cache_backend
+
+    def _new_cache_impl(self):
         """One long-lived decode cache covering all slots."""
         return self.model.init_cache(self.cfg.max_slots, self.cfg.max_seq)
 
-    def prefill_slot_chunk(self, cache, slot: int, tokens, start: int,
+    def _prefill_slot_impl(self, cache, slot: int, tokens, start: int,
                            last: int):
         """Prefill one bucketed chunk of one prompt into ``slot`` at offset
         ``start``. tokens: (C,) int32 (C must be a bucket size — the caller
@@ -150,7 +200,22 @@ class Engine:
                                   jnp.int32(slot), jnp.int32(start),
                                   jnp.int32(last))
 
-    def decode_slots(self, cache, tokens, lengths):
+    def _prefill_slots_impl(self, cache, tokens, starts, lasts, active):
+        """Batched slot prefill: one (B, C) launch writing every active
+        lane's chunk at its own start offset (lane b <-> slot b). tokens:
+        (B, C) int32; starts/lasts: (B,) int32; active: (B,) bool — rows
+        with active=False compute garbage but their cache rows pass
+        through bitwise-untouched (the write is masked per lane), so idle
+        slots are unaffected. Returns (logits (B, 1, V), cache)."""
+        if self.fault_hook is not None:
+            cache = self.fault_hook("prefill", cache)
+        return self._prefill_slots(
+            self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
+            jnp.asarray(np.asarray(starts, np.int32)),
+            jnp.asarray(np.asarray(lasts, np.int32)),
+            jnp.asarray(np.asarray(active, bool)))
+
+    def _decode_slots_impl(self, cache, tokens, lengths):
         """One global decode step over per-slot lengths. tokens: (B,) int32
         current token per slot; lengths: (B,) int32 per-slot cache lengths
         (= each slot's write position; idle slots pass their length too, so
@@ -161,6 +226,30 @@ class Engine:
         return self._decode(
             self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
             jnp.asarray(np.asarray(lengths, np.int32)))
+
+    # Deprecation shims (one release): the raw slot primitives moved behind
+    # the CacheBackend protocol — migrate callers to engine.cache_backend.
+    def _deprecated(self, name: str, repl: str):
+        warnings.warn(
+            f"Engine.{name} is deprecated and will be removed next "
+            f"release; use engine.cache_backend.{repl} (serve.kv_cache) "
+            f"instead", DeprecationWarning, stacklevel=3)
+
+    def new_cache(self):
+        """Deprecated: use ``engine.cache_backend.start()``."""
+        self._deprecated("new_cache", "start()")
+        return self._new_cache_impl()
+
+    def prefill_slot_chunk(self, cache, slot: int, tokens, start: int,
+                           last: int):
+        """Deprecated: use ``engine.cache_backend.prefill_chunk``."""
+        self._deprecated("prefill_slot_chunk", "prefill_chunk(...)")
+        return self._prefill_slot_impl(cache, slot, tokens, start, last)
+
+    def decode_slots(self, cache, tokens, lengths):
+        """Deprecated: use ``engine.cache_backend.decode``."""
+        self._deprecated("decode_slots", "decode(...)")
+        return self._decode_slots_impl(cache, tokens, lengths)
 
     # -------------------------------------------------------------- serving
     def generate(self, requests: List[Request]) -> List[Result]:

@@ -1,0 +1,609 @@
+"""Pluggable KV-cache backends for the serving engine.
+
+The Engine's cache surface is a ``CacheBackend``: the scheduler never
+touches a raw cache pytree again — it asks the backend to ``alloc`` a
+slot for a prompt (learning how many leading tokens are already cached),
+runs ``prefill_chunk``/``prefill_chunks``/``decode`` steps, and ``free``s
+the slot at retirement. Two backends ship:
+
+  * **DenseCacheBackend** — the reference oracle: one ``(L, B, max_seq,
+    KV, hd)`` envelope per serve, exactly the cache the engine always
+    owned, now threaded privately through the backend (donation-safe:
+    callers can no longer hand a consumed cache back).
+  * **PagedCacheBackend** — a block-table cache: all KV lives in one
+    pooled ``(L, num_pages, page, KV, hd)`` buffer; each slot maps a row
+    of physical pages through an int32 page table; retired pages return
+    to a free list the moment the slot frees. On top rides radix-style
+    prefix sharing: completed prompt pages register in a trie keyed by
+    their token content, a newly admitted request walks the trie and maps
+    every matching full page read-only (refcounted), and the first
+    divergent page is copy-on-written — so a fleet of same-system-prompt
+    requests prefills the shared prefix once.
+
+Bitwise parity by construction: the paged backend *gathers* its pages
+into exactly the dense ``(L, B, S, KV, hd)`` view and runs the very same
+compiled prefill/decode executables the dense backend runs, then
+scatters touched pages back. K/V entries are position-local (same token
+at the same absolute position quantizes/ropes to the same bytes), so
+shared pages, copy-on-write copies and the scheduler's near-``max_seq``
+overlap re-prefills are all bitwise-identical to an unshared run — the
+scheduler's oracle tests hold verbatim with ``backend="paged"``. The
+gather/scatter round-trip is the *correctness* path; the production
+decode path is the gather-by-page-table Pallas kernel
+(``kernels.decode_attention.flash_decode_gqa_paged``).
+
+Admission control: ``alloc`` raises ``PageExhaustionError`` when the
+pool cannot hold a request — ``permanent=True`` when the request could
+never fit even an empty pool (the scheduler retires it ``rejected``),
+``permanent=False`` when pages are merely busy right now (the request
+stays queued). Trie-held pages with no live readers are LRU-evicted
+before either verdict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PageExhaustionError(RuntimeError):
+    """The page pool cannot serve an ``alloc``. ``permanent`` says the
+    request could never fit (reject it) vs pages being busy right now
+    (keep it queued)."""
+
+    def __init__(self, msg: str, permanent: bool):
+        super().__init__(msg)
+        self.permanent = permanent
+
+
+@dataclasses.dataclass
+class CacheConfig:
+    """Every cache knob in one place, consumed by both backends (the
+    serve CLI maps ``--cache-backend/--page-size/--prefix-cache`` here).
+
+    ``kv_cache_bits=None`` defers to the model config; 8 forces the int8
+    per-(token, head) quantized cache regardless of what the model was
+    built with. ``num_pages=None`` sizes the paged pool to the dense
+    footprint (``max_slots * ceil(max_seq / page_size)``) — prefix
+    sharing then strictly *adds* capacity headroom."""
+    backend: str = "dense"              # dense | paged
+    max_slots: int = 8
+    max_seq: int = 1024
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    prefix_cache: bool = True
+    kv_cache_bits: Optional[int] = None
+    donate_cache: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in ("dense", "paged"):
+            raise ValueError(f"cache backend {self.backend!r} "
+                             "(one of dense|paged)")
+        if self.backend == "paged" and self.page_size < 1:
+            raise ValueError(f"page_size={self.page_size} must be >= 1")
+
+    def resolve_donate(self) -> bool:
+        """Single resolution of cache donation for every cache-threading
+        executable (see ``ServeConfig.resolve_donate`` for why they must
+        agree). XLA:CPU ignores donation but JAX still invalidates the
+        buffer, so default off there."""
+        if self.donate_cache is None:
+            return jax.default_backend() != "cpu"
+        return bool(self.donate_cache)
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_seq // self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        if self.num_pages is not None:
+            return int(self.num_pages)
+        return self.max_slots * self.pages_per_slot
+
+
+class CacheBackend:
+    """Protocol both backends implement. The backend OWNS the device
+    cache state — donation-safe by construction: every compute call
+    rebinds the internal state to the executable's return, so no caller
+    can ever hand a consumed cache back."""
+
+    name = "abstract"
+
+    def start(self) -> None:
+        raise NotImplementedError
+
+    def alloc(self, slot: int, prompt: np.ndarray, max_new: int) -> int:
+        """Reserve capacity for ``prompt`` + ``max_new`` in ``slot``;
+        returns how many leading prompt tokens are ALREADY cached (a
+        prefix-cache hit; always <= len(prompt) - 1 so the final prompt
+        position is re-computed for its logits). Raises
+        ``PageExhaustionError`` when the pool cannot serve it."""
+        raise NotImplementedError
+
+    def free(self, slot: int) -> None:
+        raise NotImplementedError
+
+    def register_prompt(self, slot: int, prompt: np.ndarray) -> None:
+        """Called once the slot's prompt is fully prefilled — the paged
+        backend registers completed prompt pages in the prefix trie."""
+        raise NotImplementedError
+
+    def prefill_chunk(self, slot: int, tokens, start: int, last: int):
+        """Single-slot chunked prefill; returns logits (1, 1, V)."""
+        raise NotImplementedError
+
+    def prefill_chunks(self, tokens, starts, lasts, active):
+        """One (B, C) launch prefilling every active lane's chunk at its
+        own start offset; inactive lanes' cache rows pass through
+        bitwise-untouched. Returns logits (B, 1, V)."""
+        raise NotImplementedError
+
+    def decode(self, tokens, lengths):
+        """One global decode step over per-slot lengths; returns logits
+        (B, 1, V)."""
+        raise NotImplementedError
+
+    # fault-injection surface: the scheduler's "step"-site hook corrupts
+    # whatever pytree this exposes (the dense cache / the page pools)
+    @property
+    def device_state(self):
+        raise NotImplementedError
+
+    @device_state.setter
+    def device_state(self, value):
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        raise NotImplementedError
+
+
+def make_backend(engine) -> CacheBackend:
+    cfg = engine.cfg.cache
+    if cfg.backend == "paged":
+        return PagedCacheBackend(engine)
+    return DenseCacheBackend(engine)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference backend
+# ---------------------------------------------------------------------------
+
+class DenseCacheBackend(CacheBackend):
+    """The pre-paging cache, behind the backend protocol: one
+    ``(L, B, max_seq, KV, hd)`` envelope, no sharing, ``alloc`` always a
+    full-prefill miss. This is the parity oracle the paged backend is
+    tested against."""
+
+    name = "dense"
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._cache = None
+        self._lengths = np.zeros(engine.cfg.max_slots, np.int64)
+        self.n_prefill_launches = 0
+        self.n_prefill_tokens = 0
+
+    def _legacy(self, name: str, impl):
+        """Instance-level overrides of the deprecated Engine primitives
+        (tests wrap them to audit cache threading) stay visible to the
+        backend; otherwise skip the shim straight to the impl so the
+        internal path never trips its own deprecation warning."""
+        fn = self.engine.__dict__.get(name)
+        return impl if fn is None else fn
+
+    def start(self) -> None:
+        self._cache = self.engine._new_cache_impl()
+        self._lengths[:] = 0
+        self.n_prefill_launches = 0
+        self.n_prefill_tokens = 0
+
+    def alloc(self, slot: int, prompt: np.ndarray, max_new: int) -> int:
+        return 0
+
+    def free(self, slot: int) -> None:
+        self._lengths[slot] = 0
+
+    def register_prompt(self, slot: int, prompt: np.ndarray) -> None:
+        pass
+
+    def prefill_chunk(self, slot: int, tokens, start: int, last: int):
+        fn = self._legacy("prefill_slot_chunk",
+                          self.engine._prefill_slot_impl)
+        logits, self._cache = fn(self._cache, slot, tokens, start, last)
+        self.n_prefill_launches += 1
+        self.n_prefill_tokens += len(tokens)
+        self._lengths[slot] = start + len(tokens)
+        return logits
+
+    def prefill_chunks(self, tokens, starts, lasts, active):
+        logits, self._cache = self.engine._prefill_slots_impl(
+            self._cache, tokens, starts, lasts, active)
+        self.n_prefill_launches += 1
+        self.n_prefill_tokens += int(np.sum(active)) * tokens.shape[1]
+        for i, on in enumerate(active):
+            if on:
+                self._lengths[i] = int(starts[i]) + tokens.shape[1]
+        return logits
+
+    def decode(self, tokens, lengths):
+        fn = self._legacy("decode_slots", self.engine._decode_slots_impl)
+        logits, self._cache = fn(self._cache, tokens, lengths)
+        self._lengths[:] = np.asarray(lengths)
+        return logits
+
+    @property
+    def device_state(self):
+        return self._cache
+
+    @device_state.setter
+    def device_state(self, value):
+        self._cache = value
+
+    def stats(self) -> dict:
+        cap = self.engine.cfg.max_slots * self.engine.cfg.max_seq
+        return dict(
+            backend=self.name,
+            page_utilization=float(self._lengths.sum()) / max(cap, 1),
+            prefix_hit_rate=0.0,
+            prefill_launches=self.n_prefill_launches,
+            prefill_tokens=self.n_prefill_tokens,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Paged backend: block tables + radix prefix trie
+# ---------------------------------------------------------------------------
+
+class _TrieNode:
+    """One full page of prompt KV in the radix prefix trie, keyed (in its
+    parent's children dict) by the page's token tuple."""
+    __slots__ = ("children", "phys", "parent", "key", "stamp")
+
+    def __init__(self, phys: int, parent: "Optional[_TrieNode]",
+                 key: Optional[Tuple[int, ...]]):
+        self.children: Dict[Tuple[int, ...], _TrieNode] = {}
+        self.phys = phys
+        self.parent = parent
+        self.key = key
+        self.stamp = 0
+
+
+class PagedCacheBackend(CacheBackend):
+    """Block-table KV cache with radix prefix sharing (see module
+    docstring). Host state: an int32 page table per slot (unallocated
+    entries point at a scratch page that absorbs masked garbage writes),
+    a free list, per-page refcounts, and the prefix trie. Device state:
+    one pooled buffer per cache leaf, shaped ``(L, P, page, KV, hd)``."""
+
+    name = "paged"
+
+    def __init__(self, engine):
+        self.engine = engine
+        cfg = engine.cfg.cache
+        self.page = cfg.page_size
+        self.pps = cfg.pages_per_slot
+        self.num_pages = cfg.total_pages
+        self.max_slots = engine.cfg.max_slots
+        self.max_seq = engine.cfg.max_seq
+        self.prefix_cache = cfg.prefix_cache
+        self._scratch = self.num_pages          # physical index P-1
+        self._pools = None
+        self._built = False
+        # host-side tables (rebuilt by start())
+        self._table = np.full((self.max_slots, self.pps), self._scratch,
+                              np.int32)
+        self._alloc_pages = np.zeros(self.max_slots, np.int64)
+        self._free: List[int] = []
+        self._ref = np.zeros(self.num_pages + 1, np.int64)
+        self._trie_root = _TrieNode(-1, None, None)
+        self._trie_pages: set = set()
+        self._node_of: Dict[int, _TrieNode] = {}
+        self._tick = 0
+        self._lengths = np.zeros(self.max_slots, np.int64)
+        # stats
+        self.n_prefill_launches = 0
+        self.n_prefill_tokens = 0
+        self.hit_tokens = 0
+        self.prompt_tokens = 0
+        self.cow_copies = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        """(Re)build the pool, tables, free list and trie. A supervisor
+        restart lands here: page tables and the prefix trie are rebuilt
+        from scratch and shared prefixes re-pin as the salvaged requests
+        re-prefill (resume prompts re-register and re-share naturally)."""
+        self._pools = self._init_pools()
+        self._table[:] = self._scratch
+        self._alloc_pages[:] = 0
+        self._free = list(range(self.num_pages))
+        self._ref[:] = 0
+        self._trie_root = _TrieNode(-1, None, None)
+        self._trie_pages = set()
+        self._node_of = {}
+        self._tick = 0
+        self._lengths[:] = 0
+        self.n_prefill_launches = 0
+        self.n_prefill_tokens = 0
+        self.hit_tokens = 0
+        self.prompt_tokens = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        if not self._built:
+            self._build_helpers()
+            self._built = True
+
+    def _init_pools(self):
+        """Pool pytree mirroring the dense cache's leaves: dense
+        (L, B, S, ...) becomes (L, P+1, page, ...) (the +1 is the scratch
+        page garbage sink)."""
+        dense = jax.eval_shape(
+            lambda: self.engine.model.init_cache(1, self.page))
+        p = self.num_pages + 1
+        return {
+            k: jnp.zeros((leaf.shape[0], p) + leaf.shape[2:], leaf.dtype)
+            for k, leaf in dense.items()
+        }
+
+    @property
+    def s_padded(self) -> int:
+        return self.pps * self.page
+
+    def _build_helpers(self):
+        """Jitted gather/scatter between pool and dense views. Views are
+        cropped to EXACTLY max_seq so the compute executables see the
+        same (L, B, S, ...) shapes (and therefore the same flash-block
+        decomposition → bitwise-identical math) as the dense backend."""
+        page, pps, s, sp = self.page, self.pps, self.max_seq, self.s_padded
+
+        def gather(pools, flat):           # flat: (N*pps,) physical pages
+            n = flat.shape[0] // pps
+
+            def one(pool):
+                v = pool[:, flat]          # (L, N*pps, page, ...)
+                v = v.reshape((pool.shape[0], n, sp) + pool.shape[3:])
+                return v[:, :, :s]
+            return {k: one(v) for k, v in pools.items()}
+
+        def pad_pages(view, pool):
+            l, n = view.shape[0], view.shape[1]
+            pad = [(0, 0), (0, 0), (0, sp - s)] + [(0, 0)] * (view.ndim - 3)
+            v = jnp.pad(view, pad)
+            return v.reshape((l, n * pps, page) + pool.shape[3:])
+
+        def scatter(pools, view, flat):    # inverse of gather (donates pool)
+            return {k: pools[k].at[:, flat].set(pad_pages(view[k], pools[k]))
+                    for k in pools}
+
+        def scatter_token_pages(pools, view, phys, pidx):
+            """Persist, per slot, the single page containing its written
+            decode position: phys (B,) physical targets, pidx (B,)
+            logical page indices within each slot's row."""
+            def one(pool, v):
+                vp = pad_pages(v, pool).reshape(
+                    (pool.shape[0], v.shape[1], pps, page) + pool.shape[3:])
+                pick = jax.vmap(  # (L, B, pps, page, ...) -> (L, B, page, ..)
+                    lambda vb, i: jax.lax.dynamic_index_in_dim(
+                        vb, i, axis=1, keepdims=False),
+                    in_axes=(1, 0), out_axes=1)(vp, pidx)
+                return pool.at[:, phys].set(pick)
+            return {k: one(pools[k], view[k]) for k in pools}
+
+        donate = self.engine.cfg.resolve_donate()
+        dn = dict(donate_argnums=(0,)) if donate else {}
+        self._gather = jax.jit(gather)
+        self._scatter = jax.jit(scatter, **dn)
+        self._scatter_token = jax.jit(scatter_token_pages, **dn)
+        self._copy_page = jax.jit(
+            (lambda pools, src, dst:
+             {k: v.at[:, dst].set(v[:, src]) for k, v in pools.items()}),
+            **dn)
+
+    # ------------------------------------------------------ page accounting
+    def _evict(self, need: int) -> None:
+        """LRU-evict trie-held pages with no live readers until ``need``
+        pages are free (or nothing evictable remains). Leaf-first so a
+        surviving chain never dangles."""
+        while len(self._free) < need:
+            victims = [n for n in self._node_of.values()
+                       if not n.children and self._ref[n.phys] == 0]
+            if not victims:
+                return
+            v = min(victims, key=lambda n: n.stamp)
+            v.parent.children.pop(v.key, None)
+            self._trie_pages.discard(v.phys)
+            del self._node_of[v.phys]
+            self._free.append(v.phys)
+            self.evictions += 1
+
+    def _take_page(self) -> int:
+        return self._free.pop()
+
+    # -------------------------------------------------------- prefix match
+    def _match(self, prompt: np.ndarray):
+        """Walk the trie with full prompt pages. Returns (shared physical
+        pages, CoW source page or None, in-page common-prefix length)."""
+        plen = len(prompt)
+        f_max = (plen - 1) // self.page     # full pages strictly before
+        node = self._trie_root              # the last live prompt position
+        shared: List[int] = []
+        self._tick += 1
+        for j in range(f_max):
+            key = tuple(int(t) for t in
+                        prompt[j * self.page:(j + 1) * self.page])
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.stamp = self._tick
+            shared.append(child.phys)
+            node = child
+        # first divergent page: copy-on-write if it shares an in-page
+        # prefix with some sibling (the copied entries are valid because
+        # K/V are position-local; everything past cp is re-prefilled)
+        m = len(shared)
+        lo, hi = m * self.page, min((m + 1) * self.page, plen - 1)
+        want = [int(t) for t in prompt[lo:min(lo + self.page, plen)]]
+        best_src, best_cp = None, 0
+        for key, child in node.children.items():
+            cp = 0
+            for a, b in zip(key, want):
+                if a != b or lo + cp >= hi:
+                    break
+                cp += 1
+            if cp > best_cp:
+                best_src, best_cp = child.phys, cp
+        return shared, best_src, best_cp
+
+    # ------------------------------------------------------------ protocol
+    def alloc(self, slot: int, prompt: np.ndarray, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        plen = len(prompt)
+        need_pages = -(-(plen + max_new) // self.page)
+        if need_pages > self.num_pages:
+            raise PageExhaustionError(
+                f"request needs {need_pages} pages "
+                f"({plen}+{max_new} tokens @ page={self.page}) but the "
+                f"pool holds {self.num_pages} — can never fit",
+                permanent=True)
+        shared, cow_src, cow_cp = ([], None, 0) if not self.prefix_cache \
+            else self._match(prompt)
+        m = len(shared)
+        fresh_needed = need_pages - m
+        if fresh_needed > len(self._free):
+            self._evict(fresh_needed)
+        if fresh_needed > len(self._free):
+            raise PageExhaustionError(
+                f"pool exhausted: need {fresh_needed} fresh pages, "
+                f"{len(self._free)} free (of {self.num_pages})",
+                permanent=False)
+        self._table[slot, :] = self._scratch
+        for j, phys in enumerate(shared):
+            self._table[slot, j] = phys
+            self._ref[phys] += 1
+        for j in range(m, need_pages):
+            phys = self._take_page()
+            self._table[slot, j] = phys
+            self._ref[phys] += 1
+        self._alloc_pages[slot] = need_pages
+        matched = m * self.page
+        if cow_src is not None and cow_cp > 0:
+            self._pools = self._copy_page(
+                self._pools, cow_src, int(self._table[slot, m]))
+            self.cow_copies += 1
+            matched += cow_cp
+        matched = min(matched, plen - 1)
+        self._lengths[slot] = matched
+        self.hit_tokens += matched
+        self.prompt_tokens += plen
+        return matched
+
+    def free(self, slot: int) -> None:
+        for j in range(int(self._alloc_pages[slot])):
+            phys = int(self._table[slot, j])
+            if phys == self._scratch:
+                continue
+            self._ref[phys] -= 1
+            if self._ref[phys] == 0 and phys not in self._trie_pages:
+                self._free.append(phys)
+        self._table[slot, :] = self._scratch
+        self._alloc_pages[slot] = 0
+        self._lengths[slot] = 0
+
+    def register_prompt(self, slot: int, prompt: np.ndarray) -> None:
+        """Register the slot's completed full prompt pages in the trie so
+        later same-prefix requests share them."""
+        if not self.prefix_cache:
+            return
+        prompt = np.asarray(prompt, np.int32)
+        node = self._trie_root
+        self._tick += 1
+        for j in range(len(prompt) // self.page):
+            key = tuple(int(t) for t in
+                        prompt[j * self.page:(j + 1) * self.page])
+            child = node.children.get(key)
+            if child is None:
+                phys = int(self._table[slot, j])
+                if phys == self._scratch or phys in self._trie_pages:
+                    break  # overlap chunks may leave stale rows; bail
+                child = _TrieNode(phys, node, key)
+                node.children[key] = child
+                self._trie_pages.add(phys)
+                self._node_of[phys] = child
+            child.stamp = self._tick
+            node = child
+
+    # --------------------------------------------------------- device views
+    def _flat_table(self, rows) -> jnp.ndarray:
+        return jnp.asarray(self._table[rows].reshape(-1), jnp.int32)
+
+    def prefill_chunk(self, slot: int, tokens, start: int, last: int):
+        row = self._gather(self._pools, self._flat_table([slot]))
+        logits, row = self.engine._prefill_slot_impl(
+            row, 0, tokens, start, last)
+        self._pools = self._scatter(self._pools, row,
+                                    self._flat_table([slot]))
+        self.n_prefill_launches += 1
+        self.n_prefill_tokens += len(tokens)
+        self._lengths[slot] = start + len(tokens)
+        return logits
+
+    def prefill_chunks(self, tokens, starts, lasts, active):
+        flat = self._flat_table(list(range(self.max_slots)))
+        view = self._gather(self._pools, flat)
+        logits, view = self.engine._prefill_slots_impl(
+            view, tokens, starts, lasts, active)
+        self._pools = self._scatter(self._pools, view, flat)
+        self.n_prefill_launches += 1
+        self.n_prefill_tokens += int(np.sum(active)) * tokens.shape[1]
+        for i, on in enumerate(active):
+            if on:
+                self._lengths[i] = int(starts[i]) + tokens.shape[1]
+        return logits
+
+    def decode(self, tokens, lengths):
+        lens = np.asarray(lengths, np.int64)
+        flat = self._flat_table(list(range(self.max_slots)))
+        view = self._gather(self._pools, flat)
+        logits, view = self.engine._decode_slots_impl(view, tokens, lens)
+        # persist exactly the page each slot wrote its token into (its
+        # own exclusive page — or scratch for slots with nothing live)
+        page_idx = np.minimum(lens // self.page, self.pps - 1)
+        phys = self._table[np.arange(self.max_slots), page_idx]
+        self._pools = self._scatter_token(
+            self._pools, view, jnp.asarray(phys, jnp.int32),
+            jnp.asarray(page_idx, jnp.int32))
+        self._lengths[:] = lens
+        return logits
+
+    @property
+    def device_state(self):
+        return self._pools
+
+    @device_state.setter
+    def device_state(self, value):
+        self._pools = value
+
+    def stats(self) -> dict:
+        live = int(np.sum(self._ref[:self.num_pages] > 0))
+        resident = len(self._trie_pages)
+        used = self.num_pages - len(self._free)
+        return dict(
+            backend=self.name,
+            page_size=self.page,
+            num_pages=self.num_pages,
+            pages_live=live,
+            pages_resident=resident,
+            page_utilization=used / max(self.num_pages, 1),
+            prefix_hit_rate=self.hit_tokens / max(self.prompt_tokens, 1),
+            hit_tokens=self.hit_tokens,
+            prompt_tokens=self.prompt_tokens,
+            cow_copies=self.cow_copies,
+            evictions=self.evictions,
+            prefill_launches=self.n_prefill_launches,
+            prefill_tokens=self.n_prefill_tokens,
+        )

@@ -79,6 +79,7 @@ import numpy as np
 
 from .engine import Engine, Request
 from .faults import CacheCorruptionError, Clock, FaultInjector
+from .kv_cache import PageExhaustionError
 
 # slot states
 _FREE, _PREFILL, _DECODE = 0, 1, 2
@@ -210,7 +211,7 @@ class ContinuousScheduler:
         self.results: List[SchedResult] = []
         self._queue: Deque[Tuple[float, Request]] = deque()
         self._slots: List[_Slot] = []
-        self._cache = None
+        self._backend = None
         self._t0 = 0.0
         self._was_busy = False
         self._stop_admissions = False
@@ -238,9 +239,12 @@ class ContinuousScheduler:
     # ------------------------------------------------------------ lifecycle
     def start(self, requests: Sequence[Request] = (),
               arrivals: Optional[Sequence[float]] = None) -> None:
-        """Initialize a serve: fresh cache (``Engine.new_cache``), empty
-        slots, the given workload queued. Validation happens before ANY
-        state is touched, so a rejected workload leaves no partial serve."""
+        """Initialize a serve: fresh cache state (``CacheBackend.start``
+        — the paged backend rebuilds its page pool, tables and prefix trie
+        here, which is also how a supervisor restart re-pins shared
+        prefixes), empty slots, the given workload queued. Validation
+        happens before ANY state is touched, so a rejected workload leaves
+        no partial serve."""
         requests = list(requests)
         if arrivals is None:
             arrivals = [0.0] * len(requests)
@@ -252,8 +256,9 @@ class ContinuousScheduler:
         self._queue = deque((arrivals[i], requests[i]) for i in order)
         self.trace, self.admission_order, self.results = [], [], []
         self._slots = [_Slot() for _ in range(self.engine.cfg.max_slots)]
-        # donated through every step: always rebind to the returned cache
-        self._cache = self.engine.new_cache()
+        # the backend owns the (donated) cache state end to end
+        self._backend = self.engine.cache_backend
+        self._backend.start()
         self._t0 = self.clock.now()
         self._was_busy = False
         self._stop_admissions = False
@@ -373,8 +378,13 @@ class ContinuousScheduler:
             - slot.arrival,
             token_times=slot.token_times, status=status))
         # free immediately — the next admission pass hands this slot to
-        # the next queued request. Cache needs no reset: the newcomer
-        # overwrites from position 0 and never reads past its length.
+        # the next queued request. The dense cache needs no reset (the
+        # newcomer overwrites from position 0 and never reads past its
+        # length); the paged backend recycles the slot's pages into the
+        # free list right here.
+        if self._backend is not None:
+            idx = next(i for i, s in enumerate(self._slots) if s is slot)
+            self._backend.free(idx)
         slot.state, slot.req = _FREE, None
         slot.pos = slot.length = slot.cur_tok = 0
         slot.tokens, slot.token_times = [], []
@@ -417,7 +427,8 @@ class ContinuousScheduler:
         t_step = self._now()
         if self.faults is not None:
             self.faults.begin_step()
-            self._cache = self.faults.check("step", self._cache)
+            self._backend.device_state = self.faults.check(
+                "step", self._backend.device_state)
         # -- stop(drain=False): abandon in-flight work, visibly
         if self._kill_inflight:
             self._kill_inflight = False
@@ -441,16 +452,32 @@ class ContinuousScheduler:
                 else:
                     kept.append((arr, req))
             self._queue = kept
-        # -- admission: free slots take arrived requests, FIFO
-        for slot in slots:
+        # -- admission: free slots take arrived requests, FIFO. The
+        #    backend reserves capacity per request (paged: pages + prefix
+        #    match): a request that can NEVER fit the pool retires
+        #    ``rejected`` (typed, never a crash); one that merely can't
+        #    fit RIGHT NOW stays queued for a later step's freed pages.
+        for i, slot in enumerate(slots):
             if slot.state != _FREE or not queue_head_arrived(
                     self._queue, t_step):
                 continue
-            arr, req = self._queue.popleft()
+            arr, req = self._queue[0]
+            try:
+                matched = self._backend.alloc(
+                    i, np.asarray(req.prompt, np.int32), req.max_new_tokens)
+            except PageExhaustionError as e:
+                if e.permanent:
+                    self._queue.popleft()
+                    self.results.append(
+                        self._terminal(req, arr, "rejected", t_step))
+                    continue
+                break  # transient: pages busy — retry next step
+            self._queue.popleft()
             slot.state = _PREFILL
             slot.req = req
             slot.arrival, slot.admit_t = arr, t_step
-            slot.pos = slot.length = 0
+            # a prefix-cache hit resumes prefill past the shared tokens
+            slot.pos = slot.length = matched
             self.admission_order.append(req.id)
 
         active = [s for s in slots if s.state != _FREE]
@@ -464,56 +491,128 @@ class ContinuousScheduler:
             decoding=sum(s.state == _DECODE for s in slots),
             free=sum(s.state == _FREE for s in slots)))
 
-        # -- chunked prefill: every prefilling slot advances one chunk
+        # -- chunked prefill: every prefilling slot advances one chunk.
+        #    Plan each slot's chunk first (chunk length, covering bucket,
+        #    start offset — including the near-max_seq overlap rewind),
+        #    then launch: ONE batched (B, C) call covering every
+        #    prefilling lane at its own start (PR 5 follow-up (b)), or
+        #    the per-slot loop when batching is off, a test has wrapped
+        #    the legacy per-slot primitive, or any lane needs the
+        #    exact-size escape below.
+        plan = {}
+        fallback = not eng.cfg.batched_prefill or \
+            "prefill_slot_chunk" in eng.__dict__
+        common = 0  # the batched launch pads every lane to one bucket
         for idx, slot in enumerate(slots):
             if slot.state != _PREFILL:
                 continue
-            prompt = np.asarray(slot.req.prompt, np.int32)
-            c = min(self.prefill_chunk, len(prompt) - slot.pos)
-            cb = _bucket(c, self.buckets)
+            c = min(self.prefill_chunk, len(slot.req.prompt) - slot.pos)
+            common = max(common, _bucket(c, self.buckets))
+            plan[idx] = c
+
+        def chunk_start(slot, c, cb):
+            """Where a ``cb``-padded chunk advancing ``c`` tokens must
+            start. Normally slot.pos; near max_seq a padded tail would
+            write past the cache (and dynamic_update_slice would clamp
+            the start, corrupting earlier entries) — K/V are
+            position-local, so the chunk instead covers the LAST cb
+            prompt tokens, re-prefilling the overlap with
+            bitwise-identical values. When even that is impossible (the
+            prompt so far is shorter than the covering bucket), returns
+            None: the caller advances by the largest bucket that divides
+            off unpadded — the tail continues next step, and after one
+            such chunk the overlap path is always reachable. Both keep
+            the executable count bounded by the bucket set; the
+            exact-size escape is only reachable when max_seq is smaller
+            than the smallest bucket."""
             start = slot.pos
             if start + cb > eng.cfg.max_seq:
-                # a padded tail would write past the cache (and
-                # dynamic_update_slice would clamp the start, corrupting
-                # earlier entries). K/V are position-local, so the final
-                # chunk can instead cover the LAST cb prompt tokens —
-                # re-prefilling the overlap with bitwise-identical
-                # values. When even that is impossible (the prompt so
-                # far is shorter than the covering bucket), advance by
-                # the largest bucket that divides off unpadded — the
-                # tail continues next step, and after one such chunk
-                # the overlap path is always reachable. Both keep the
-                # executable count bounded by the bucket set; the
-                # exact-size escape below is only reachable when
-                # max_seq is smaller than the smallest bucket.
                 if start + c >= cb:
-                    start = slot.pos + c - cb
-                else:
-                    fit = [b for b in self.buckets if b <= c]
+                    return slot.pos + c - cb
+                return None
+            return start
+
+        starts = {}
+        for idx, c in plan.items():
+            st = chunk_start(slots[idx], c, common)
+            if st is None:
+                fallback = True
+                break
+            starts[idx] = st
+
+        if plan and not fallback:
+            b = eng.cfg.max_slots
+            toks = np.zeros((b, common), np.int32)
+            st_v = np.zeros((b,), np.int32)
+            last_v = np.zeros((b,), np.int32)
+            act_v = np.zeros((b,), bool)
+            for idx, c in plan.items():
+                slot = slots[idx]
+                prompt = np.asarray(slot.req.prompt, np.int32)
+                start = starts[idx]
+                n_real = slot.pos + c - start
+                toks[idx, :n_real] = prompt[start:start + n_real]
+                st_v[idx], last_v[idx], act_v[idx] = start, n_real - 1, True
+            for idx, slot in enumerate(slots):
+                if idx not in plan:  # idle lanes ride along, writes masked
+                    st_v[idx] = max(0, min(slot.length,
+                                           eng.cfg.max_seq - common))
+            logits = self._backend.prefill_chunks(toks, st_v, last_v, act_v)
+            sampled = None
+            for idx, c in plan.items():
+                slot = slots[idx]
+                slot.pos += c
+                slot.length = slot.pos
+                if slot.pos == len(slot.req.prompt):
+                    # final chunk: its last REAL position seeds the
+                    # first token (per-lane logits row — argmax per row
+                    # is bitwise the single-slot sample)
+                    self._guard(logits, [i == idx for i in range(b)])
+                    if sampled is None:
+                        sampled = np.asarray(eng._sample(logits))
+                    tok = int(sampled[idx])
+                    self._backend.register_prompt(
+                        idx, np.asarray(slot.req.prompt, np.int32))
+                    slot.state = _DECODE
+                    slot.cur_tok = tok
+                    slot.ttft_t = self._now()
+                    if self._emit(slot, tok, slot.ttft_t):
+                        self._retire(slot)
+        elif plan:
+            for idx in sorted(plan):
+                slot = slots[idx]
+                prompt = np.asarray(slot.req.prompt, np.int32)
+                c = min(self.prefill_chunk, len(prompt) - slot.pos)
+                cb = _bucket(c, self.buckets)
+                start = chunk_start(slot, c, cb)
+                if start is None:
+                    fit = [bk for bk in self.buckets if bk <= c]
                     c = cb = fit[-1] if fit else c
-            chunk = np.zeros((cb,), np.int32)
-            n_real = slot.pos + c - start
-            chunk[:n_real] = prompt[start:start + n_real]
-            logits, self._cache = eng.prefill_slot_chunk(
-                self._cache, idx, chunk, start, n_real - 1)
-            slot.pos += c
-            slot.length = slot.pos
-            if slot.pos == len(prompt):
-                # final chunk: its last REAL position seeds the first
-                # token (the padded tail carries no information)
-                self._guard(logits)
-                tok = int(eng._sample(logits)[0])
-                slot.state = _DECODE
-                slot.cur_tok = tok
-                slot.ttft_t = self._now()
-                if self._emit(slot, tok, slot.ttft_t):
-                    self._retire(slot)
+                    start = slot.pos
+                chunk = np.zeros((cb,), np.int32)
+                n_real = slot.pos + c - start
+                chunk[:n_real] = prompt[start:start + n_real]
+                logits = self._backend.prefill_chunk(
+                    idx, chunk, start, n_real - 1)
+                slot.pos += c
+                slot.length = slot.pos
+                if slot.pos == len(prompt):
+                    # final chunk: its last REAL position seeds the first
+                    # token (the padded tail carries no information)
+                    self._guard(logits)
+                    tok = int(eng._sample(logits)[0])
+                    self._backend.register_prompt(idx, prompt)
+                    slot.state = _DECODE
+                    slot.cur_tok = tok
+                    slot.ttft_t = self._now()
+                    if self._emit(slot, tok, slot.ttft_t):
+                        self._retire(slot)
 
         # -- global decode step over every decoding slot
         if any(s.state == _DECODE for s in slots):
             toks = np.array([s.cur_tok for s in slots], np.int32)
             lens = np.array([s.length for s in slots], np.int32)
-            logits, self._cache = eng.decode_slots(self._cache, toks, lens)
+            logits = self._backend.decode(toks, lens)
             self._guard(logits, [s.state == _DECODE for s in slots])
             sampled = np.asarray(eng._sample(logits))
             t_tok = self._now()

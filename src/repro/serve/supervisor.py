@@ -19,8 +19,11 @@ Failure model and recovery:
     never re-stream them (exactly-once streaming by construction).
   * The replica is **rebuilt** after a seeded exponential backoff
     (``distributed.fault.backoff_delay``): a fresh cache via
-    ``Engine.new_cache`` (inside ``scheduler.start``), optionally
-    reloading params from the checksum-verified latest checkpoint.
+    ``CacheBackend.start`` (inside ``scheduler.start`` — the paged
+    backend rebuilds its page pool, page tables and prefix trie from
+    scratch, and shared prefixes re-pin as the salvaged requests
+    re-prefill), optionally reloading params from the checksum-verified
+    latest checkpoint.
   * **Caps are terminal, never silent**: a replica exceeding
     ``max_restarts`` is retired from the fleet; a request re-admitted
     more than ``max_request_replays`` times (a poison pill that keeps

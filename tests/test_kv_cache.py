@@ -1,0 +1,393 @@
+"""Paged KV cache + radix prefix reuse behind the CacheBackend API.
+
+The paged backend's contract is *bitwise* parity with the dense oracle
+under greedy sampling — same tokens across fp/quantized models, kv8/fp16
+caches, GQA/MHA attention and scan/unrolled stacks — plus the paging
+semantics on top: prefix sharing actually skips prefill work,
+copy-on-write isolates divergent continuations, page exhaustion is a
+typed admission outcome (never a crash), and a supervisor restart
+rebuilds page tables and re-pins shared prefixes.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_PROXIES
+from repro.core.flrq import FLRQConfig
+from repro.kernels.decode_attention import (flash_decode_gqa,
+                                            flash_decode_gqa_paged)
+from repro.models import LM
+from repro.models.layers import flash_attention
+from repro.quant.stacked import quantize_model_stacked
+from repro.serve import (CacheConfig, DenseCacheBackend, PagedCacheBackend,
+                         PageExhaustionError, Supervisor, SupervisorConfig,
+                         VirtualClock)
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.faults import FaultPlan
+from repro.serve.scheduler import ContinuousScheduler
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    base = dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                head_dim=32, d_ff=128, vocab=128, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+@pytest.fixture(scope="module")
+def tiny_fp(key):
+    model = LM(_tiny_cfg())
+    return model, model.init(key)
+
+
+@pytest.fixture(scope="module")
+def tiny_quant(tiny_fp):
+    model, params = tiny_fp
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=4, blc_epochs=1, max_rank=4))
+    return model, qparams
+
+
+@pytest.fixture(scope="module")
+def tiny_gqa(key):
+    model = LM(_tiny_cfg(n_heads=4, n_kv_heads=2, head_dim=16,
+                         grouped_decode_attn=True))
+    return model, model.init(key)
+
+
+def _mixed_requests(lens=(3, 9, 5, 14, 7), vocab=128, new=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(2, vocab, l).astype(np.int32),
+                    max_new_tokens=(new or 4 + i), id=i)
+            for i, l in enumerate(lens)]
+
+
+def _prefix_requests(n=5, prefix_len=16, tail_lens=(3, 5, 2, 7, 4),
+                     new=4, seed=3):
+    """Same-system-prompt workload: every request shares the first
+    ``prefix_len`` tokens (>= 2 full pages at page_size=8)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(2, 128, prefix_len).astype(np.int32)
+    return [Request(np.concatenate(
+        [prefix, rng.integers(2, 128, tail_lens[i % len(tail_lens)])
+         .astype(np.int32)]), max_new_tokens=new, id=i)
+        for i in range(n)]
+
+
+def _serve(model, params, reqs, cache=None, slots=3, chunk=4, max_seq=32,
+           arrivals=None, **scfg):
+    if cache is None:
+        cfg = ServeConfig(max_slots=slots, max_seq=max_seq, **scfg)
+    else:
+        cfg = ServeConfig(cache=cache, **scfg)
+    eng = Engine(model, params, cfg)
+    sched = ContinuousScheduler(eng, prefill_chunk=chunk)
+    res = sched.run(reqs, arrivals)
+    return {r.id: (r.tokens, r.status) for r in res}, eng
+
+
+def _paged(slots=3, max_seq=32, page=8, **kw):
+    return CacheConfig(backend="paged", max_slots=slots, max_seq=max_seq,
+                       page_size=page, **kw)
+
+
+# --------------------------------------------- paged vs dense bitwise parity
+@pytest.mark.parametrize("scan", [True, False], ids=["scan", "unroll"])
+def test_paged_matches_dense_fp(tiny_fp, scan):
+    model, params = tiny_fp
+    model = model.with_scan(scan)
+    reqs = _mixed_requests()
+    dense, _ = _serve(model, params, reqs)
+    paged, eng = _serve(model, params, reqs, cache=_paged())
+    assert paged == dense
+    assert isinstance(eng.cache_backend, PagedCacheBackend)
+
+
+def test_paged_matches_dense_gqa(tiny_gqa):
+    model, params = tiny_gqa
+    reqs = _mixed_requests()
+    dense, _ = _serve(model, params, reqs)
+    paged, _ = _serve(model, params, reqs, cache=_paged())
+    assert paged == dense
+
+
+def test_paged_matches_dense_quant(tiny_quant):
+    model, params = tiny_quant
+    reqs = _mixed_requests()
+    dense, _ = _serve(model, params, reqs)
+    paged, _ = _serve(model, params, reqs, cache=_paged())
+    assert paged == dense
+
+
+def test_paged_matches_dense_kv8(tiny_fp):
+    """int8 KV cache forced through CacheConfig on BOTH backends: the
+    paged pool carries codes + scales leaves and stays bitwise-equal."""
+    model, params = tiny_fp
+    reqs = _mixed_requests()
+    dense, deng = _serve(model, params, reqs,
+                         cache=CacheConfig(max_slots=3, max_seq=32,
+                                           kv_cache_bits=8))
+    paged, peng = _serve(model, params, reqs,
+                         cache=_paged(kv_cache_bits=8))
+    assert paged == dense
+    assert deng.model.cfg.kv_cache_bits == 8
+    pools = peng.cache_backend.device_state
+    code_dtypes = {v.dtype for k, v in pools.items() if "scale" not in k}
+    assert code_dtypes == {np.dtype(np.int8)}, pools.keys()
+
+
+def test_paged_matches_dense_per_slot_fallback(tiny_fp):
+    """batched_prefill=False routes through prefill_chunk (the per-slot
+    gather/scatter path) and must stay on the same tokens."""
+    model, params = tiny_fp
+    reqs = _mixed_requests()
+    dense, _ = _serve(model, params, reqs)
+    paged, eng = _serve(model, params, reqs, cache=_paged(),
+                        batched_prefill=False)
+    assert paged == dense
+    assert eng.cache_backend.stats()["prefill_launches"] > 0
+
+
+# ----------------------------------------------------------- prefix sharing
+def test_prefix_sharing_skips_prefill_work(tiny_fp):
+    model, params = tiny_fp
+    reqs = _prefix_requests()
+    dense, deng = _serve(model, params, reqs, slots=2)
+    paged, peng = _serve(model, params, reqs, cache=_paged(slots=2))
+    assert paged == dense
+    dstats = deng.cache_backend.stats()
+    pstats = peng.cache_backend.stats()
+    assert pstats["prefix_hit_rate"] > 0.0
+    assert pstats["hit_tokens"] > 0
+    # shared-prefix pages prefill once, not once per request
+    assert pstats["prefill_tokens"] < dstats["prefill_tokens"]
+    assert pstats["pages_resident"] > 0
+
+
+def test_prefix_cache_off_still_matches(tiny_fp):
+    model, params = tiny_fp
+    reqs = _prefix_requests()
+    dense, _ = _serve(model, params, reqs, slots=2)
+    paged, eng = _serve(model, params, reqs,
+                        cache=_paged(slots=2, prefix_cache=False))
+    assert paged == dense
+    assert eng.cache_backend.stats()["prefix_hit_rate"] == 0.0
+
+
+def test_cow_divergent_page_isolation(tiny_fp):
+    """A then B (diverging mid-page) then A again, one slot at a time:
+    B's copy-on-write page must not leak into either A's tokens, and the
+    divergence must actually take the CoW path."""
+    model, params = tiny_fp
+    rng = np.random.default_rng(11)
+    base = rng.integers(2, 128, 20).astype(np.int32)   # 2 FULL pages @ 8
+    divergent = base.copy()
+    divergent[10] = (divergent[10] + 1) % 126 + 2   # mid page 1 (page=8)
+    reqs = [Request(base, max_new_tokens=5, id=0),
+            Request(divergent, max_new_tokens=5, id=1),
+            Request(base.copy(), max_new_tokens=5, id=2)]
+    dense, _ = _serve(model, params, reqs, slots=1)
+    paged, eng = _serve(model, params, reqs, cache=_paged(slots=1))
+    assert paged == dense
+    stats = eng.cache_backend.stats()
+    assert stats["cow_copies"] >= 1
+    assert paged[0][0] == paged[2][0]    # same prompt, same greedy tokens
+
+
+# -------------------------------------------------------- admission control
+def test_page_exhaustion_permanent_rejects_cleanly(tiny_fp):
+    """A request that can NEVER fit the pool retires ``rejected`` (typed
+    admission outcome, not a crash); everything else still serves."""
+    model, params = tiny_fp
+    reqs = _mixed_requests(lens=(3, 20, 5), new=4)
+    cache = _paged(slots=2, page=4, num_pages=4)   # 16-token pool
+    res, _ = _serve(model, params, reqs, cache=cache)
+    assert res[1][1] == "rejected" and res[1][0] == []
+    dense, _ = _serve(model, params,
+                      [r for r in reqs if r.id != 1], slots=2)
+    assert {i: res[i] for i in (0, 2)} == dense
+
+
+def test_page_exhaustion_transient_waits_for_free_pages(tiny_fp):
+    """Two requests that fit the pool one-at-a-time but not together:
+    the second stays QUEUED through the transient exhaustion and
+    completes bitwise-correct once the first retires its pages."""
+    model, params = tiny_fp
+    reqs = _mixed_requests(lens=(9, 10), new=4, seed=5)
+    cache = _paged(slots=2, page=4, num_pages=4,   # 16 tokens: one req max
+                   prefix_cache=False)
+    res, eng = _serve(model, params, reqs, cache=cache)
+    dense, _ = _serve(model, params, reqs, slots=2)
+    assert res == dense
+    assert all(s == "ok" for _, s in res.values())
+    # the pool really was the constraint: all pages recycled at drain
+    assert eng.cache_backend.stats()["page_utilization"] == 0.0
+
+
+def test_alloc_free_recycles_pages(tiny_fp):
+    """Direct backend-level accounting: alloc takes pages from the free
+    list, free returns every non-trie page."""
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(cache=_paged(slots=2)))
+    be = eng.cache_backend
+    be.start()
+    free0 = len(be._free)
+    prompt = np.arange(2, 13, dtype=np.int32)
+    matched = be.alloc(0, prompt, 4)
+    assert matched == 0                     # cold trie: full miss
+    assert len(be._free) == free0 - 2       # ceil((11+4)/8) pages taken
+    with pytest.raises(PageExhaustionError) as ei:
+        be.alloc(1, prompt, 10 ** 6)
+    assert ei.value.permanent
+    be.free(0)
+    assert len(be._free) == free0
+    assert (be._table == be._scratch).all()
+
+
+# ------------------------------------------------- supervisor + restarts
+def test_supervisor_restart_rebuilds_paged_state(tiny_fp):
+    """Kill a paged replica mid-decode: the restart rebuilds page tables
+    and the prefix trie from scratch and every salvaged request still
+    finishes bitwise-identical to the fault-free dense oracle — with the
+    shared prefix re-pinned (prefix hits on the re-prefill)."""
+    model, params = tiny_fp
+    reqs = _prefix_requests(n=6, new=5)
+    oracle = {}
+    for r in reqs:
+        eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=32))
+        oracle[r.id] = eng.generate([r])[0].tokens
+    sup = Supervisor(
+        lambda: Engine(model, params,
+                       ServeConfig(cache=_paged(slots=2, max_seq=32))),
+        SupervisorConfig(replicas=2, step_cost_s=0.01, prefill_chunk=4),
+        fault_plan=FaultPlan.parse("exception@4:decode:0"),
+        clock=VirtualClock())
+    report = sup.serve(reqs)
+    assert report.zero_drops
+    assert set(report.status_counts()) == {"ok"}
+    for o in report.outcomes:
+        assert o.tokens == oracle[o.id], \
+            f"request {o.id} diverged after paged restart"
+    assert report.restarts[0] >= 1
+
+
+# ------------------------------------------------------------- CacheConfig
+def test_cache_config_mirrors_serve_config():
+    cfg = ServeConfig(cache=CacheConfig(backend="paged", max_slots=2,
+                                        max_seq=64, page_size=16))
+    assert cfg.max_slots == 2 and cfg.max_seq == 64
+    legacy = ServeConfig(max_slots=5, max_seq=48)
+    assert legacy.cache.backend == "dense"
+    assert legacy.cache.max_slots == 5 and legacy.cache.max_seq == 48
+    assert ServeConfig(donate_cache=True).resolve_donate() is True
+    assert CacheConfig(donate_cache=True).resolve_donate() is True
+
+
+def test_cache_config_page_arithmetic():
+    cfg = CacheConfig(backend="paged", max_slots=3, max_seq=33, page_size=8)
+    assert cfg.pages_per_slot == 5          # ceil(33 / 8)
+    assert cfg.total_pages == 15
+    assert CacheConfig(backend="paged", num_pages=7).total_pages == 7
+    with pytest.raises(ValueError):
+        CacheConfig(backend="flat")
+    with pytest.raises(ValueError):
+        CacheConfig(backend="paged", page_size=0)
+
+
+def test_backend_factory_and_stats_shape(tiny_fp):
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32))
+    be = eng.cache_backend
+    assert isinstance(be, DenseCacheBackend)
+    be.start()
+    stats = be.stats()
+    assert stats["backend"] == "dense"
+    assert stats["prefix_hit_rate"] == 0.0
+    assert 0.0 <= stats["page_utilization"] <= 1.0
+
+
+# ------------------------------------------------------- deprecation shims
+def test_deprecated_engine_cache_methods_warn(tiny_fp):
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32))
+    with pytest.warns(DeprecationWarning, match="new_cache"):
+        cache = eng.new_cache()
+    toks = np.zeros((8,), np.int32)
+    with pytest.warns(DeprecationWarning, match="prefill_slot_chunk"):
+        _, cache = eng.prefill_slot_chunk(cache, 0, toks, 0, 3)
+    with pytest.warns(DeprecationWarning, match="decode_slots"):
+        eng.decode_slots(cache, np.zeros((2,), np.int32),
+                         np.array([4, 1], np.int32))
+    # the internal path never trips its own shim
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        _serve(model, params, _mixed_requests(lens=(3, 5)), slots=2)
+
+
+# ------------------------------------------------- batched prefill kernel
+def test_flash_attention_per_lane_q_offset(key):
+    """(B,) q_offset == the per-lane scalar calls it batches (the (B, C)
+    prefill launch relies on this)."""
+    b, s, kvlen, h, hd = 3, 8, 24, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kvlen, h, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kvlen, h, hd), jnp.float32)
+    offs = jnp.asarray([0, 5, 16], jnp.int32)
+    batched = flash_attention(q, k, v, causal=True, q_offset=offs)
+    for i in range(b):
+        one = flash_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                              causal=True, q_offset=int(offs[i]))
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(one[0]))
+
+
+def _gather_dense(pool, table):
+    b, pps = table.shape
+    _, page = pool.shape[0], pool.shape[1]
+    return pool[table.reshape(-1)].reshape((b, pps * pool.shape[1])
+                                           + pool.shape[2:])
+
+
+def test_paged_decode_kernel_matches_dense(key):
+    """flash_decode_gqa_paged (scalar-prefetched block-table kernel) ==
+    flash_decode_gqa over the gathered dense view, fp and int8."""
+    rng = np.random.default_rng(0)
+    b, h, kv, hd, page, pps, p = 3, 4, 2, 16, 8, 4, 14
+    s = page * pps
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)), jnp.float32)
+    table = jnp.asarray(rng.permutation(p)[:b * pps].reshape(b, pps),
+                        jnp.int32)
+    lengths = jnp.asarray([5, 17, 32], jnp.int32)
+
+    kp = jnp.asarray(rng.standard_normal((p, page, kv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((p, page, kv, hd)), jnp.float32)
+    out = flash_decode_gqa_paged(q, kp, vp, table, lengths, interpret=True)
+    kd, vd = _gather_dense(kp, table), _gather_dense(vp, table)
+    ref = jnp.concatenate([
+        flash_decode_gqa(q[i:i + 1], kd[i:i + 1], vd[i:i + 1], lengths[i],
+                         interpret=True) for i in range(b)], 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+    k8 = jnp.asarray(rng.integers(-127, 127, (p, page, kv, hd)), jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 127, (p, page, kv, hd)), jnp.int8)
+    ks8 = jnp.asarray(rng.uniform(0.01, 0.02, (p, page, kv, 1)),
+                      jnp.bfloat16)
+    vs8 = jnp.asarray(rng.uniform(0.01, 0.02, (p, page, kv, 1)),
+                      jnp.bfloat16)
+    out8 = flash_decode_gqa_paged(q, k8, v8, table, lengths, ks8, vs8,
+                                  interpret=True)
+    kd8, vd8 = _gather_dense(k8, table), _gather_dense(v8, table)
+    ksd, vsd = _gather_dense(ks8, table), _gather_dense(vs8, table)
+    ref8 = jnp.concatenate([
+        flash_decode_gqa(q[i:i + 1], kd8[i:i + 1], vd8[i:i + 1], lengths[i],
+                         ksd[i:i + 1], vsd[i:i + 1], interpret=True)
+        for i in range(b)], 0)
+    np.testing.assert_allclose(np.asarray(out8), np.asarray(ref8),
+                               atol=2e-6, rtol=2e-6)
