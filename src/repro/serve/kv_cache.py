@@ -27,10 +27,13 @@ scatters touched pages back. K/V entries are position-local (same token
 at the same absolute position quantizes/ropes to the same bytes), so
 shared pages, copy-on-write copies and the scheduler's near-``max_seq``
 overlap re-prefills are all bitwise-identical to an unshared run — the
-scheduler's oracle tests hold verbatim with ``backend="paged"``. The
-gather/scatter round-trip is the *correctness* path; the production
-decode path is the gather-by-page-table Pallas kernel
-(``kernels.decode_attention.flash_decode_gqa_paged``).
+scheduler's oracle tests hold verbatim with ``backend="paged"``. Note
+the cost: every paged step materializes that dense-footprint temporary,
+so today the paged backend buys slot density and prefix reuse, not peak
+memory. The gather-by-page-table Pallas kernel
+(``kernels.decode_attention.flash_decode_gqa_paged``) is implemented
+and parity-tested but not yet wired into ``decode()`` — routing serving
+decode through it (and dropping the gather) is a ROADMAP follow-up.
 
 Admission control: ``alloc`` raises ``PageExhaustionError`` when the
 pool cannot hold a request — ``permanent=True`` when the request could
@@ -408,7 +411,9 @@ class PagedCacheBackend(CacheBackend):
     def _evict(self, need: int) -> None:
         """LRU-evict trie-held pages with no live readers until ``need``
         pages are free (or nothing evictable remains). Leaf-first so a
-        surviving chain never dangles."""
+        surviving chain never dangles. Pages an in-flight alloc must
+        keep are pinned through ``_ref`` by the caller, which keeps
+        them out of the victim set here."""
         while len(self._free) < need:
             victims = [n for n in self._node_of.values()
                        if not n.children and self._ref[n.phys] == 0]
@@ -474,17 +479,33 @@ class PagedCacheBackend(CacheBackend):
             else self._match(prompt)
         m = len(shared)
         fresh_needed = need_pages - m
+        # Pin the matched pages *before* any eviction: a matched leaf
+        # with no other live readers is otherwise an eligible victim, and
+        # _take_page pops the free-list tail — the page this request is
+        # about to map read-only would come straight back as its own
+        # fresh writable page and prefill would clobber the shared prefix.
+        # The CoW source is deliberately NOT pinned: it is read exactly
+        # once, inside this alloc (the _copy_page below runs before any
+        # write can touch the pool), so an evicted-and-recycled cow_src
+        # still holds valid bytes at copy time — while pinning it would
+        # livelock a pool-sized request whose only evictable pages are
+        # its own prefix. With only matches pinned, every request that
+        # passes the can-never-fit check above is admissible once live
+        # slots drain: free + evictable = num_pages - held_live - m.
+        for phys in shared:
+            self._ref[phys] += 1
         if fresh_needed > len(self._free):
             self._evict(fresh_needed)
         if fresh_needed > len(self._free):
+            for phys in shared:   # unpin: the request stays queued
+                self._ref[phys] -= 1
             raise PageExhaustionError(
                 f"pool exhausted: need {fresh_needed} fresh pages, "
                 f"{len(self._free)} free (of {self.num_pages})",
                 permanent=False)
         self._table[slot, :] = self._scratch
         for j, phys in enumerate(shared):
-            self._table[slot, j] = phys
-            self._ref[phys] += 1
+            self._table[slot, j] = phys   # ref already pinned above
         for j in range(m, need_pages):
             phys = self._take_page()
             self._table[slot, j] = phys

@@ -249,6 +249,67 @@ def test_alloc_free_recycles_pages(tiny_fp):
     assert (be._table == be._scratch).all()
 
 
+def test_matched_pages_pinned_before_eviction(tiny_fp):
+    """Regression: a matched trie leaf with no live readers must NOT be
+    an eviction victim for the very alloc that matched it — pre-fix it
+    was evicted to the free list and immediately recycled as the same
+    request's fresh writable page, so prefill clobbered the shared
+    prefix. The alloc must instead raise a *transient* exhaustion with
+    the trie (and refcounts) left intact."""
+    model, params = tiny_fp
+    eng = Engine(model, params,
+                 ServeConfig(cache=_paged(slots=3, page=4, num_pages=6)))
+    be = eng.cache_backend
+    be.start()
+    a = np.arange(2, 10, dtype=np.int32)          # 2 full pages @ 4
+    be.alloc(0, a, 4)                             # 3 pages
+    be.register_prompt(0, a)                      # pages 0,1 -> trie
+    p0, p1 = int(be._table[0, 0]), int(be._table[0, 1])
+    be.free(0)                                    # trie pages stay out of
+    assert be._ref[p0] == 0 and be._ref[p1] == 0  # the free list, ref=0
+    c = np.full(5, 100, np.int32)                 # no trie overlap
+    be.alloc(2, c, 3)                             # 2 pages -> 2 free left
+    b = np.concatenate([a, np.arange(50, 54, dtype=np.int32)])
+    with pytest.raises(PageExhaustionError) as ei:
+        be.alloc(1, b, 8)      # needs 5: matches 2, 3 fresh > 2 free
+    assert not ei.value.permanent
+    # the matched leaf p1 was the only ref==0 trie leaf — it must have
+    # been pinned, not evicted and recycled
+    assert p1 in be._trie_pages and p1 not in be._free
+    assert be._ref[p0] == 0 and be._ref[p1] == 0  # unpinned on the raise
+    be.free(2)                                    # pages return; retry fits
+    assert be.alloc(1, b, 8) == 2 * 4             # full 2-page prefix hit
+    live = [int(p) for p in be._table[1] if int(p) != be._scratch]
+    assert len(live) == len(set(live)) == 5       # no page mapped twice
+    assert be._ref[p1] == 1
+
+
+def test_cow_source_stays_evictable_under_pressure(tiny_fp):
+    """Counterpart to the pinning test: the CoW *source* must NOT be
+    pinned. It is read exactly once inside alloc (the copy runs before
+    any pool write), so an evicted-and-recycled source still holds
+    valid bytes — while protecting it would livelock a pool-sized
+    request whose only evictable page is its own divergent sibling
+    (exactly the CoW-isolation serve test's shape: pool == need)."""
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(cache=_paged(slots=1)))
+    be = eng.cache_backend                 # page=8, num_pages=pps=4
+    be.start()
+    a = np.arange(2, 22, dtype=np.int32)   # 20 tokens: 2 full pages
+    be.alloc(0, a, 5)                      # all 4 pages
+    be.register_prompt(0, a)
+    p0, p1 = int(be._table[0, 0]), int(be._table[0, 1])
+    be.free(0)                             # free=2, trie holds p0,p1
+    b = a.copy()
+    b[10] += 1                             # diverge mid page 1: cp=2
+    matched = be.alloc(0, b, 5)            # fresh=3 > free=2: must evict
+    assert matched == 8 + 2                # page 0 shared + 2 CoW tokens
+    assert be.cow_copies == 1
+    assert int(be._table[0, 0]) == p0      # match survived, pinned
+    assert be._ref[p0] == 1
+    assert p1 not in be._trie_pages        # the source was the victim
+
+
 # ------------------------------------------------- supervisor + restarts
 def test_supervisor_restart_rebuilds_paged_state(tiny_fp):
     """Kill a paged replica mid-decode: the restart rebuilds page tables
