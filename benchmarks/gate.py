@@ -11,9 +11,13 @@ quantization wall time, metric ``batched_min_s``) or ``serve`` (serving
 runtime: the scanned-ref decode wall time ``decode_scan_ref_min_s``, the
 continuous scheduler's mixed-length Poisson workload wall time
 ``mixed_sched_wall_min_s``, the supervised chaos workload's
-``chaos_recovery_wall_min_s`` + ``chaos_wasted_token_fraction``, and the
-paged prefix-reuse workload's ``paged_wall_min_s`` — the interpret-mode
-kernel variant is excluded from gating by construction).
+``chaos_recovery_wall_min_s`` + ``chaos_wasted_token_fraction``, the
+paged prefix-reuse workload's ``paged_wall_min_s``, the self-speculative
+workload's ``spec_wall_min_s`` (the spec run also hard-fails inside the
+benchmark if its tokens diverge from the non-spec greedy oracle — token
+parity is a correctness contract, not a gated statistic), and the
+multi-tenant paged trace's ``multitenant_wall_min_s`` — the
+interpret-mode kernel variant is excluded from gating by construction).
 ``--metric`` takes a comma-separated list;
 each metric gates against its own reference from ONE benchmark run.
 
@@ -86,7 +90,7 @@ _BENCH_DEFAULT_METRIC = {
     "quant": "batched_min_s",
     "serve": ("decode_scan_ref_min_s,mixed_sched_wall_min_s,"
               "chaos_recovery_wall_min_s,chaos_wasted_token_fraction,"
-              "paged_wall_min_s"),
+              "paged_wall_min_s,spec_wall_min_s,multitenant_wall_min_s"),
 }
 
 
@@ -124,6 +128,10 @@ def main(argv=None) -> int:
                 return serve_throughput.mixed_workload_descriptor()
             if m.startswith("chaos_"):
                 return serve_throughput.chaos_workload_descriptor()
+            if m.startswith("spec_"):
+                return serve_throughput.spec_workload_descriptor()
+            if m.startswith("multitenant_"):
+                return serve_throughput.multitenant_workload_descriptor()
             if m.startswith(("paged_", "prefix_", "page_")):
                 return serve_throughput.prefix_workload_descriptor()
             return serve_throughput.workload_descriptor()

@@ -31,6 +31,19 @@ The drain report prints backend, page utilization and prefix hit rate.
 The paged cache routes through the scheduler/supervisor paths; the
 chunked engine keeps its own dense cache.
 
+``--speculative`` turns each scheduler decode step into a
+self-speculative window (see ``serve.scheduler``): the FLRQ model's own
+rank-truncated view drafts ``--spec-k`` greedy tokens, one batched
+verify pass checks the whole window, and each slot emits its longest
+agreeing prefix plus the target's correction token — tokens stay
+bitwise-identical to plain greedy decode, only the step count shrinks.
+``--draft-rank`` sets how many low-rank terms the draft keeps (0 =
+codes-only backbone); per-slot adaptive k is on by default
+(``--no-spec-adaptive`` pins the window). The drain report adds
+acceptance rate, accepted tokens/step and wasted-draft fraction.
+``--decode-kernel paged`` routes the paged backend's plain decode step
+through the ``flash_decode_gqa_paged`` kernel (auto = TPU only).
+
 Fault-tolerant serving (see ``serve.supervisor``): ``--replicas N`` puts
 N scheduler-backed replicas behind one shared admission queue with
 supervised restart; ``--fault-plan`` injects deterministic faults in the
@@ -144,11 +157,36 @@ def main(argv=None):
                     help="share full prompt-prefix pages across requests "
                          "via the radix trie (paged backend; "
                          "--no-prefix-cache disables sharing)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decode: draft --spec-k tokens "
+                         "per step with the rank-truncated FLRQ model, "
+                         "verify in one batched pass (greedy only; tokens "
+                         "stay bitwise-identical to plain decode)")
+    ap.add_argument("--draft-rank", type=int, default=0,
+                    help="low-rank terms the draft model keeps (0 = "
+                         "codes-only backbone)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft window size (upper bound; per-slot "
+                         "adaptive k shrinks/grows within it)")
+    ap.add_argument("--spec-adaptive", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="adapt each slot's draft window to its measured "
+                         "acceptance (--no-spec-adaptive pins k)")
+    ap.add_argument("--decode-kernel", default="auto",
+                    choices=("auto", "gather", "paged"),
+                    help="paged-backend decode route: gather-to-dense "
+                         "view (reference) or the flash_decode_gqa_paged "
+                         "kernel over page tables (auto = kernel on TPU)")
     ap.add_argument("--max-restarts", type=int, default=3,
                     help="supervisor restart cap per replica; past it the "
                          "replica is retired and its requests fail "
                          "terminally")
     args = ap.parse_args(argv)
+    if args.speculative and args.scheduler != "continuous" \
+            and not (args.replicas > 0 or args.fault_plan):
+        ap.error("--speculative requires --scheduler continuous (or the "
+                 "supervisor via --replicas); the chunked engine has no "
+                 "speculative path")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LM(cfg)
@@ -178,8 +216,11 @@ def main(argv=None):
                           max_slots=args.slots,
                           max_seq=args.prompt_len + args.new_tokens + 8,
                           page_size=args.page_size,
-                          prefix_cache=args.prefix_cache),
-        backend=args.backend, interpret=args.interpret or None)
+                          prefix_cache=args.prefix_cache,
+                          decode_kernel=args.decode_kernel),
+        backend=args.backend, interpret=args.interpret or None,
+        speculative=args.speculative, draft_rank=args.draft_rank,
+        spec_k=args.spec_k, spec_adaptive=args.spec_adaptive)
     eng = Engine(model, params, scfg)
 
     def cache_report(engine):
@@ -190,8 +231,25 @@ def main(argv=None):
             line += (f" prefix-hit-rate {s['prefix_hit_rate']:.1%} "
                      f"(hit {s['hit_tokens']}/{s['prompt_tokens']} prompt "
                      f"tokens, {s['cow_copies']} CoW, "
-                     f"{s['evictions']} evictions)")
+                     f"{s['evictions']} evictions) "
+                     f"decode-route={s['decode_route']}")
         print(line)
+
+    def spec_report(*scheds):
+        """Aggregate speculative stats across schedulers (one, or a
+        supervisor fleet's replicas) into a single drain-report line."""
+        if not args.speculative:
+            return
+        drafted = sum(s.spec_draft_tokens for s in scheds)
+        accepted = sum(s.spec_accepted_tokens for s in scheds)
+        emitted = sum(s.spec_emitted_tokens for s in scheds)
+        steps = sum(s.spec_slot_steps for s in scheds)
+        windows = sum(s.spec_windows for s in scheds)
+        print(f"  speculative: k={args.spec_k} draft-rank={args.draft_rank} "
+              f"windows={windows} "
+              f"acceptance {accepted / max(drafted, 1):.1%} "
+              f"accepted/step {emitted / max(steps, 1):.2f} "
+              f"wasted-draft {(drafted - accepted) / max(drafted, 1):.1%}")
 
     t0 = time.time()
     if args.replicas > 0 or args.fault_plan:
@@ -232,6 +290,7 @@ def main(argv=None):
               f"(ok requests)")
         for engine in fleet[-max(1, args.replicas):]:
             cache_report(engine)
+        spec_report(*(r.scheduler for r in sup.replicas))
         if not report.zero_drops:
             print("  WARNING: request reconciliation failed "
                   f"({len(report.outcomes)} != {report.submitted})")
@@ -263,6 +322,7 @@ def main(argv=None):
             f"{s}={counts.get(s, 0)}"
             for s in ("ok", "timeout", "rejected", "failed")))
         cache_report(eng)
+        spec_report(sched)
         for r in sres[:3]:
             print(f"  req {r.id}: {r.tokens}")
         return 0

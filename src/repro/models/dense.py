@@ -39,7 +39,10 @@ from .layers import (
     flash_attention,
     repeat_kv,
     rms_norm,
+    verify_attention,
+    verify_attention_gqa,
 )
+from ..kernels.decode_attention import flash_decode_gqa_paged
 from .moe import moe_ffn
 
 # Activation sharding specs (installed constrainer decides whether they bind).
@@ -473,4 +476,158 @@ class DenseStack:
         h, (ks, vs) = self._run_layers(
             body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
                       cache["v"]), cfg.n_layers, cfg.scan_layers)
+        return h, {"k": ks, "v": vs}
+
+    def apply_verify_slots(self, layers, x, cache, lengths):
+        """Speculative-verify window: x (B, C, D) embeds [cur_tok,
+        draft_1..draft_{C-1}]; ``lengths`` (B,) int32 is each slot's cached
+        prefix. All C tokens' K/V are inserted at ``lengths[b]..
+        lengths[b]+C-1`` BEFORE attention; ``verify_attention``'s per-query
+        horizon then shows query j exactly ``lengths[b]+j+1`` keys, so row
+        j of the result computes exactly what the j-th sequential
+        ``apply_decode`` call would produce (later-position K/V land in
+        the masked region, where softmax contributes exact zeros; fused
+        reductions may differ within ~1 ulp at C-wide shapes, so the
+        parity contract is greedy-argmax identity per row).
+        Rejected tokens' K/V simply stay past the accepted length — the
+        standard stale-region invariant — so cache rollback is pure
+        length bookkeeping. Callers must guarantee lengths[b] + C <=
+        max_seq for every lane (the scheduler's k_eff clamp): the write
+        is a ``dynamic_update_slice``, whose start-clamping would
+        otherwise corrupt live prefix entries."""
+        cfg = self.cfg
+        b, c, _ = x.shape
+        lengths = jnp.asarray(lengths).astype(jnp.int32)
+        positions = lengths[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, c))
+
+        def body(h, xs):
+            if cfg.kv_cache_bits == 8:
+                pl, idx, k_l, v_l, ks_l, vs_l = xs
+            else:
+                pl, idx, k_l, v_l = xs
+                ks_l = vs_l = None
+            q, k, v = self._qkv(pl, h, positions)  # k/v: (B, C, KV, hd)
+            if cfg.kv_cache_bits == 8:
+                kc, ks = self._quant_kv(k)
+                vc, vs = self._quant_kv(v)
+                k_l = self._cache_insert(k_l, kc, lengths)
+                v_l = self._cache_insert(v_l, vc, lengths)
+                ks_l = self._cache_insert(ks_l, ks, lengths)
+                vs_l = self._cache_insert(vs_l, vs, lengths)
+                k_use = k_l.astype(cfg.dtype) * ks_l.astype(cfg.dtype)
+                v_use = v_l.astype(cfg.dtype) * vs_l.astype(cfg.dtype)
+            else:
+                k_l = self._cache_insert(k_l, k, lengths)
+                v_l = self._cache_insert(v_l, v, lengths)
+                k_use, v_use = k_l, v_l
+            win = self._layer_window(idx, k_l.shape[1])
+            if cfg.grouped_decode_attn:
+                attn = verify_attention_gqa(q, k_use, v_use, lengths,
+                                            window=win,
+                                            softcap_val=cfg.attn_softcap)
+            else:
+                kr = repeat_kv(k_use, cfg.n_heads // cfg.n_kv_heads)
+                vr = repeat_kv(v_use, cfg.n_heads // cfg.n_kv_heads)
+                attn = verify_attention(q, kr, vr, lengths, window=win,
+                                        softcap_val=cfg.attn_softcap)
+            attn = mm(attn.reshape(b, c, cfg.q_dim), pl["wo"])
+            if "post_attn_norm" in pl:
+                attn = rms_norm(attn, pl["post_attn_norm"])
+            h = h + attn
+            h = h + self._ffn(pl, h)
+            if cfg.kv_cache_bits == 8:
+                return h, (k_l, v_l, ks_l, vs_l)
+            return h, (k_l, v_l)
+
+        if cfg.kv_cache_bits == 8:
+            h, (ks, vs, kss, vss) = self._run_layers(
+                body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                          cache["v"], cache["k_scale"], cache["v_scale"]),
+                cfg.n_layers, cfg.scan_layers)
+            return h, {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+        h, (ks, vs) = self._run_layers(
+            body, x, (layers, jnp.arange(cfg.n_layers), cache["k"],
+                      cache["v"]), cfg.n_layers, cfg.scan_layers)
+        return h, {"k": ks, "v": vs}
+
+    def paged_kernel_supported(self):
+        """Static support check for routing decode through
+        ``flash_decode_gqa_paged``: the kernel has no sliding-window or
+        softcap path (configs using either keep the gather route)."""
+        cfg = self.cfg
+        if cfg.local_window:
+            return False, "paged decode kernel has no sliding-window mask"
+        if cfg.attn_softcap:
+            return False, "paged decode kernel has no softcap path"
+        if cfg.n_heads % cfg.n_kv_heads != 0:
+            return False, "n_heads not a multiple of n_kv_heads"
+        return True, "supported"
+
+    def apply_decode_paged(self, layers, x, pools, table, lengths,
+                           interpret: bool = False):
+        """Decode ONE token per slot directly against the paged pools — no
+        gather-to-dense-view detour. x: (B, 1, D); ``pools`` leaves are
+        (L, P+1, page, KV, hd) (last physical page = the scratch sink);
+        ``table``: (B, pps) int32 physical page per logical page;
+        ``lengths``: (B,) valid tokens per slot. Each layer writes the new
+        K/V at (table[b, lengths[b]//page], lengths[b]%page) — free slots
+        all route to the scratch page, where write order is irrelevant —
+        then attends via the scalar-prefetched ``flash_decode_gqa_paged``
+        kernel. NOT bitwise with the gather path (online softmax
+        normalizes divide-after vs the decode formula's divide-before);
+        parity is allclose-level, verified in interpret mode in tests."""
+        cfg = self.cfg
+        b = x.shape[0]
+        lengths = jnp.asarray(lengths).astype(jnp.int32)
+        page = pools["k"].shape[2]
+        positions = lengths[:, None]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))
+        table = jnp.asarray(table).astype(jnp.int32)
+        pps = table.shape[1]
+        page_idx = jnp.minimum(lengths // page, pps - 1)
+        phys = jnp.take_along_axis(table, page_idx[:, None], axis=1)[:, 0]
+        off = lengths % page
+
+        def body(h, xs):
+            if cfg.kv_cache_bits == 8:
+                pl, k_l, v_l, ks_l, vs_l = xs
+            else:
+                pl, k_l, v_l = xs
+                ks_l = vs_l = None
+            q, k, v = self._qkv(pl, h, positions)  # k/v: (B, 1, KV, hd)
+            if cfg.kv_cache_bits == 8:
+                kc, ks = self._quant_kv(k)
+                vc, vs = self._quant_kv(v)
+                k_l = k_l.at[phys, off].set(kc[:, 0].astype(k_l.dtype))
+                v_l = v_l.at[phys, off].set(vc[:, 0].astype(v_l.dtype))
+                ks_l = ks_l.at[phys, off].set(ks[:, 0].astype(ks_l.dtype))
+                vs_l = vs_l.at[phys, off].set(vs[:, 0].astype(vs_l.dtype))
+            else:
+                k_l = k_l.at[phys, off].set(k[:, 0].astype(k_l.dtype))
+                v_l = v_l.at[phys, off].set(v[:, 0].astype(v_l.dtype))
+            attn = flash_decode_gqa_paged(q, k_l, v_l, table, lengths + 1,
+                                          k_scale_pool=ks_l,
+                                          v_scale_pool=vs_l,
+                                          interpret=interpret)
+            attn = mm(attn.reshape(b, 1, cfg.q_dim), pl["wo"])
+            if "post_attn_norm" in pl:
+                attn = rms_norm(attn, pl["post_attn_norm"])
+            h = h + attn
+            h = h + self._ffn(pl, h)
+            if cfg.kv_cache_bits == 8:
+                return h, (k_l, v_l, ks_l, vs_l)
+            return h, (k_l, v_l)
+
+        if cfg.kv_cache_bits == 8:
+            h, (ks, vs, kss, vss) = self._run_layers(
+                body, x, (layers, pools["k"], pools["v"],
+                          pools["k_scale"], pools["v_scale"]),
+                cfg.n_layers, cfg.scan_layers)
+            return h, {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+        h, (ks, vs) = self._run_layers(
+            body, x, (layers, pools["k"], pools["v"]),
+            cfg.n_layers, cfg.scan_layers)
         return h, {"k": ks, "v": vs}

@@ -288,6 +288,69 @@ def decode_attention_gqa(q, k_cache, v_cache, length, window=None,
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
+def verify_attention(q, k_cache, v_cache, lengths, window=None,
+                     softcap_val: float = 0.0):
+    """Speculative-verify attention: C window queries against the decode
+    cache with a *per-query* causal horizon. q: (B, C, H, hd); caches:
+    (B, S, KV, hd) holding the window's K/V already inserted at positions
+    ``lengths[b] .. lengths[b]+C-1``; query j sees ``lengths[b]+j+1`` keys
+    — exactly what C sequential ``decode_attention`` calls would see.
+
+    Op order replicates ``decode_attention`` exactly (f32 einsum × scale →
+    softcap → mask → NEG_INF → ``jax.nn.softmax`` → p·V einsum): those ops
+    are row-independent per (b, query), and masked lanes contribute exact
+    zeros, so each window row computes the SAME function as its
+    single-token decode call — op-for-op bitwise at op granularity;
+    whole-graph compilation may reorder fused reductions within ~1 ulp
+    for the C-wide shapes, which is why the speculative parity oracle is
+    stated (and tested) at the greedy-argmax/token level. (The flash
+    kernels normalize inside the online loop — divide-after instead of
+    softmax's divide-before — which is why verify gets its own formula
+    instead of reusing them.)"""
+    b, c, h, hd = q.shape
+    sk = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap_val:
+        s = softcap(s, softcap_val)
+    kpos = jnp.arange(sk)
+    lw = jnp.asarray(lengths)[:, None] + jnp.arange(1, c + 1)[None, :]  # (B, C)
+    mask = kpos[None, None, :] < lw[:, :, None]  # (B, C, S)
+    if window is not None:
+        mask = mask & (kpos[None, None, :] > lw[:, :, None] - 1 - window)
+    s = jnp.where(mask[:, None, :, :], s, NEG_INF)  # (B, H, C, S)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def verify_attention_gqa(q, k_cache, v_cache, lengths, window=None,
+                         softcap_val: float = 0.0):
+    """GQA form of ``verify_attention`` — mirrors ``decode_attention_gqa``
+    op-for-op with the same per-query (B, C) horizon, contracting q viewed
+    as (B, C, KV, G, hd) straight against the (B, S, KV, hd) cache."""
+    b, c, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    sk = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q2 = q.reshape(b, c, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", q2,
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap_val:
+        s = softcap(s, softcap_val)
+    kpos = jnp.arange(sk)
+    lw = jnp.asarray(lengths)[:, None] + jnp.arange(1, c + 1)[None, :]
+    mask = kpos[None, None, :] < lw[:, :, None]
+    if window is not None:
+        mask = mask & (kpos[None, None, :] > lw[:, :, None] - 1 - window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)  # (B, C, KV, G, S)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, c, h, hd).astype(q.dtype)
+
+
 def repeat_kv(x, n_rep: int):
     """(B, S, KV, hd) -> (B, S, KV*n_rep, hd)."""
     if n_rep == 1:

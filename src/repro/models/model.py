@@ -187,6 +187,44 @@ class LM:
         h, cache = self.stack.apply_decode(params["layers"], x, cache, length)
         return self._logits_last(params, h), cache
 
+    def verify_slots(self, params, tokens, cache, lengths):
+        """Speculative-verify window: tokens (B, C) = [cur_tok,
+        draft_1..draft_{C-1}] per slot; ``lengths`` (B,) int32 cached
+        prefix per slot. Returns (logits (B, C, V) — EVERY window
+        position is unembedded, that is the point: position j's logits
+        compute exactly what the j-th sequential ``decode_step`` would
+        emit (same insert order and per-query horizon; greedy argmax per
+        row is the parity contract — fused reductions can reorder within
+        ~1 ulp at C-wide shapes) — and the cache with all C tokens' K/V
+        inserted; rejected tokens simply stay past the accepted length
+        as stale masked entries)."""
+        if not hasattr(self.stack, "apply_verify_slots"):
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no speculative verify "
+                f"(self-speculative decode serves dense-stack families)")
+        x = self._embed_tokens(params, tokens)
+        h, cache = self.stack.apply_verify_slots(
+            params["layers"], x, cache, lengths)
+        return self._logits_last(params, h), cache
+
+    def decode_step_paged(self, params, tokens, pools, table, lengths,
+                          interpret: bool = False):
+        """Paged-kernel decode step: like ``decode_step`` but K/V land
+        directly in the (L, P+1, page, KV, hd) pools at page-table
+        positions and attention runs the ``flash_decode_gqa_paged``
+        kernel — no gather-to-dense-view. Returns (logits (B, 1, V),
+        updated pools). Allclose (not bitwise) to the gather path."""
+        if not hasattr(self.stack, "apply_decode_paged"):
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} has no paged decode kernel "
+                f"path")
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        x = self._embed_tokens(params, tokens)
+        h, pools = self.stack.apply_decode_paged(
+            params["layers"], x, pools, table, lengths, interpret=interpret)
+        return self._logits_last(params, h), pools
+
 
 # ---------------------------------------------------------------------------
 # Modality frontend stubs (per the brief: [audio]/[vlm] backbones only)

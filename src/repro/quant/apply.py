@@ -36,7 +36,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .qtensor import QuantizedLinear, dequantize, is_stacked
+from .qtensor import QuantizedLinear, dequantize, is_stacked, truncate_rank
 
 BACKENDS = ("ref", "fused", "auto")
 
@@ -208,6 +208,35 @@ def active_backend() -> str:
     return _ACTIVE[-1][0]
 
 
+# Draft-model rank cap for self-speculative decoding. ``None`` = serve the
+# full tensor; an int r = serve ``truncate_rank(qt, r)`` — a view sharing
+# the packed int4 payload, so the SAME ref/fused kernels run the draft pass
+# with a narrower (or absent) low-rank correction. A stack, like the
+# backend stack, so nested scopes restore correctly.
+_DRAFT_RANK: List[Optional[int]] = [None]
+
+
+@contextlib.contextmanager
+def draft_scope(rank: int):
+    """Serve every quantized matmul traced inside the scope from its
+    rank-``rank`` draft view (rank 0 = int4 backbone only). Trace-time,
+    like ``backend_scope``: the speculative engine wraps the *tracing* of
+    its draft executable so one policy covers the whole model. Plain
+    (non-quantized) parameters are untouched — under fp weights the draft
+    degenerates to the target model."""
+    if rank < 0:
+        raise ValueError(f"draft rank must be >= 0, got {rank}")
+    _DRAFT_RANK.append(int(rank))
+    try:
+        yield
+    finally:
+        _DRAFT_RANK.pop()
+
+
+def active_draft_rank() -> Optional[int]:
+    return _DRAFT_RANK[-1]
+
+
 def dispatch(qt: QuantizedLinear, x, out_dtype=None,
              backend: Optional[str] = None,
              interpret: Optional[bool] = None):
@@ -218,6 +247,8 @@ def dispatch(qt: QuantizedLinear, x, out_dtype=None,
     requested = backend or scope_backend
     if interpret is None:
         interpret = scope_interp
+    if _DRAFT_RANK[-1] is not None:
+        qt = truncate_rank(qt, _DRAFT_RANK[-1])
     chosen, reason = resolve_backend(requested, qt, interpret)
     _DISPATCH_LOG.append(BackendDecision(
         requested=requested, chosen=chosen, reason=reason,

@@ -154,6 +154,29 @@ def slice_stack(qt: QuantizedLinear, start: int, stop: int,
     )
 
 
+def truncate_rank(qt: QuantizedLinear, r: int) -> QuantizedLinear:
+    """Rank-truncated *view* of a QuantizedLinear — the self-speculative
+    draft model. Keeps the leading ``r`` low-rank columns (``r=0`` drops the
+    correction entirely, leaving the int4 backbone); the packed codes,
+    scales, zero points and activation scaling are shared by reference, so
+    a draft view costs no copies of the 4-bit payload. Works on both
+    unstacked (m, r)/(r, n) and lane-stacked (..., m, r)/(..., r, n)
+    factors. ``r`` above the stored rank is clamped, not padded."""
+    r = max(0, min(int(r), qt.rank))
+    return dataclasses.replace(qt, u=qt.u[..., :r], v=qt.v[..., :r, :])
+
+
+def dequantize_stacked(qt: QuantizedLinear, dtype=jnp.float32) -> jax.Array:
+    """``dequantize`` over every lane of a stacked tensor: (..., m, n).
+    ``dequantize`` reshapes to the static (m, n), so lane dims must be
+    vmapped off one at a time; an unstacked tensor passes straight
+    through."""
+    fn = lambda q: dequantize(q, dtype)
+    for _ in range(qt.packed.ndim - 3):
+        fn = jax.vmap(fn)
+    return fn(qt)
+
+
 def extra_avg_bits(rank: int, m: int, n: int, d_fp: int = 16) -> float:
     """Average extra bits per weight from rank-``rank`` factors stored at
     ``d_fp`` bits (paper Eq. 9 storage accounting — single definition)."""

@@ -13,9 +13,24 @@ Two serving modes share the engine's compiled executables:
     (chunked/batched slot prefill via ``dynamic_update_slice``, one
     global decode step over per-slot lengths) — so a continuous-batching
     scheduler can admit/retire requests per slot without ever changing
-    the compiled decode executable's shapes. The old raw primitives
-    (``new_cache`` / ``prefill_slot_chunk`` / ``decode_slots``) remain as
-    one-release deprecation shims.
+    the compiled decode executable's shapes. (The PR 7 deprecation shims
+    ``new_cache`` / ``prefill_slot_chunk`` / ``decode_slots`` completed
+    their one-release cycle and are gone; the ``*_impl`` primitives are
+    the only raw surface.)
+
+Self-speculative decoding (``ServeConfig.speculative``): the FLRQ
+decomposition means the quantized model contains its own draft model —
+``truncate_rank`` of every QuantizedLinear (down to the rank-0 int4
+backbone) is a strictly cheaper forward pass with high agreement to the
+full target. The engine compiles, per window size k, a DRAFT executable
+(k greedy decode steps against the rank-``draft_rank`` view; its cache
+updates are internal to the call and discarded, so draft tokens never
+pollute the real cache) and a VERIFY executable (``model.verify_slots``:
+all k+1 window positions scored in ONE batched pass whose per-row logits
+are bitwise identical to sequential decode steps). Greedy acceptance of
+the longest agreeing prefix + the target's correction token then yields
+token streams bitwise-identical to non-speculative decode — the parity
+oracle the tests pin.
 
 Quantized serving: pass ``params`` whose matrices are QuantizedLinear
 (from ``quant.stacked.quantize_model_stacked``) — the stacked tensors ride
@@ -29,9 +44,9 @@ in ``quant.apply.dispatch_log`` — never silent.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -39,7 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import LM
-from ..quant.apply import backend_scope
+from ..quant.apply import backend_scope, draft_scope
+from ..quant.qtensor import QuantizedLinear, dequantize_stacked, truncate_rank
 from .kv_cache import CacheConfig, make_backend
 
 
@@ -55,8 +71,38 @@ class ServeConfig:
     cache: Optional[CacheConfig] = None  # cache knobs; None = dense backend
                                          # built from the legacy fields above
     batched_prefill: bool = True  # one (B, C) launch per scheduler step
+    # --- self-speculative decoding (greedy serving only) -------------------
+    speculative: bool = False   # draft with the rank-truncated model, verify
+                                # the window in one pass; tokens stay bitwise
+                                # identical to non-speculative greedy decode
+    draft_rank: int = 0         # low-rank columns kept in the draft view
+                                # (0 = int4 backbone only; clamped to the
+                                # stored rank). The R1-FLR quality knob.
+    spec_k: int = 4             # draft-window target; per-slot adaptive
+                                # windows stay <= this
+    spec_adaptive: bool = True  # grow/shrink per-slot windows from recent
+                                # acceptance (deterministic)
+    spec_hoist: Optional[bool] = None  # materialize dense draft weights once
+                                # per draft call (in-graph) instead of
+                                # re-dequantizing inside the layer scan.
+                                # None: hoist off-TPU (where the dequant
+                                # dominates the draft step), serve the
+                                # truncated QTensors through the normal
+                                # kernel dispatch on TPU (keeps weights int4)
 
     def __post_init__(self):
+        if self.speculative:
+            if self.temperature > 0:
+                raise ValueError(
+                    "speculative decoding serves greedy only: acceptance "
+                    "compares argmax tokens, temperature>0 has no bitwise "
+                    "oracle (got temperature="
+                    f"{self.temperature})")
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+            if self.draft_rank < 0:
+                raise ValueError(
+                    f"draft_rank must be >= 0, got {self.draft_rank}")
         # One source of truth for cache knobs. An explicit CacheConfig wins
         # (legacy fields mirror it so engine/scheduler/supervisor keep
         # reading cfg.max_slots etc.); otherwise the legacy fields build it.
@@ -118,6 +164,13 @@ class Engine:
         # ("compile count bounded by the bucket set") is asserted on these.
         self.prefill_slot_traces = 0
         self.decode_traces = 0
+        # speculative executables compile per window size k (draft) / k+1
+        # (verify); adaptive windows stay in a small power-of-two bucket
+        # set, so these counters bound the compile count like the prefill
+        # buckets do.
+        self.spec_draft_traces = 0
+        self.verify_traces = 0
+        self._draft_fns: Dict[int, Any] = {}
         # fault-injection hook point (serve.faults.FaultInjector.check):
         # called as hook(site, cache) -> cache inside the public slot
         # primitives, so injected faults fire exactly where real ones
@@ -164,14 +217,109 @@ class Engine:
         self._prefill_slots = jax.jit(prefill_slots, donate_argnums=(2,)) \
             if donate else jax.jit(prefill_slots)
 
+        def verify(p, toks, cache, lengths):
+            self.verify_traces += 1  # runs at trace time only
+            with backend_scope(cfg.backend, cfg.interpret):
+                return model.verify_slots(p, toks, cache, lengths)
+
+        # verify threads (and may donate) the cache like decode; jit
+        # re-traces per window width C = k+1, bounded by the k bucket set.
+        self._verify = jax.jit(verify, donate_argnums=(2,)) if donate \
+            else jax.jit(verify)
+
+        # Paged-kernel decode route (CacheConfig.decode_kernel): interpret
+        # resolves once at engine build, like the quant-matmul kernels —
+        # explicit cfg.interpret wins, else interpret anywhere but a TPU.
+        paged_interp = cfg.interpret if cfg.interpret is not None \
+            else jax.default_backend() != "tpu"
+
+        def decode_paged(p, tok, pools, table, lengths):
+            self.decode_traces += 1  # runs at trace time only
+            with backend_scope(cfg.backend, cfg.interpret):
+                return model.decode_step_paged(p, tok, pools, table,
+                                               lengths,
+                                               interpret=paged_interp)
+
+        self._decode_paged = jax.jit(decode_paged, donate_argnums=(2,)) \
+            if donate else jax.jit(decode_paged)
+
+    # ------------------------------------------------ speculative executables
+    def _resolve_spec_hoist(self) -> bool:
+        if self.cfg.spec_hoist is not None:
+            return self.cfg.spec_hoist
+        # Off-TPU the per-step dequant dominates the draft pass, so paying
+        # one up-front dense materialization per draft call wins; on TPU
+        # the fused kernel serves the truncated int4 view directly and a
+        # dense copy of the weights would defeat the quantized memory
+        # footprint.
+        return jax.default_backend() != "tpu"
+
+    def _draft_weights(self, p):
+        """In-graph draft view of the params: every QuantizedLinear becomes
+        its rank-``draft_rank`` DENSE (in, out) matrix in the model dtype —
+        computed once per draft call and shared by all k steps (the hoisted
+        path; without it the dequant re-runs inside every layer-scan step
+        and the draft is no cheaper than the target). Plain fp leaves pass
+        through, so under unquantized params the draft IS the target."""
+        dt = self.model.cfg.dtype
+
+        def leaf(x):
+            if isinstance(x, QuantizedLinear):
+                w = dequantize_stacked(truncate_rank(x, self.cfg.draft_rank),
+                                       dtype=jnp.float32)  # (..., m, n)
+                return jnp.swapaxes(w, -1, -2).astype(dt)  # mm wants (in, out)
+            return x
+
+        return jax.tree.map(leaf, p,
+                            is_leaf=lambda x: isinstance(x, QuantizedLinear))
+
+    def _draft_fn(self, k: int):
+        """The compiled draft executable for window size ``k``: k greedy
+        decode steps against the draft model. The threaded cache is
+        internal to the call and DISCARDED — draft K/V never reach the
+        backend's cache, so rejected tokens need no device-side rollback.
+        Never donates its cache argument (verify reuses the same buffers
+        right after)."""
+        fn = self._draft_fns.get(k)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+        model = self.model
+        hoist = self._resolve_spec_hoist()
+
+        def draft(p, toks, cache, lengths):
+            self.spec_draft_traces += 1  # runs at trace time only
+            with backend_scope(cfg.backend, cfg.interpret):
+                if hoist:
+                    p = self._draft_weights(p)
+                    scope = contextlib.nullcontext()
+                else:
+                    scope = draft_scope(cfg.draft_rank)
+                with scope:
+                    cur, lens, outs = toks, lengths, []
+                    for _ in range(k):
+                        logits, cache = model.decode_step(p, cur, cache,
+                                                          lens)
+                        cur = jnp.argmax(logits[:, -1, :],
+                                         axis=-1).astype(jnp.int32)
+                        outs.append(cur)
+                        lens = lens + 1
+                    return jnp.stack(outs, axis=1)  # (B, k)
+
+        fn = jax.jit(draft)
+        self._draft_fns[k] = fn
+        return fn
+
     # ----------------------------------------------- slot-granular serving
     # The scheduler reaches these THROUGH the cache backend (self.
     # cache_backend), which owns the long-lived cache state. The private
     # ``*_impl`` methods are the raw executables: their cache argument is
     # DONATED when resolve_donate() says so — after a call returns, the
-    # passed-in cache is dead, always thread the returned one. The old
-    # public names (new_cache / prefill_slot_chunk / decode_slots) remain
-    # as deprecation shims for one release.
+    # passed-in cache is dead, always thread the returned one. (Tests may
+    # still install per-INSTANCE overrides under the historical names
+    # ``prefill_slot_chunk`` / ``decode_slots`` — the backends check
+    # ``engine.__dict__`` for those — but the class-level deprecation
+    # shims are gone.)
     @property
     def cache_backend(self):
         """The engine's cache surface (serve.kv_cache.CacheBackend):
@@ -227,29 +375,44 @@ class Engine:
             self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
             jnp.asarray(np.asarray(lengths, np.int32)))
 
-    # Deprecation shims (one release): the raw slot primitives moved behind
-    # the CacheBackend protocol — migrate callers to engine.cache_backend.
-    def _deprecated(self, name: str, repl: str):
-        warnings.warn(
-            f"Engine.{name} is deprecated and will be removed next "
-            f"release; use engine.cache_backend.{repl} (serve.kv_cache) "
-            f"instead", DeprecationWarning, stacklevel=3)
+    def _decode_paged_impl(self, pools, tokens, table, lengths):
+        """Paged-kernel decode step: writes each slot's K/V straight into
+        the (L, P+1, page, KV, hd) pools at its page-table position and
+        attends via ``flash_decode_gqa_paged`` — no dense-view gather.
+        Returns (logits (B, 1, V), pools). Allclose (not bitwise) to
+        ``_decode_slots_impl`` on a gathered view."""
+        if self.fault_hook is not None:
+            pools = self.fault_hook("decode", pools)
+        return self._decode_paged(
+            self.params, jnp.asarray(np.asarray(tokens, np.int32)), pools,
+            jnp.asarray(np.asarray(table, np.int32)),
+            jnp.asarray(np.asarray(lengths, np.int32)))
 
-    def new_cache(self):
-        """Deprecated: use ``engine.cache_backend.start()``."""
-        self._deprecated("new_cache", "start()")
-        return self._new_cache_impl()
+    def _draft_slots_impl(self, cache, tokens, lengths, k: int):
+        """Draft ``k`` greedy tokens per slot from the rank-truncated
+        model. tokens: (B,) current token per slot; lengths: (B,) cached
+        prefix per slot. Returns (B, k) int32 draft tokens. The cache
+        argument is read, threaded internally and discarded — the caller's
+        cache is NEVER consumed or mutated (no donation), so the same
+        buffers go straight into verify. No fault hook here: draft work is
+        disposable by construction, a fault that matters fires at the
+        verify site."""
+        return self._draft_fn(k)(
+            self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
+            jnp.asarray(np.asarray(lengths, np.int32)))
 
-    def prefill_slot_chunk(self, cache, slot: int, tokens, start: int,
-                           last: int):
-        """Deprecated: use ``engine.cache_backend.prefill_chunk``."""
-        self._deprecated("prefill_slot_chunk", "prefill_chunk(...)")
-        return self._prefill_slot_impl(cache, slot, tokens, start, last)
-
-    def decode_slots(self, cache, tokens, lengths):
-        """Deprecated: use ``engine.cache_backend.decode``."""
-        self._deprecated("decode_slots", "decode(...)")
-        return self._decode_slots_impl(cache, tokens, lengths)
+    def _verify_slots_impl(self, cache, tokens, lengths):
+        """Score the whole draft window in one pass. tokens: (B, C) =
+        [cur_tok, draft_1..draft_{C-1}]; lengths: (B,) cached prefix per
+        slot. Returns (logits (B, C, V), cache) — row j bitwise-identical
+        to the j-th sequential decode step, with all C tokens' K/V
+        inserted (rejected ones stay past the accepted length as stale
+        masked entries; rollback is length bookkeeping in the backend)."""
+        if self.fault_hook is not None:
+            cache = self.fault_hook("verify", cache)
+        return self._verify(
+            self.params, jnp.asarray(np.asarray(tokens, np.int32)), cache,
+            jnp.asarray(np.asarray(lengths, np.int32)))
 
     # -------------------------------------------------------------- serving
     def generate(self, requests: List[Request]) -> List[Result]:
@@ -329,6 +492,14 @@ class Engine:
                 decode_s=step_s[len(toks_i) - 1] if toks_i else 0.0,
                 queue_s=queue_s, ttft_s=queue_s + prefill_s))
         return results
+
+    def _sample_window(self, logits) -> jax.Array:
+        """Greedy tokens for EVERY window position: (B, C, V) -> (B, C).
+        Per-row argmax is independent, so row j equals ``_sample`` on the
+        j-th sequential decode logits — the acceptance comparison side of
+        the bitwise oracle. Speculative serving is greedy-only (enforced
+        in ServeConfig), so there is no temperature path here."""
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def _sample(self, logits) -> jax.Array:
         lg = logits[:, -1, :]

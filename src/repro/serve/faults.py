@@ -85,7 +85,7 @@ class VirtualClock(Clock):
 
 # ----------------------------------------------------------------- plan
 KINDS = ("exception", "corrupt_cache", "straggler")
-SITES = ("step", "prefill", "decode", "checkpoint")
+SITES = ("step", "prefill", "decode", "verify", "checkpoint")
 # random mode never draws corrupt_cache: a corruption landing on a free
 # slot is unobservable, and a silent fault would make the chaos suite
 # vacuous for that draw.

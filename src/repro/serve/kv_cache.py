@@ -29,11 +29,27 @@ shared pages, copy-on-write copies and the scheduler's near-``max_seq``
 overlap re-prefills are all bitwise-identical to an unshared run — the
 scheduler's oracle tests hold verbatim with ``backend="paged"``. Note
 the cost: every paged step materializes that dense-footprint temporary,
-so today the paged backend buys slot density and prefix reuse, not peak
-memory. The gather-by-page-table Pallas kernel
-(``kernels.decode_attention.flash_decode_gqa_paged``) is implemented
-and parity-tested but not yet wired into ``decode()`` — routing serving
-decode through it (and dropping the gather) is a ROADMAP follow-up.
+so on the gather route the paged backend buys slot density and prefix
+reuse, not peak memory. ``CacheConfig(decode_kernel=...)`` now routes
+the per-token decode step around that detour: ``"paged"`` (or
+``"auto"`` on TPU) runs ``kernels.decode_attention.flash_decode_gqa_
+paged`` directly against the pools — K/V written at page-table
+positions, no dense temporary — at allclose (not bitwise) parity with
+the gather route, since the kernel's online softmax normalizes
+divide-after where the decode formula divides before. Prefill and the
+speculative window keep the gather route (the bitwise-oracle paths).
+
+Speculative decode support: ``spec_window`` drafts k tokens from the
+rank-truncated model and verifies the window in ONE pass. The draft's
+cache updates are internal to its executable and discarded; verify
+inserts all k+1 window tokens' K/V at positions ``length..length+k``.
+Because ``alloc`` reserves every page a request can ever touch
+(prompt + max_new) up front, those writes land in the slot's own
+exclusive pages (shared read-only prefix pages cover only positions
+< plen, and writes beyond the reservation hit the scratch sink), so
+``rollback`` after partial acceptance is pure length bookkeeping —
+page tables and refcounts are bitwise what a never-drafted run holds,
+which the rollback tests assert directly.
 
 Admission control: ``alloc`` raises ``PageExhaustionError`` when the
 pool cannot hold a request — ``permanent=True`` when the request could
@@ -80,6 +96,14 @@ class CacheConfig:
     prefix_cache: bool = True
     kv_cache_bits: Optional[int] = None
     donate_cache: Optional[bool] = None
+    decode_kernel: str = "auto"         # paged backend's decode route:
+                                        # "gather" = dense-view detour (the
+                                        # bitwise oracle), "paged" = the
+                                        # flash_decode_gqa_paged kernel
+                                        # (interpret mode off-TPU; allclose
+                                        # parity), "auto" = kernel on TPU
+                                        # only (interpret mode is a
+                                        # validation tool, not a fast path)
 
     def __post_init__(self):
         if self.backend not in ("dense", "paged"):
@@ -87,6 +111,9 @@ class CacheConfig:
                              "(one of dense|paged)")
         if self.backend == "paged" and self.page_size < 1:
             raise ValueError(f"page_size={self.page_size} must be >= 1")
+        if self.decode_kernel not in ("auto", "gather", "paged"):
+            raise ValueError(f"decode_kernel {self.decode_kernel!r} "
+                             "(one of auto|gather|paged)")
 
     def resolve_donate(self) -> bool:
         """Single resolution of cache donation for every cache-threading
@@ -148,6 +175,26 @@ class CacheBackend:
     def decode(self, tokens, lengths):
         """One global decode step over per-slot lengths; returns logits
         (B, 1, V)."""
+        raise NotImplementedError
+
+    def spec_window(self, tokens, lengths, k: int):
+        """One speculative window: draft ``k`` greedy tokens per slot from
+        the rank-truncated model (draft K/V never persist), then verify
+        the whole window in one pass (window K/V inserted at
+        ``lengths[b]..lengths[b]+k``). tokens: (B,) current token per
+        slot; lengths: (B,) cached prefix per slot; caller guarantees
+        ``max(lengths) + k + 1 <= max_seq``. Returns (draft (B, k) int32,
+        logits (B, k+1, V)) — logits row j bitwise-identical to the j-th
+        sequential ``decode`` step. The caller must ``rollback`` with the
+        post-acceptance lengths afterward."""
+        raise NotImplementedError
+
+    def rollback(self, lengths) -> None:
+        """Truncate per-slot lengths to the accepted window prefix after
+        ``spec_window``. Rejected tokens' K/V stay past the new lengths
+        as stale masked entries — both backends make this pure
+        bookkeeping (the paged backend's up-front page reservation means
+        no tail pages or refcounts ever moved during the window)."""
         raise NotImplementedError
 
     # fault-injection surface: the scheduler's "step"-site hook corrupts
@@ -238,6 +285,26 @@ class DenseCacheBackend(CacheBackend):
         self._lengths[:] = np.asarray(lengths)
         return logits
 
+    def spec_window(self, tokens, lengths, k: int):
+        lens = np.asarray(lengths, np.int64)
+        # draft reads the cache without consuming it (no donation) — its
+        # own K/V writes are internal to the executable and discarded
+        draft = np.asarray(self.engine._draft_slots_impl(
+            self._cache, tokens, lens, k))
+        window = np.concatenate(
+            [np.asarray(tokens, np.int32)[:, None], draft], axis=1)
+        logits, self._cache = self.engine._verify_slots_impl(
+            self._cache, window, lens)
+        self._lengths[:] = lens + k + 1  # provisional; rollback() finalizes
+        return draft, logits
+
+    def rollback(self, lengths) -> None:
+        # Dense rollback IS the length truncation: rejected tokens' K/V
+        # sit past the accepted length in the (L, B, S, KV, hd) envelope,
+        # i.e. in the standard stale-masked region every later write
+        # overwrites.
+        self._lengths[:] = np.asarray(lengths)
+
     @property
     def device_state(self):
         return self._cache
@@ -307,6 +374,8 @@ class PagedCacheBackend(CacheBackend):
         self._node_of: Dict[int, _TrieNode] = {}
         self._tick = 0
         self._lengths = np.zeros(self.max_slots, np.int64)
+        self._kernel = False
+        self._kernel_route = "unresolved (start() not called)"
         # stats
         self.n_prefill_launches = 0
         self.n_prefill_tokens = 0
@@ -337,6 +406,7 @@ class PagedCacheBackend(CacheBackend):
         self.prompt_tokens = 0
         self.cow_copies = 0
         self.evictions = 0
+        self._kernel = self._use_paged_kernel()
         if not self._built:
             self._build_helpers()
             self._built = True
@@ -586,8 +656,48 @@ class PagedCacheBackend(CacheBackend):
                 self._lengths[i] = int(starts[i]) + tokens.shape[1]
         return logits
 
+    def _use_paged_kernel(self) -> bool:
+        """Resolve the decode route once per serve: the Pallas kernel
+        route needs model support (no sliding window / softcap) and —
+        under "auto" — a real TPU; interpret mode is a validation tool,
+        orders of magnitude slower than the gather route on CPU. The
+        resolution is recorded in stats() so a fallback is never
+        silent."""
+        want = self.engine.cfg.cache.decode_kernel
+        if want == "gather":
+            self._kernel_route = "gather (explicitly requested)"
+            return False
+        stack = self.engine.model.stack
+        ok, why = stack.paged_kernel_supported() \
+            if hasattr(stack, "paged_kernel_supported") \
+            else (False, "model family has no paged decode path")
+        if not ok:
+            self._kernel_route = f"gather ({why})"
+            return False
+        if want == "paged":
+            self._kernel_route = "paged (explicitly requested)"
+            return True
+        if jax.default_backend() == "tpu":
+            self._kernel_route = "paged (auto: TPU)"
+            return True
+        self._kernel_route = ("gather (auto on "
+                              f"{jax.default_backend()}: interpret-mode "
+                              "kernel is validation-only)")
+        return False
+
     def decode(self, tokens, lengths):
         lens = np.asarray(lengths, np.int64)
+        if self._kernel:
+            # kernel route: K/V land straight in the pools at page-table
+            # positions and attention gathers by page inside the kernel —
+            # no dense-footprint temporary. Allclose (not bitwise) to the
+            # gather route; the bitwise-oracle paths (prefill, spec
+            # window) stay on gather.
+            logits, self._pools = self.engine._decode_paged_impl(
+                self._pools, tokens, jnp.asarray(self._table, jnp.int32),
+                lens)
+            self._lengths[:] = lens
+            return logits
         flat = self._flat_table(list(range(self.max_slots)))
         view = self._gather(self._pools, flat)
         logits, view = self.engine._decode_slots_impl(view, tokens, lens)
@@ -600,6 +710,38 @@ class PagedCacheBackend(CacheBackend):
             jnp.asarray(page_idx, jnp.int32))
         self._lengths[:] = lens
         return logits
+
+    def spec_window(self, tokens, lengths, k: int):
+        """One gather serves the whole window: draft k tokens on the
+        dense view (the draft's K/V writes are internal to its executable
+        and discarded — the view is not consumed), verify on the same
+        view, scatter everything back once. Verify's window writes land
+        at positions >= each slot's prefix length, which up-front page
+        reservation places in the slot's own exclusive pages (shared
+        prefix pages cover only full pages strictly before the last live
+        prompt position; positions past the reservation route to the
+        scratch sink) — so the full scatter writes shared pages back
+        byte-identical and never needs a CoW or table change."""
+        lens = np.asarray(lengths, np.int64)
+        flat = self._flat_table(list(range(self.max_slots)))
+        view = self._gather(self._pools, flat)
+        draft = np.asarray(self.engine._draft_slots_impl(
+            view, tokens, lens, k))
+        window = np.concatenate(
+            [np.asarray(tokens, np.int32)[:, None], draft], axis=1)
+        logits, view = self.engine._verify_slots_impl(view, window, lens)
+        self._pools = self._scatter(self._pools, view, flat)
+        self._lengths[:] = lens + k + 1  # provisional; rollback() finalizes
+        return draft, logits
+
+    def rollback(self, lengths) -> None:
+        # Length bookkeeping ONLY — and that is a tested invariant, not
+        # an optimization: alloc() reserved every page this request can
+        # touch (prompt + max_new) before its first token, so the window
+        # allocated no tail pages and bumped no refcounts. The rollback
+        # tests assert _table/_ref are bitwise-identical to a
+        # never-drafted run's.
+        self._lengths[:] = np.asarray(lengths)
 
     @property
     def device_state(self):
@@ -616,6 +758,7 @@ class PagedCacheBackend(CacheBackend):
         return dict(
             backend=self.name,
             page_size=self.page,
+            decode_route=self._kernel_route,
             num_pages=self.num_pages,
             pages_live=live,
             pages_resident=resident,

@@ -22,11 +22,25 @@ saturated instead:
     and per-slot lengths ride a (B,) vector, so the compiled decode
     executable never changes shape over the serve's lifetime.
 
+  * **Self-speculative windows** — with ``ServeConfig.speculative`` on,
+    the global decode step becomes a draft+verify window: k tokens are
+    drafted with the rank-truncated FLRQ model, verified in ONE batched
+    target pass, and each slot emits its longest agreeing prefix plus
+    the target's correction token (1..k+1 tokens per step, variable per
+    slot). A per-slot adaptive window target (``_Slot.spec_k``) doubles
+    on full acceptance and halves when under half the window pays off;
+    ``spec_stats()`` reports acceptance rate / accepted-per-step /
+    wasted-draft fraction.
+
 Scheduling changes WHEN a request's tokens are computed, never WHAT they
 are: each slot's cache region is isolated (attention masks to the slot's
 own length; batched matmuls are row-independent), so per-request tokens
 are bitwise-identical to the chunked engine's under greedy sampling —
-tested in tests/test_scheduler.py.
+and speculative windows verify with the decode-formula attention (the
+same function per row as sequential decode, within ~1 ulp of fused
+reductions — far below greedy argmax margins), so their emitted tokens
+match the plain sequential greedy decode token-for-token — tested in
+tests/test_scheduler.py and tests/test_speculative.py.
 
 Cache-write invariant (why idle/prefilling slots are safe inside the
 global decode step): every slot's length entry is its NEXT write
@@ -167,6 +181,8 @@ class StepTrace:
     prefilling: int
     decoding: int
     free: int
+    spec_k: int = 0             # speculative window size this step
+                                # (0 = plain one-token decode)
 
 
 @dataclasses.dataclass
@@ -181,6 +197,7 @@ class _Slot:
     tokens: List[int] = dataclasses.field(default_factory=list)
     token_times: List[float] = dataclasses.field(default_factory=list)
     ttft_t: float = 0.0
+    spec_k: int = 0             # adaptive per-slot draft-window target
 
 
 class ContinuousScheduler:
@@ -209,6 +226,12 @@ class ContinuousScheduler:
         self.trace: List[StepTrace] = []
         self.admission_order: List[int] = []   # request ids, admission order
         self.results: List[SchedResult] = []
+        # speculative-decode accounting (see spec_stats())
+        self.spec_windows = 0          # speculative decode steps taken
+        self.spec_slot_steps = 0       # decoding-slot participations
+        self.spec_draft_tokens = 0     # draft tokens proposed
+        self.spec_accepted_tokens = 0  # draft tokens accepted by verify
+        self.spec_emitted_tokens = 0   # tokens emitted from spec windows
         self._queue: Deque[Tuple[float, Request]] = deque()
         self._slots: List[_Slot] = []
         self._backend = None
@@ -255,6 +278,9 @@ class ContinuousScheduler:
         order = sorted(range(len(requests)), key=lambda i: arrivals[i])
         self._queue = deque((arrivals[i], requests[i]) for i in order)
         self.trace, self.admission_order, self.results = [], [], []
+        self.spec_windows = self.spec_slot_steps = 0
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = self.spec_emitted_tokens = 0
         self._slots = [_Slot() for _ in range(self.engine.cfg.max_slots)]
         # the backend owns the (donated) cache state end to end
         self._backend = self.engine.cache_backend
@@ -406,12 +432,15 @@ class ContinuousScheduler:
     def _guard(self, logits, slot_mask=None) -> None:
         """NaN guard: corrupted cache state must surface as a replica
         failure BEFORE any garbage token is sampled/streamed. ``logits``
-        is (B, 1, V); ``slot_mask[i]`` selects which rows carry real
-        requests (idle slots legitimately compute on garbage regions)."""
+        is (B, C, V) — C=1 for plain decode/prefill, C=k+1 for a
+        speculative verify window (every window position is checked: any
+        of them may be sampled into an emitted token); ``slot_mask[i]``
+        selects which rows carry real requests (idle slots legitimately
+        compute on garbage regions)."""
         if not self.nan_guard:
             return
-        lg = np.asarray(logits)[:, -1, :]
-        finite = np.isfinite(lg).all(axis=-1)
+        lg = np.asarray(logits)
+        finite = np.isfinite(lg).all(axis=(-2, -1))
         for i, ok in enumerate(finite):
             if not ok and (slot_mask is None or slot_mask[i]):
                 raise CacheCorruptionError(
@@ -478,6 +507,8 @@ class ContinuousScheduler:
             slot.arrival, slot.admit_t = arr, t_step
             # a prefix-cache hit resumes prefill past the shared tokens
             slot.pos = slot.length = matched
+            # adaptive draft-window target resets per request
+            slot.spec_k = eng.cfg.spec_k if eng.cfg.speculative else 0
             self.admission_order.append(req.id)
 
         active = [s for s in slots if s.state != _FREE]
@@ -608,23 +639,110 @@ class ContinuousScheduler:
                     if self._emit(slot, tok, slot.ttft_t):
                         self._retire(slot)
 
-        # -- global decode step over every decoding slot
+        # -- global decode step over every decoding slot: one plain
+        #    token step, or (speculative mode) one draft+verify window
+        #    emitting a variable 1..k+1 tokens per slot
         if any(s.state == _DECODE for s in slots):
             toks = np.array([s.cur_tok for s in slots], np.int32)
             lens = np.array([s.length for s in slots], np.int32)
-            logits = self._backend.decode(toks, lens)
-            self._guard(logits, [s.state == _DECODE for s in slots])
-            sampled = np.asarray(eng._sample(logits))
-            t_tok = self._now()
-            for i, slot in enumerate(slots):
-                if slot.state != _DECODE:
-                    continue
-                slot.length += 1
-                tok = int(sampled[i])
-                slot.cur_tok = tok
-                if self._emit(slot, tok, t_tok):
-                    self._retire(slot)
+            k_eff = self._plan_spec_k(slots)
+            self.trace[-1].spec_k = k_eff
+            if k_eff >= 1:
+                self._spec_step(slots, toks, lens, k_eff)
+            else:
+                logits = self._backend.decode(toks, lens)
+                self._guard(logits, [s.state == _DECODE for s in slots])
+                sampled = np.asarray(eng._sample(logits))
+                t_tok = self._now()
+                for i, slot in enumerate(slots):
+                    if slot.state != _DECODE:
+                        continue
+                    slot.length += 1
+                    tok = int(sampled[i])
+                    slot.cur_tok = tok
+                    if self._emit(slot, tok, t_tok):
+                        self._retire(slot)
         return True
+
+    # ----------------------------------------------------------- speculative
+    def _plan_spec_k(self, slots: List[_Slot]) -> int:
+        """Window size for this step's decode: 0 = plain decode. The
+        global window is the max of the decoding slots' adaptive targets
+        (a slot drafting conservatively still verifies the full window —
+        extra verify rows are nearly free, the draft loop is the cost),
+        clamped so the window's k+1 cache writes at
+        ``length..length+k`` stay inside max_seq for EVERY non-free slot
+        (riding prefill lanes write garbage there too, and a clamped
+        ``dynamic_update_slice`` would corrupt their real prefix
+        instead). Near-full slots degrade to plain decode (k=0), which
+        only ever writes at ``length`` — safe for any admitted
+        request."""
+        eng = self.engine
+        if not eng.cfg.speculative:
+            return 0
+        targets = [s.spec_k for s in slots if s.state == _DECODE]
+        if not targets:
+            return 0
+        occupied = max(s.length for s in slots if s.state != _FREE)
+        return min(max(targets), eng.cfg.spec_k,
+                   eng.cfg.max_seq - 1 - occupied)
+
+    def _spec_step(self, slots: List[_Slot], toks: np.ndarray,
+                   lens: np.ndarray, k: int) -> None:
+        """One speculative window: draft k tokens per slot with the
+        rank-truncated model, verify all of them in ONE batched target
+        pass, emit each slot's longest agreeing prefix plus the target's
+        first correction token (1..k+1 tokens). Greedy verification makes
+        every emitted token identical to the plain sequential decode —
+        speculation changes WHEN tokens are computed, never WHAT they
+        are. EOS or the per-request token budget truncates a slot's
+        emission mid-window (``_emit`` retires the slot; surplus window
+        tokens are discarded). Finally ``rollback`` truncates each slot's
+        cache length to its accepted prefix — rejected positions stay as
+        stale masked entries the next window overwrites."""
+        eng = self.engine
+        self.spec_windows += 1
+        decoding = [s.state == _DECODE for s in slots]
+        draft, logits = self._backend.spec_window(toks, lens, k)
+        self._guard(logits, decoding)
+        outs = np.asarray(eng._sample_window(logits))   # (B, k+1)
+        t_tok = self._now()
+        final = np.asarray(lens, np.int64).copy()
+        for i, slot in enumerate(slots):
+            if not decoding[i]:
+                continue
+            self.spec_slot_steps += 1
+            self.spec_draft_tokens += k
+            # longest prefix where draft agrees with the target's greedy
+            # choice: draft[j] must equal the target token AFTER the
+            # first j window inputs — i.e. outs[:, j] (window input j is
+            # the token BEFORE position j's logits)
+            a = 0
+            while a < k and int(draft[i, a]) == int(outs[i, a]):
+                a += 1
+            self.spec_accepted_tokens += a
+            target = slot.spec_k
+            retired = False
+            for j in range(a + 1):
+                tok = int(draft[i, j]) if j < a else int(outs[i, a])
+                slot.length += 1
+                slot.cur_tok = tok
+                self.spec_emitted_tokens += 1
+                if self._emit(slot, tok, t_tok):
+                    self._retire(slot)   # resets backend length to 0
+                    retired = True
+                    break
+            final[i] = 0 if retired else slot.length
+            if not retired and eng.cfg.spec_adaptive:
+                # deterministic per-slot window adaptation: double on
+                # full acceptance, halve when under half the window paid
+                # off — pure arithmetic on the acceptance count, so a
+                # replayed workload adapts identically
+                if a == k and target < eng.cfg.spec_k:
+                    slot.spec_k = min(eng.cfg.spec_k, max(1, target) * 2)
+                elif a + 1 < target // 2 + target % 2:
+                    slot.spec_k = max(1, target // 2)
+        self._backend.rollback(final)
 
     # -------------------------------------------------------------- metrics
     def utilization(self) -> float:
@@ -634,6 +752,32 @@ class ContinuousScheduler:
         n = self.engine.cfg.max_slots
         return float(np.mean([(t.prefilling + t.decoding) / n
                               for t in self.trace]))
+
+    def spec_stats(self) -> dict:
+        """Speculative-decode effectiveness over the serve so far.
+
+        ``acceptance_rate``: fraction of drafted tokens the target
+        verified; ``accepted_per_step``: tokens emitted per decoding slot
+        per window (plain decode would score exactly 1.0 — this is the
+        step-count compression factor); ``wasted_draft_fraction``:
+        drafted-but-rejected work, the overhead knob adaptive k
+        minimizes. All zero when speculation is off or no window ran."""
+        drafted = self.spec_draft_tokens
+        steps = self.spec_slot_steps
+        return dict(
+            spec_windows=self.spec_windows,
+            spec_slot_steps=steps,
+            draft_tokens=drafted,
+            accepted_tokens=self.spec_accepted_tokens,
+            emitted_tokens=self.spec_emitted_tokens,
+            acceptance_rate=(self.spec_accepted_tokens / drafted
+                            if drafted else 0.0),
+            accepted_per_step=(self.spec_emitted_tokens / steps
+                              if steps else 0.0),
+            wasted_draft_fraction=(
+                (drafted - self.spec_accepted_tokens) / drafted
+                if drafted else 0.0),
+        )
 
 
 def queue_head_arrived(queue: Deque[Tuple[float, Request]],

@@ -16,7 +16,11 @@ Failure model and recovery:
     ``prompt + tokens_emitted_so_far``** — greedy decode makes the
     continuation bitwise-identical to an uninterrupted run, and because
     the already-emitted tokens ride in the resume *prompt*, replay can
-    never re-stream them (exactly-once streaming by construction).
+    never re-stream them (exactly-once streaming by construction). A
+    replica killed mid-speculative-window salvages at the last
+    *accepted* token: draft tokens only enter ``tokens_emitted`` after
+    the verify pass confirms them, so a kill at the verify step (fault
+    site ``verify``) resumes from exactly the non-speculative state.
   * The replica is **rebuilt** after a seeded exponential backoff
     (``distributed.fault.backoff_delay``): a fresh cache via
     ``CacheBackend.start`` (inside ``scheduler.start`` — the paged
@@ -416,10 +420,11 @@ class Supervisor:
             self.cfg.backoff_factor, self.cfg.backoff_jitter, self._rng)
 
     def _restart(self, r: _Replica) -> None:
-        """Rebuild: fresh cache via Engine.new_cache (inside start), and —
-        when a checkpointer is wired — params reloaded from the latest
-        checksum-verified checkpoint (the restart-from-checkpoint path a
-        real weight-holding replica takes)."""
+        """Rebuild: fresh cache via CacheBackend.start (inside
+        scheduler.start), and — when a checkpointer is wired — params
+        reloaded from the latest checksum-verified checkpoint (the
+        restart-from-checkpoint path a real weight-holding replica
+        takes)."""
         if self.checkpointer is not None:
             try:
                 params, _ = self.checkpointer.restore(r.engine.params)

@@ -372,19 +372,15 @@ def test_backend_factory_and_stats_shape(tiny_fp):
     assert 0.0 <= stats["page_utilization"] <= 1.0
 
 
-# ------------------------------------------------------- deprecation shims
-def test_deprecated_engine_cache_methods_warn(tiny_fp):
+# --------------------------------------------------- shim removal (PR 8)
+def test_deprecated_engine_cache_shims_removed(tiny_fp):
+    """The PR 7 deprecation cycle is complete: the Engine-level cache
+    shims are gone — CacheBackend is the only cache surface."""
     model, params = tiny_fp
     eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32))
-    with pytest.warns(DeprecationWarning, match="new_cache"):
-        cache = eng.new_cache()
-    toks = np.zeros((8,), np.int32)
-    with pytest.warns(DeprecationWarning, match="prefill_slot_chunk"):
-        _, cache = eng.prefill_slot_chunk(cache, 0, toks, 0, 3)
-    with pytest.warns(DeprecationWarning, match="decode_slots"):
-        eng.decode_slots(cache, np.zeros((2,), np.int32),
-                         np.array([4, 1], np.int32))
-    # the internal path never trips its own shim
+    for name in ("new_cache", "prefill_slot_chunk", "decode_slots"):
+        assert not hasattr(eng, name), f"Engine.{name} should be removed"
+    # the backend path serves clean — no warnings of any kind
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         _serve(model, params, _mixed_requests(lens=(3, 5)), slots=2)

@@ -287,7 +287,7 @@ def test_donated_cache_never_reused(tiny_fp):
                                             donate_cache=True))
     assert eng._donate
     consumed = []
-    orig_prefill, orig_decode = eng.prefill_slot_chunk, eng.decode_slots
+    orig_prefill, orig_decode = eng._prefill_slot_impl, eng._decode_slots_impl
 
     def track(cache):
         leaf = jax.tree.leaves(cache)[0]
@@ -303,6 +303,8 @@ def test_donated_cache_never_reused(tiny_fp):
         track(cache)
         return orig_decode(cache, toks, lens)
 
+    # instance-level overrides under the historical names — the dense
+    # backend's _legacy() lookup routes through these when present
     eng.prefill_slot_chunk, eng.decode_slots = prefill, decode
     sched = ContinuousScheduler(eng, prefill_chunk=4)
     res = sched.run(reqs)  # any stale reuse would also raise RuntimeError

@@ -1,0 +1,420 @@
+"""Self-speculative decoding from the FLRQ rank structure.
+
+The contract under test is *bitwise* parity: with greedy sampling, the
+speculative serve (draft k tokens with the rank-truncated model, verify
+the window in one batched target pass, accept the longest agreeing
+prefix + the target's correction token) must emit EXACTLY the tokens of
+the plain sequential decode — across fp/quantized params, dense/paged
+cache backends, scanned/unrolled stacks and every window size. Draft
+quality only moves throughput, never tokens: even a terrible draft
+(rank 0 on a 2-bit model) serves the same streams, just slower.
+
+On top of the parity oracle: the quant-layer draft views (rank
+truncation shares the packed int4 buffers), the dispatch-level
+``draft_scope``, the one-pass ``verify_slots`` primitive, cache rollback
+(paged tables/refcounts must be untouched by a window — reservation is
+up-front), adaptive window sizing (deterministic), EOS inside a window,
+the paged decode-kernel routing, and supervisor restart mid-window
+(salvage at the last *accepted* token, bitwise continuation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_PROXIES
+from repro.core.flrq import FLRQConfig
+from repro.models import LM
+from repro.quant.apply import active_draft_rank, dispatch, draft_scope
+from repro.quant.qtensor import (QuantizedLinear, dequantize_stacked,
+                                 is_stacked, lane, truncate_rank)
+from repro.quant.stacked import quantize_model_stacked
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.serve.faults import FaultPlan
+from repro.serve.kv_cache import CacheConfig
+from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.supervisor import Supervisor, SupervisorConfig
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    # d_model/d_ff multiples of 128 so should_quantize() actually fires —
+    # smaller proxies silently serve full-precision weights
+    base = dict(n_layers=2, d_model=128, n_heads=2, n_kv_heads=2,
+                head_dim=64, d_ff=256, vocab=128, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+@pytest.fixture(scope="module")
+def tiny_fp(key):
+    model = LM(_tiny_cfg())
+    return model, model.init(key)
+
+
+@pytest.fixture(scope="module")
+def tiny_quant(tiny_fp):
+    model, params = tiny_fp
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=4, blc_epochs=1, max_rank=4, x=1.0))
+    return model, qparams
+
+
+@pytest.fixture(scope="module")
+def tiny_quant_w2(tiny_fp):
+    """2-bit quantization: coarse codes make the low-rank term carry real
+    signal, so a rank-0 draft visibly disagrees with the full model —
+    the regime where acceptance-vs-rank is non-trivial."""
+    model, params = tiny_fp
+    qparams, _ = quantize_model_stacked(
+        params, None, FLRQConfig(bits=2, blc_epochs=1, max_rank=4, x=1.0))
+    return model, qparams
+
+
+def _reqs(lens=(3, 9, 5, 14, 7), vocab=128, new=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(2, vocab, l).astype(np.int32),
+                    max_new_tokens=(new or 6 + 2 * i), id=i)
+            for i, l in enumerate(lens)]
+
+
+def _serve(model, params, reqs, backend="dense", spec=False, k=4, rank=0,
+           slots=3, chunk=8, max_seq=48, adaptive=True,
+           decode_kernel="auto", **scfg):
+    cfg = ServeConfig(
+        cache=CacheConfig(backend=backend, max_slots=slots, max_seq=max_seq,
+                          page_size=8, decode_kernel=decode_kernel),
+        speculative=spec, draft_rank=rank, spec_k=k,
+        spec_adaptive=adaptive, **scfg)
+    eng = Engine(model, params, cfg)
+    sched = ContinuousScheduler(eng, prefill_chunk=chunk)
+    res = sched.run(reqs)
+    return {r.id: r.tokens for r in res}, sched, eng
+
+
+def _first_qt(params):
+    qts = [x for x in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
+        if isinstance(x, QuantizedLinear)]
+    assert qts, "no quantized tensors — proxy dims below should_quantize()"
+    return max(qts, key=lambda q: q.rank)
+
+
+# ------------------------------------------------------ quant-layer views
+def test_truncate_rank_shares_buffers(tiny_quant):
+    _, qparams = tiny_quant
+    qt = _first_qt(qparams)
+    assert qt.rank >= 1 and is_stacked(qt)
+    if qt.rank < 4:
+        # adaptive selection stops at rank 1 on unstructured tiny proxies;
+        # widen the factors so truncation is non-trivial — still the SAME
+        # packed/scale buffers, which is what this test is about
+        qt = dataclasses.replace(
+            qt,
+            u=jnp.concatenate([qt.u] * 4, axis=-1)[..., :4],
+            v=jnp.concatenate([qt.v] * 4, axis=-2)[..., :4, :])
+    t = truncate_rank(qt, 2)
+    # a view over the SAME packed codes/scales — no copies of the 4-bit
+    # payload; only the low-rank factors narrow
+    assert t.packed is qt.packed
+    assert t.scale is qt.scale
+    assert t.zp is qt.zp
+    assert t.act_scale_inv is qt.act_scale_inv
+    assert t.rank == 2
+    assert t.u.shape[-1] == 2 and t.v.shape[-2] == 2
+    # clamping: r past the stored rank and r=0 both behave
+    assert truncate_rank(qt, 999).rank == qt.rank
+    assert truncate_rank(qt, 0).rank == 0
+    # full-rank truncation dequantizes identically
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_stacked(truncate_rank(qt, qt.rank))),
+        np.asarray(dequantize_stacked(qt)))
+
+
+def test_draft_scope_dispatch(tiny_quant, key):
+    _, qparams = tiny_quant
+    qt = lane(_first_qt(qparams), 0)
+    ku, kv, kx = jax.random.split(key, 3)
+    # plant non-zero factors: on unstructured tiny proxies the adaptive
+    # selection accepts no peels, and a zero low-rank term would make the
+    # rank-0 draft trivially identical to the full model
+    qt = dataclasses.replace(
+        qt,
+        u=0.05 * jax.random.normal(ku, qt.u.shape, qt.u.dtype),
+        v=jax.random.normal(kv, qt.v.shape, qt.v.dtype))
+    x = jax.random.normal(kx, (4, qt.v.shape[-1]), jnp.float32)
+    assert active_draft_rank() is None
+    with draft_scope(1):
+        assert active_draft_rank() == 1
+        with draft_scope(0):        # nests; innermost wins
+            assert active_draft_rank() == 0
+            y_drafted = dispatch(qt, x)
+        assert active_draft_rank() == 1
+    assert active_draft_rank() is None
+    # dispatch under draft_scope(r) == dispatch of the truncated tensor
+    np.testing.assert_array_equal(
+        np.asarray(y_drafted), np.asarray(dispatch(truncate_rank(qt, 0), x)))
+    assert not np.array_equal(np.asarray(y_drafted),
+                              np.asarray(dispatch(qt, x)))
+    with pytest.raises(ValueError):
+        with draft_scope(-1):
+            pass
+
+
+# ------------------------------------------------ verify-in-one-pass oracle
+@pytest.mark.parametrize("fixture", ["tiny_fp", "tiny_quant"])
+def test_verify_slots_rows_match_sequential(fixture, request):
+    """The core parity primitive: verify_slots' logits row j is the SAME
+    mathematical function as the j-th sequential decode_step (same
+    cache-insert op order, decode-formula attention, per-query horizon).
+    Compiled reductions may reorder within ~1 ulp for the C-wide shapes,
+    so logits compare at ulp tolerance — the serving contract (greedy
+    ARGMAX per row) must be exact."""
+    model, params = request.getfixturevalue(fixture)
+    b, c = 2, 4
+    rng = np.random.default_rng(5)
+    cache = model.init_cache(b, 32)
+    for j in range(5):   # populate 5 real positions per slot
+        tok = rng.integers(2, 128, b).astype(np.int32)
+        _, cache = model.decode_step(params, tok, cache,
+                                     np.full((b,), j, np.int32))
+    lens = np.full((b,), 5, np.int32)
+    window = rng.integers(2, 128, (b, c)).astype(np.int32)
+    seq_rows, seq_cache = [], cache
+    for j in range(c):
+        lg, seq_cache = model.decode_step(
+            params, window[:, j], seq_cache, lens + j)
+        seq_rows.append(np.asarray(lg)[:, 0])
+    ver, _ = model.verify_slots(params, window, cache, lens)
+    ver = np.asarray(ver)
+    for j in range(c):
+        np.testing.assert_allclose(ver[:, j], seq_rows[j],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(ver[:, j].argmax(-1),
+                                      seq_rows[j].argmax(-1))
+
+
+# --------------------------------------------- end-to-end bitwise oracle
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+@pytest.mark.parametrize("fixture", ["tiny_fp", "tiny_quant"])
+def test_spec_serve_bitwise_oracle(fixture, backend, request):
+    """Speculative serve == plain greedy serve, token for token, for
+    every window size — across cache backends and fp/quant params."""
+    model, params = request.getfixturevalue(fixture)
+    reqs = _reqs()
+    base, _, _ = _serve(model, params, reqs, backend=backend)
+    for k in (1, 2, 4, 8):
+        spec, sched, _ = _serve(model, params, reqs, backend=backend,
+                                spec=True, k=k, rank=0)
+        assert spec == base, f"k={k} diverged"
+        assert sched.spec_windows > 0
+
+
+def test_spec_serve_bitwise_oracle_unrolled(tiny_quant):
+    """Scan-over-layers off: the unrolled stack's spec serve matches the
+    unrolled plain serve (same executables-per-layer structure)."""
+    model, qparams = tiny_quant
+    model = model.with_scan(False)
+    reqs = _reqs(lens=(3, 9, 5))
+    base, _, _ = _serve(model, qparams, reqs)
+    spec, _, _ = _serve(model, qparams, reqs, spec=True, k=4, rank=2)
+    assert spec == base
+
+
+def test_spec_eos_mid_window(tiny_fp):
+    """An EOS landing inside a draft window truncates that slot's
+    emission mid-window (surplus verified tokens are discarded) and the
+    slot retires — identically to the sequential serve hitting the same
+    EOS one token at a time."""
+    model, params = tiny_fp
+    reqs = _reqs(lens=(4, 7, 5), new=10)
+    base, _, _ = _serve(model, params, reqs)
+    # pick a token the oracle emits mid-stream and promote it to EOS
+    eos = next(t[2] for t in base.values() if len(t) >= 6)
+    base_eos, _, _ = _serve(model, params, reqs, eos_token=int(eos))
+    spec_eos, _, _ = _serve(model, params, reqs, spec=True, k=4,
+                            eos_token=int(eos))
+    assert spec_eos == base_eos
+    stopped = [rid for rid, t in base_eos.items() if t[-1] == eos
+               and len(t) < 10]
+    assert stopped, "EOS promotion produced no early stop — vacuous test"
+
+
+# ----------------------------------------------------------- cache rollback
+def _prefill_direct(bk, prompts, max_new=16):
+    for s, p in enumerate(prompts):
+        p = np.asarray(p, np.int32)
+        bk.alloc(s, p, max_new)
+        bk.prefill_chunk(s, p, 0, len(p) - 1)
+        bk.register_prompt(s, p)
+
+
+def test_paged_rollback_leaves_tables_untouched(tiny_fp):
+    """Up-front page reservation means a speculative window never
+    allocates, frees, CoWs or remaps a page: tables, refcounts and
+    per-slot page counts after spec_window+rollback are byte-identical
+    to before the window — i.e. to a run that never drafted."""
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(
+        cache=CacheConfig(backend="paged", max_slots=3, max_seq=48,
+                          page_size=8),
+        speculative=True, draft_rank=0, spec_k=4))
+    bk = eng.cache_backend
+    bk.start()
+    rng = np.random.default_rng(2)
+    _prefill_direct(bk, [rng.integers(2, 128, 5 + s) for s in range(3)])
+    snap = (bk._table.copy(), bk._ref.copy(), bk._alloc_pages.copy(),
+            sorted(bk._free))
+    cur = np.array([3, 4, 5], np.int32)
+    lens = np.array([int(x) for x in bk._lengths], np.int64)
+    draft, logits = bk.spec_window(cur, lens, 4)
+    # partial acceptance: every slot keeps only 1 emitted token
+    bk.rollback(lens + 1)
+    after = (bk._table.copy(), bk._ref.copy(), bk._alloc_pages.copy(),
+             sorted(bk._free))
+    for a, b in zip(snap, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(bk._lengths), lens + 1)
+    # the rolled-back cache keeps serving: next decode matches a
+    # never-drafted twin continuing from the same accepted state
+    outs = np.asarray(eng._sample_window(logits))
+    nxt = np.asarray(
+        eng._sample(bk.decode(outs[:, 0], lens + 1))).reshape(-1)
+
+    eng2 = Engine(model, params, ServeConfig(
+        cache=CacheConfig(backend="paged", max_slots=3, max_seq=48,
+                          page_size=8)))
+    bk2 = eng2.cache_backend
+    bk2.start()
+    rng = np.random.default_rng(2)
+    _prefill_direct(bk2, [rng.integers(2, 128, 5 + s) for s in range(3)])
+    t1 = np.asarray(eng2._sample(bk2.decode(cur, lens))).reshape(-1)
+    np.testing.assert_array_equal(t1, outs[:, 0])
+    t2 = np.asarray(eng2._sample(bk2.decode(t1.astype(np.int32),
+                                            lens + 1))).reshape(-1)
+    np.testing.assert_array_equal(nxt, t2)
+
+
+def test_dense_rollback_is_length_bookkeeping(tiny_fp):
+    model, params = tiny_fp
+    eng = Engine(model, params, ServeConfig(
+        max_slots=2, max_seq=48, speculative=True, spec_k=3))
+    bk = eng.cache_backend
+    bk.start()
+    rng = np.random.default_rng(4)
+    _prefill_direct(bk, [rng.integers(2, 128, 6), rng.integers(2, 128, 4)])
+    lens = np.array([6, 4], np.int64)
+    bk.spec_window(np.array([7, 9], np.int32), lens, 3)
+    assert list(bk._lengths) == [10, 8]     # provisional: lens + k + 1
+    bk.rollback(lens + 2)
+    assert list(bk._lengths) == [8, 6]
+
+
+# ------------------------------------------------------------- adaptive k
+def test_adaptive_k_deterministic(tiny_quant_w2):
+    """Adaptive window sizing is pure arithmetic on acceptance counts:
+    two identical serves take identical per-step window sizes and emit
+    identical tokens. The 2-bit rank-0 draft disagrees often enough that
+    the windows actually move."""
+    model, qparams = tiny_quant_w2
+    reqs = _reqs(new=12)
+    runs = [_serve(model, qparams, reqs, spec=True, k=8, rank=0)
+            for _ in range(2)]
+    toks0, sched0, _ = runs[0]
+    toks1, sched1, _ = runs[1]
+    assert toks0 == toks1
+    ks0 = [t.spec_k for t in sched0.trace]
+    ks1 = [t.spec_k for t in sched1.trace]
+    assert ks0 == ks1
+    assert sched0.spec_stats() == sched1.spec_stats()
+
+
+def test_acceptance_monotone_in_draft_rank(tiny_quant_w2):
+    """More draft rank -> the draft agrees with the target at least as
+    often (non-strict); and parity holds REGARDLESS of draft quality —
+    a bad draft costs throughput, never correctness."""
+    model, qparams = tiny_quant_w2
+    reqs = _reqs(new=12)
+    base, _, _ = _serve(model, qparams, reqs)
+    acc = {}
+    for rank in (0, 4):
+        spec, sched, _ = _serve(model, qparams, reqs, spec=True, k=4,
+                                rank=rank, adaptive=False)
+        assert spec == base, f"rank={rank} broke parity"
+        acc[rank] = sched.spec_stats()["acceptance_rate"]
+    assert 0.0 <= acc[0] <= acc[4] <= 1.0
+
+
+# ------------------------------------------------------------- validation
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="greedy"):
+        ServeConfig(speculative=True, temperature=0.7)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeConfig(speculative=True, spec_k=0)
+    with pytest.raises(ValueError, match="draft_rank"):
+        ServeConfig(speculative=True, draft_rank=-1)
+    with pytest.raises(ValueError, match="decode_kernel"):
+        CacheConfig(decode_kernel="vectorized")
+
+
+# ------------------------------------------------------ decode-kernel route
+def test_decode_kernel_routing_and_parity(tiny_fp):
+    """Explicit "paged" routes plain decode through the
+    flash_decode_gqa_paged kernel (interpret mode off-TPU) and serves
+    the same greedy tokens as the gather route; "auto" on CPU resolves
+    to gather, visibly."""
+    model, params = tiny_fp
+    reqs = _reqs(lens=(3, 9, 5))
+    gather, _, eng_g = _serve(model, params, reqs, backend="paged")
+    assert eng_g.cache_backend.stats()["decode_route"].startswith("gather")
+    kern, _, eng_k = _serve(model, params, reqs, backend="paged",
+                            decode_kernel="paged")
+    assert eng_k.cache_backend.stats()["decode_route"] \
+        == "paged (explicitly requested)"
+    assert kern == gather
+
+
+def test_decode_kernel_unsupported_model_falls_back(key):
+    """A softcap model has no kernel path: even an explicit "paged"
+    request resolves to gather, with the reason recorded."""
+    model = LM(_tiny_cfg(attn_softcap=30.0))
+    params = model.init(key)
+    eng = Engine(model, params, ServeConfig(
+        cache=CacheConfig(backend="paged", max_slots=2, max_seq=32,
+                          page_size=8, decode_kernel="paged")))
+    eng.cache_backend.start()
+    route = eng.cache_backend.stats()["decode_route"]
+    assert route.startswith("gather") and "softcap" in route
+
+
+# --------------------------------------------------- supervisor mid-window
+def test_supervisor_kill_at_verify_step_bitwise(tiny_fp):
+    """A replica killed AT the verify step of a speculative window
+    salvages at the last accepted token: draft tokens never entered the
+    emitted stream, so the restarted replica's continuation is
+    bitwise-identical to a never-faulted spec serve (which is itself
+    bitwise the plain serve). Zero drops, all ok, exactly the planned
+    restart."""
+    model, params = tiny_fp
+    reqs = _reqs(lens=(4, 8, 5, 6), new=12)
+    base, _, _ = _serve(model, params, reqs)
+
+    def run(plan):
+        eng = Engine(model, params, ServeConfig(
+            max_slots=2, max_seq=48, speculative=True, draft_rank=0,
+            spec_k=4))
+        sup = Supervisor(
+            lambda: eng,
+            SupervisorConfig(replicas=1, prefill_chunk=8,
+                             backoff_base_s=0.0),
+            fault_plan=plan)
+        return sup.serve([dataclasses.replace(r) for r in reqs])
+
+    rep = run(FaultPlan.parse("exception@5:verify:0"))
+    assert rep.zero_drops
+    counts = rep.status_counts()
+    assert set(counts) == {"ok"}, dict(counts)
+    assert sum(rep.restarts.values()) == 1
+    assert {o.id: o.tokens for o in rep.outcomes} == base
