@@ -90,7 +90,8 @@ _BENCH_DEFAULT_METRIC = {
     "quant": "batched_min_s",
     "serve": ("decode_scan_ref_min_s,mixed_sched_wall_min_s,"
               "chaos_recovery_wall_min_s,chaos_wasted_token_fraction,"
-              "paged_wall_min_s,spec_wall_min_s,multitenant_wall_min_s"),
+              "paged_wall_min_s,spec_wall_min_s,multitenant_wall_min_s,"
+              "proc_chaos_recovery_wall_min_s,proc_chaos_replayed_fraction"),
 }
 
 
@@ -126,6 +127,8 @@ def main(argv=None) -> int:
         def serve_proxy(m):
             if m.startswith("mixed_"):
                 return serve_throughput.mixed_workload_descriptor()
+            if m.startswith(("proc_chaos_", "journal_")):
+                return serve_throughput.proc_chaos_workload_descriptor()
             if m.startswith("chaos_"):
                 return serve_throughput.chaos_workload_descriptor()
             if m.startswith("spec_"):

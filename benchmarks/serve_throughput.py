@@ -30,6 +30,20 @@ supervised fleet with no fault), and ``chaos_wasted_token_fraction``
 is dropped or ends non-ok — a chaos benchmark that quietly sheds work
 would report a flattering wall time.
 
+Plus the **process-chaos workload**: the same supervised trace served by
+REAL worker subprocesses (``--fleet procs``: ``serve.worker`` over the
+framed RPC transport) with a durable journal, a worker SIGKILL mid-serve
+and an injected supervisor crash — recovery here pays actual process
+spawn, deterministic re-quantization and journal replay, not an
+in-process ``scheduler.start()``. Records
+``proc_chaos_recovery_wall_min_s`` (wall including the crash, the fresh
+supervisor and the resume), ``proc_chaos_replayed_fraction``
+(journal/emitted tokens that rode resume prompts / all kept positions)
+and the journal's measured fsync overhead
+(``journal_fsync_us_per_record``). Hard-fails on any drop, duplicate
+streamed token, or non-ok status — exactly-once is asserted, not
+assumed.
+
 Plus the **prefix-reuse workload**: 16 requests sharing one system
 prompt, served dense vs ``--cache-backend paged`` (block-table cache +
 radix prefix trie, ``serve.kv_cache``). The paged run must match the
@@ -129,6 +143,14 @@ CHAOS_REQUESTS = 12
 CHAOS_REPLICAS = 2
 CHAOS_PLAN = "exception@8:decode:0"
 
+# Process-chaos workload: smaller still (every worker spawn pays real
+# model build + deterministic re-quantization + compile), but the kill
+# and the supervisor crash both land mid-serve with work in flight.
+PROC_CHAOS_REQUESTS = 8
+PROC_CHAOS_REPLICAS = 2
+PROC_CHAOS_PLAN = "sigkill@5:step:0,supervisor_crash@10"
+JOURNAL_RECORDS = 256       # fsync micro-measurement batch
+
 # Prefix-reuse workload: every request opens with the same system prompt
 # (3 full pages at PREFIX_PAGE) and diverges into a short user tail — the
 # regime the paged backend's radix trie exists for. Dense serves it by
@@ -194,6 +216,19 @@ def chaos_workload_descriptor() -> dict:
                 prompt=[MIX_PROMPT_MIN, MIX_PROMPT_MAX],
                 new_tokens=[MIX_NEW_MIN, MIX_NEW_MAX],
                 plan=CHAOS_PLAN, chunk=MIX_CHUNK)
+
+
+def proc_chaos_workload_descriptor() -> dict:
+    """Comparability key for the cross-process chaos workload — the
+    fault plan (kill + supervisor crash coordinates) is part of the
+    workload identity, like the in-process chaos descriptor."""
+    return dict(kind="serve_proc_chaos", layers=SERVE_L, d_model=SERVE_D,
+                d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS, bits=BITS,
+                replicas=PROC_CHAOS_REPLICAS, requests=PROC_CHAOS_REQUESTS,
+                prompt=[MIX_PROMPT_MIN, MIX_PROMPT_MAX],
+                new_tokens=[MIX_NEW_MIN, MIX_NEW_MAX],
+                plan=PROC_CHAOS_PLAN, chunk=MIX_CHUNK,
+                journal_records=JOURNAL_RECORDS)
 
 
 def prefix_workload_descriptor() -> dict:
@@ -575,6 +610,136 @@ def run_chaos(model, qparams, repeats: int = 3) -> dict:
     return out
 
 
+def run_proc_chaos(model, repeats: int = 1) -> dict:
+    """Cross-process recovery measurement: worker subprocesses + durable
+    journal, with a worker SIGKILL and a supervisor crash mid-serve.
+    Recovery pays real spawn + deterministic re-quantization + journal
+    replay. The no-fault process run doubles as the bitwise oracle; the
+    faulted run must reconcile to zero drops, all-ok, and exactly-once
+    streams or the benchmark hard-fails."""
+    import pathlib
+    import tempfile
+
+    from repro.serve.faults import FaultPlan
+    from repro.serve.journal import Journal
+    from repro.serve.supervisor import (Supervisor, SupervisorConfig,
+                                        SupervisorCrash)
+    from repro.serve.worker import WorkerSpec, model_config_to_dict
+
+    repeats = min(repeats, 1)   # every faulted run spawns ~5 worker
+                                # processes, each paying real model build
+                                # + re-quantization + compile (~2min on
+                                # the CPU proxy): one honest measurement
+    rng = np.random.default_rng(13)
+    reqs = []
+    for i in range(PROC_CHAOS_REQUESTS):
+        plen = int(rng.integers(MIX_PROMPT_MIN, MIX_PROMPT_MAX + 1))
+        new = int(rng.integers(MIX_NEW_MIN, MIX_NEW_MAX + 1))
+        reqs.append(Request(rng.integers(2, SERVE_VOCAB, plen)
+                            .astype(np.int32), max_new_tokens=new, id=i))
+    spec = WorkerSpec(
+        model=model_config_to_dict(model.cfg),
+        serve=ServeConfig(max_slots=SLOTS, max_seq=MIX_MAX_SEQ,
+                          backend="ref").to_dict(),
+        seed=0, quantize_bits=BITS, blc_epochs=1, max_rank=16,
+        prefill_chunk=MIX_CHUNK)
+
+    def sup_cfg():
+        return SupervisorConfig(replicas=PROC_CHAOS_REPLICAS,
+                                prefill_chunk=MIX_CHUNK,
+                                backoff_base_s=0.01, backoff_jitter=0.0)
+
+    # no-fault process run: the bitwise oracle AND the overhead baseline
+    t0 = time.perf_counter()
+    with Supervisor(cfg=sup_cfg(), fleet="procs",
+                    worker_spec=spec) as sup:
+        base = sup.serve(reqs)
+    nofault_wall = time.perf_counter() - t0
+    if not base.zero_drops or set(base.status_counts()) != {"ok"}:
+        raise RuntimeError(f"no-fault process fleet invalid: "
+                           f"{dict(base.status_counts())}")
+    oracle = {o.id: o.tokens for o in base.outcomes}
+
+    fault_walls, replayed_fracs = [], []
+    for _ in range(repeats):
+        streams = {}
+        resumed_tokens = [0]
+
+        def on_token(rid, tok, done):
+            streams.setdefault(rid, []).append(tok)
+
+        def on_replay(rid, prefix):
+            streams[rid] = list(prefix)
+            resumed_tokens[0] += len(prefix)
+        with tempfile.TemporaryDirectory() as td:
+            jp = pathlib.Path(td) / "wal.journal"
+            replayed = 0
+            t0 = time.perf_counter()
+            sup = Supervisor(cfg=sup_cfg(), fleet="procs", worker_spec=spec,
+                             journal=Journal(jp), on_token=on_token,
+                             fault_plan=FaultPlan.parse(PROC_CHAOS_PLAN))
+            try:
+                with sup:
+                    rep = sup.serve(reqs)
+                raise RuntimeError(
+                    "supervisor_crash coordinate never fired — the "
+                    "workload no longer covers supervisor recovery")
+            except SupervisorCrash:
+                replayed += sup.replayed_emitted_tokens
+                sup2 = Supervisor(cfg=sup_cfg(), fleet="procs",
+                                  worker_spec=spec, journal=Journal(jp),
+                                  on_token=on_token, on_replay=on_replay)
+                with sup2:
+                    rep = sup2.resume()
+                # tokens that rode a resume prompt: pre-crash worker-kill
+                # salvage + journal re-admits + post-resume salvage
+                replayed += resumed_tokens[0]
+                replayed += sup2.replayed_emitted_tokens
+            wall = time.perf_counter() - t0
+        counts = rep.status_counts()
+        if not rep.zero_drops or set(counts) != {"ok"}:
+            raise RuntimeError(f"process-chaos run invalid: "
+                               f"statuses={dict(counts)}")
+        for o in rep.outcomes:
+            if o.tokens != oracle[o.id] or streams[o.id] != oracle[o.id]:
+                raise RuntimeError(
+                    f"request {o.id}: tokens/stream diverged from the "
+                    "no-fault oracle (duplicate or lost token)")
+        fault_walls.append(wall)
+        useful = rep.useful_tokens
+        replayed_fracs.append(replayed / max(replayed + useful, 1))
+
+    # journal fsync overhead: worst-case one fsync per record
+    fsync_walls = []
+    for _ in range(3):
+        with tempfile.TemporaryDirectory() as td:
+            j = Journal(pathlib.Path(td) / "wal.journal")
+            t0 = time.perf_counter()
+            for i in range(JOURNAL_RECORDS):
+                j.append({"t": "emit", "id": i % 8, "i": i, "toks": [7] * 8})
+                j.flush()
+            fsync_walls.append(time.perf_counter() - t0)
+            j.close()
+
+    f_min = float(np.min(fault_walls))
+    out = {
+        "proc_chaos_nofault_wall_min_s": round(nofault_wall, 4),
+        "proc_chaos_recovery_wall_min_s": round(f_min, 4),
+        "proc_chaos_recovery_overhead_x":
+            round(f_min / max(nofault_wall, 1e-9), 3),
+        "proc_chaos_replayed_fraction":
+            round(float(np.max(replayed_fracs)), 4),
+        "journal_fsync_us_per_record":
+            round(float(np.min(fsync_walls)) / JOURNAL_RECORDS * 1e6, 1),
+    }
+    emit("serve_throughput.proc_chaos.recovery", f_min * 1e6,
+         f"sigkill+supervisor-crash overhead "
+         f"{out['proc_chaos_recovery_overhead_x']:.2f}x vs no-fault "
+         f"process fleet, replayed {out['proc_chaos_replayed_fraction']:.1%}, "
+         f"fsync {out['journal_fsync_us_per_record']:.0f}us/record")
+    return out
+
+
 def _build():
     cfg = dataclasses.replace(
         PAPER_PROXIES["opt-proxy-25m"], n_layers=SERVE_L, d_model=SERVE_D,
@@ -595,7 +760,8 @@ def run_bench(repeats: int = 3, include_fused: bool = True,
               include_chaos: bool = True,
               include_prefix: bool = True,
               include_spec: bool = True,
-              include_multitenant: bool = True) -> dict:
+              include_multitenant: bool = True,
+              include_proc_chaos: bool = True) -> dict:
     """Measure every variant; returns the record appended to the
     BENCH_quant_time.json trajectory."""
     model, qparams, reqs = _build()
@@ -673,6 +839,13 @@ def run_bench(repeats: int = 3, include_fused: bool = True,
         mt.update(run_multitenant(model, qparams, repeats=repeats))
         emit_bench_json("quant_time", mt)
         record.update(mt)
+        record["proxy"] = workload_descriptor()
+    if include_proc_chaos:
+        pc = dict(proxy=proc_chaos_workload_descriptor(),
+                  backend=jax.default_backend(), host=host_family())
+        pc.update(run_proc_chaos(model, repeats=repeats))
+        emit_bench_json("quant_time", pc)
+        record.update(pc)
         record["proxy"] = workload_descriptor()
     return record
 

@@ -46,6 +46,15 @@ class CheckpointCorruptionError(RuntimeError):
     """A shard failed checksum/size verification at restore time."""
 
 
+def digest_bytes(payload: bytes) -> Dict[str, Any]:
+    """Manifest entry for a byte blob: sha256 + byte count. One shared
+    verification discipline: checkpoint shards and the serve journal's
+    sealed prefix (``serve.journal``) both record and re-check exactly
+    this pair before trusting bytes from disk."""
+    return dict(sha256=hashlib.sha256(payload).hexdigest(),
+                bytes=len(payload))
+
+
 def _leaf_paths(tree) -> Dict[str, Any]:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return {jax.tree_util.keystr(p): v for p, v in flat}, treedef
@@ -94,10 +103,7 @@ class Checkpointer:
                             for k, v in host_data.items()})
                 shards = {}
                 for f in sorted(tmp.glob("shard_*.npz")):
-                    payload = f.read_bytes()
-                    shards[f.name] = dict(
-                        sha256=hashlib.sha256(payload).hexdigest(),
-                        bytes=len(payload))
+                    shards[f.name] = digest_bytes(f.read_bytes())
                 (tmp / "manifest.json").write_text(json.dumps(
                     dict(step=step, leaves=meta, shards=shards,
                          time=time.time()), indent=1))

@@ -54,6 +54,20 @@ with explicit load-shedding, ``--max-restarts`` caps replica rebuilds.
 The drain-time report then includes per-request terminal status counts
 (``ok | timeout | rejected | failed``), per-replica restart counts, and
 the wasted-token fraction of the recovery work.
+
+``--fleet procs`` moves each replica into its own worker subprocess
+(``serve.worker``) behind the framed RPC transport — the fleet that
+survives SIGKILL and worker OOM. ``--journal PATH`` adds the durable
+request journal (``serve.journal``): every admit/emit/terminal is
+CRC-logged and fsynced per tick, and if the supervisor itself dies
+(``supervisor_crash@N`` in the fault plan) the launcher automatically
+builds a fresh supervisor and ``resume()``s from the journal —
+exactly-once token streams across worker AND supervisor death.
+``--heartbeat-s`` sets the idle-worker ping cadence and
+``--partition-tolerance-s`` the per-call retry budget before a
+partitioned worker is declared dead. The drain report grows a fleet
+section: per-worker restarts, journal records/bytes/replays, RPC frames
+sent/retried, and the wasted split (lost compute vs replayed-emitted).
 """
 from __future__ import annotations
 
@@ -71,9 +85,11 @@ from ..quant.apply import BACKENDS, dispatch_report
 from ..quant.stacked import quantize_model_stacked
 from ..serve.engine import Engine, Request, ServeConfig
 from ..serve.faults import FaultPlan
+from ..serve.journal import Journal
 from ..serve.kv_cache import CacheConfig
 from ..serve.scheduler import ContinuousScheduler, nearest_percentile
-from ..serve.supervisor import Supervisor, SupervisorConfig
+from ..serve.supervisor import Supervisor, SupervisorConfig, SupervisorCrash
+from ..serve.worker import WorkerSpec, model_config_to_dict
 
 
 def make_requests(rng, n, vocab, prompt_len, new_tokens, mixed: bool,
@@ -181,7 +197,22 @@ def main(argv=None):
                     help="supervisor restart cap per replica; past it the "
                          "replica is retired and its requests fail "
                          "terminally")
+    ap.add_argument("--fleet", default="inproc", choices=("inproc", "procs"),
+                    help="replica placement: in-process engines (the "
+                         "deterministic reference) or worker subprocesses "
+                         "over framed RPC (survives SIGKILL/OOM)")
+    ap.add_argument("--journal", default="",
+                    help="durable request journal path; with a "
+                         "supervisor_crash fault the launcher auto-resumes "
+                         "a fresh supervisor from it (exactly-once)")
+    ap.add_argument("--heartbeat-s", type=float, default=1.0,
+                    help="idle worker ping cadence (process fleet)")
+    ap.add_argument("--partition-tolerance-s", type=float, default=5.0,
+                    help="per-RPC retry budget before a partitioned "
+                         "worker is declared dead (process fleet)")
     args = ap.parse_args(argv)
+    if args.fleet == "procs" and not (args.replicas > 0 or args.fault_plan):
+        ap.error("--fleet procs requires the supervisor (--replicas N)")
     if args.speculative and args.scheduler != "continuous" \
             and not (args.replicas > 0 or args.fault_plan):
         ap.error("--speculative requires --scheduler continuous (or the "
@@ -193,19 +224,22 @@ def main(argv=None):
     if args.no_scan:
         model = model.with_scan(False)
     key = jax.random.PRNGKey(0)
-    params = model.init(key)
-
-    if args.quantize:
-        t0 = time.time()
-        data = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=128,
-                                          global_batch=4))
-        params, stats = quantize_model_stacked(
-            params, None,
-            FLRQConfig(bits=args.quantize,
-                       blc_epochs=2 if args.quantize > 2 else 8))
-        ranks = [s.rank for v in stats.values() for s in v]
-        print(f"FLRQ-W{args.quantize}: {len(ranks)} matrices, "
-              f"avg rank {np.mean(ranks):.1f}, {time.time()-t0:.1f}s")
+    params = None
+    if args.fleet == "inproc":
+        # a process fleet never touches launcher-side params: each worker
+        # rebuilds (and re-quantizes) deterministically from its spec seed
+        params = model.init(key)
+        if args.quantize:
+            t0 = time.time()
+            data = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=128,
+                                              global_batch=4))
+            params, stats = quantize_model_stacked(
+                params, None,
+                FLRQConfig(bits=args.quantize,
+                           blc_epochs=2 if args.quantize > 2 else 8))
+            ranks = [s.rank for v in stats.values() for s in v]
+            print(f"FLRQ-W{args.quantize}: {len(ranks)} matrices, "
+                  f"avg rank {np.mean(ranks):.1f}, {time.time()-t0:.1f}s")
 
     rng = np.random.default_rng(0)
     reqs = make_requests(rng, args.requests, cfg.vocab, args.prompt_len,
@@ -221,7 +255,7 @@ def main(argv=None):
         backend=args.backend, interpret=args.interpret or None,
         speculative=args.speculative, draft_rank=args.draft_rank,
         spec_k=args.spec_k, spec_adaptive=args.spec_adaptive)
-    eng = Engine(model, params, scfg)
+    eng = Engine(model, params, scfg) if args.fleet == "inproc" else None
 
     def cache_report(engine):
         s = engine.cache_backend.stats()
@@ -256,20 +290,53 @@ def main(argv=None):
         # fault-tolerant fleet: N replicas behind one shared admission
         # queue, supervised restart, zero dropped requests
         plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
+        sup_cfg = SupervisorConfig(
+            replicas=max(1, args.replicas),
+            prefill_chunk=args.prefill_chunk,
+            max_restarts=args.max_restarts,
+            queue_cap=args.queue_cap or None,
+            heartbeat_s=args.heartbeat_s,
+            partition_tolerance_s=args.partition_tolerance_s)
         fleet = []
-
-        def factory():
-            fleet.append(Engine(model, params, scfg))
-            return fleet[-1]
-        sup = Supervisor(
-            factory,
-            SupervisorConfig(replicas=max(1, args.replicas),
-                             prefill_chunk=args.prefill_chunk,
-                             max_restarts=args.max_restarts,
-                             queue_cap=args.queue_cap or None),
-            fault_plan=plan)
+        factory, worker_spec = None, None
+        if args.fleet == "procs":
+            worker_spec = WorkerSpec(
+                model=model_config_to_dict(cfg), serve=scfg.to_dict(),
+                seed=0, scan=not args.no_scan,
+                quantize_bits=args.quantize,
+                prefill_chunk=args.prefill_chunk,
+                fault_plan=args.fault_plan)
+        else:
+            def factory():
+                fleet.append(Engine(model, params, scfg))
+                return fleet[-1]
         arrivals = poisson_arrivals(rng, len(reqs), args.poisson_rate)
-        report = sup.serve(reqs, arrivals)
+        resumed = 0
+        sup = Supervisor(factory, sup_cfg, fault_plan=plan,
+                         journal=Journal(args.journal) if args.journal
+                         else None,
+                         fleet=args.fleet, worker_spec=worker_spec)
+        try:
+            with sup:
+                report = sup.serve(reqs, arrivals)
+        except SupervisorCrash as e:
+            # the supervisor died; without a journal that is terminal,
+            # with one a fresh supervisor replays and drains the rest
+            if not args.journal:
+                raise
+            while True:
+                resumed += 1
+                print(f"  supervisor crashed ({e}); resuming from "
+                      f"{args.journal} (attempt {resumed})")
+                sup = Supervisor(factory, sup_cfg,
+                                 journal=Journal(args.journal),
+                                 fleet=args.fleet, worker_spec=worker_spec)
+                try:
+                    with sup:
+                        report = sup.resume()
+                    break
+                except SupervisorCrash as e2:  # crash during replay
+                    e = e2
         dt = time.time() - t0
         ok = [o for o in report.outcomes if o.status == "ok"]
         toks = sum(len(o.tokens) for o in report.outcomes)
@@ -277,25 +344,36 @@ def main(argv=None):
         p = lambda q: nearest_percentile([o.ttft_s for o in ok], q)
         print(f"{len(report.outcomes)}/{report.submitted} requests "
               f"terminal, {toks} tokens in {dt:.2f}s "
-              f"({max(1, args.replicas)} replicas, supervised)")
+              f"({max(1, args.replicas)} {args.fleet} replicas, "
+              f"supervised)")
         print("  statuses: " + " ".join(
             f"{s}={counts.get(s, 0)}"
             for s in ("ok", "timeout", "rejected", "failed")))
         print(f"  restarts: {dict(report.restarts)}; "
               f"failures={len(report.failures)}; "
               f"stragglers={report.straggler_events}; "
-              f"wasted-token fraction "
-              f"{report.wasted_token_fraction:.1%}")
+              f"wasted: compute {report.wasted_compute_fraction:.1%} + "
+              f"replayed-emitted {report.replayed_emitted_fraction:.1%} "
+              f"= {report.wasted_token_fraction:.1%}")
+        if args.fleet == "procs" or args.journal:
+            print(f"  fleet: mode={args.fleet} resumes={resumed}; "
+                  f"frames sent={report.frames_sent} "
+                  f"retried={report.frames_retried}; "
+                  f"journal records={report.journal_records} "
+                  f"bytes={report.journal_bytes} "
+                  f"replayed={report.journal_replayed} "
+                  f"fsyncs={report.journal_fsyncs}")
         print(f"  TTFT p50 {p(0.5)*1e3:.1f}ms p95 {p(0.95)*1e3:.1f}ms "
               f"(ok requests)")
         for engine in fleet[-max(1, args.replicas):]:
             cache_report(engine)
-        spec_report(*(r.scheduler for r in sup.replicas))
+        if args.fleet == "inproc":
+            spec_report(*(r.scheduler for r in sup.replicas))
         if not report.zero_drops:
             print("  WARNING: request reconciliation failed "
                   f"({len(report.outcomes)} != {report.submitted})")
             return 1
-        if args.quantize:
+        if args.quantize and args.fleet == "inproc":
             print(dispatch_report())
         return 0
     if args.scheduler == "continuous":

@@ -1,13 +1,22 @@
 """Serving runtime: slot-batched engine, continuous-batching scheduler,
-deterministic fault injection, and the multi-replica supervisor."""
+deterministic fault injection, the multi-replica supervisor (in-process
+or worker subprocesses over framed RPC), and the durable request
+journal that makes recovery exactly-once."""
 from .engine import Engine, Request, Result, ServeConfig
-from .faults import (CacheCorruptionError, Clock, FaultInjector, FaultPlan,
-                     FaultSpec, InjectedFault, VirtualClock)
+from .faults import (PROC_KINDS, CacheCorruptionError, Clock, FaultInjector,
+                     FaultPlan, FaultSpec, InjectedFault, VirtualClock)
+from .journal import Journal, JournalCorruptionError, ReplayEntry, replay_state
 from .kv_cache import (CacheBackend, CacheConfig, DenseCacheBackend,
                        PagedCacheBackend, PageExhaustionError)
 from .scheduler import (STATUSES, ContinuousScheduler, SchedResult, StepTrace,
                         bucket_sizes)
-from .supervisor import Outcome, Supervisor, SupervisorConfig, SupervisorReport
+from .supervisor import (InprocReplica, Outcome, ProcessReplica, StepEvents,
+                         Supervisor, SupervisorConfig, SupervisorCrash,
+                         SupervisorReport)
+from .transport import (FramedConnection, RPCClient, TransportConfig,
+                        TransportError, WorkerError)
+from .worker import (WorkerSpec, build_replica, model_config_from_dict,
+                     model_config_to_dict)
 
 __all__ = [
     "Engine", "Request", "Result", "ServeConfig",
@@ -16,6 +25,12 @@ __all__ = [
     "ContinuousScheduler", "SchedResult", "StepTrace", "bucket_sizes",
     "STATUSES",
     "FaultPlan", "FaultSpec", "FaultInjector", "InjectedFault",
-    "CacheCorruptionError", "Clock", "VirtualClock",
+    "CacheCorruptionError", "Clock", "VirtualClock", "PROC_KINDS",
     "Supervisor", "SupervisorConfig", "SupervisorReport", "Outcome",
+    "SupervisorCrash", "InprocReplica", "ProcessReplica", "StepEvents",
+    "Journal", "JournalCorruptionError", "ReplayEntry", "replay_state",
+    "FramedConnection", "RPCClient", "TransportConfig", "TransportError",
+    "WorkerError",
+    "WorkerSpec", "build_replica", "model_config_to_dict",
+    "model_config_from_dict",
 ]

@@ -115,6 +115,19 @@ class ServeConfig:
             self.max_seq = self.cache.max_seq
             self.donate_cache = self.cache.donate_cache
 
+    def to_dict(self) -> dict:
+        """JSON-safe serialization (every field is a primitive; the
+        nested CacheConfig flattens to a dict) — how a ``serve.worker``
+        subprocess receives its engine configuration."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        d = dict(d)
+        cache = d.pop("cache", None)
+        return cls(**d, cache=CacheConfig(**cache)
+                   if cache is not None else None)
+
     def resolve_donate(self) -> bool:
         """Whether the cache-threading executables donate their cache
         argument. ``None`` resolves from the backend ONCE (in

@@ -85,7 +85,20 @@ class VirtualClock(Clock):
 
 # ----------------------------------------------------------------- plan
 KINDS = ("exception", "corrupt_cache", "straggler")
-SITES = ("step", "prefill", "decode", "verify", "checkpoint")
+# process-level kinds (cross-process fleet; driven SUPERVISOR-side so a
+# chaos replay is deterministic — the worker never rolls its own dice):
+#   sigkill          — SIGKILL the worker process (inproc: hard failure)
+#   sigterm          — SIGTERM: graceful drain (finish assigned work,
+#                      reject new submits, exit 0)
+#   partition        — drop the next ``arg`` RPC attempts in transport
+#                      (alternating request-lost / reply-lost)
+#   slowpipe         — stall the next RPC by ``arg`` seconds
+#   supervisor_crash — the supervisor itself dies at tick ``step``
+#                      (journal flushed first: a SIGKILL mid-fsync is the
+#                      torn-tail test's job, not this coordinate's)
+PROC_KINDS = ("sigkill", "sigterm", "partition", "slowpipe",
+              "supervisor_crash")
+SITES = ("step", "prefill", "decode", "verify", "checkpoint", "transport")
 # random mode never draws corrupt_cache: a corruption landing on a free
 # slot is unobservable, and a silent fault would make the chaos suite
 # vacuous for that draw.
@@ -107,11 +120,13 @@ class FaultSpec:
     replica: int = 0
     delay_s: float = 0.0
     slot: int = 0
+    arg: float = 0.0            # partition: RPC attempts to drop;
+                                # slowpipe: stall seconds
 
     def __post_init__(self):
-        if self.kind not in KINDS:
+        if self.kind not in KINDS + PROC_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r} "
-                             f"(one of {KINDS})")
+                             f"(one of {KINDS + PROC_KINDS})")
         if self.site not in SITES:
             raise ValueError(f"unknown fault site {self.site!r} "
                              f"(one of {SITES})")
@@ -122,9 +137,16 @@ class FaultPlan:
 
     ``parse`` accepts the CLI format: comma-separated
     ``kind@step[:site[:replica[:arg]]]`` entries, where ``arg`` is the
-    straggler delay (seconds) or the corruption slot — e.g.
-    ``exception@3:decode:0,straggler@5:step:1:2.0``. Random mode rides
-    as ``random@seed:rate:n`` (rate in [0,1], n = max faults drawn)."""
+    straggler/slowpipe delay (seconds), the corruption slot, or the
+    partition's dropped-attempt count — e.g.
+    ``exception@3:decode:0,straggler@5:step:1:2.0``,
+    ``sigkill@8:step:0,partition@4:transport:1:4,supervisor_crash@12``.
+    Process-level kinds (``PROC_KINDS``) pin to the same grammar:
+    ``step`` counts the replica's lifetime step *attempts* for worker
+    kinds and the supervisor's tick for ``supervisor_crash`` (whose
+    replica defaults to -1 — the supervisor's own coordinate space).
+    Random mode rides as ``random@seed:rate:n`` (rate in [0,1], n = max
+    faults drawn)."""
 
     def __init__(self, faults: Sequence[FaultSpec] = (),
                  seed: Optional[int] = None, rate: float = 0.0,
@@ -157,17 +179,36 @@ class FaultPlan:
                 n_random = int(fields[2]) if len(fields) > 2 else 1
                 continue
             kw = dict(kind=head, step=int(fields[0]))
+            if head in ("partition", "slowpipe"):
+                kw["site"] = "transport"
+            elif head in PROC_KINDS:
+                kw["site"] = "step"
+            if head == "supervisor_crash":
+                kw["replica"] = -1
             if len(fields) > 1:
                 kw["site"] = fields[1]
             if len(fields) > 2:
                 kw["replica"] = int(fields[2])
             if len(fields) > 3:
-                if head == "straggler":
+                if head in ("straggler", "slowpipe"):
                     kw["delay_s"] = float(fields[3])
+                elif head == "partition":
+                    kw["arg"] = float(fields[3])
                 else:
                     kw["slot"] = int(fields[3])
             faults.append(FaultSpec(**kw))
         return cls(faults, seed=seed, rate=rate, n_random=n_random)
+
+    def proc_faults(self, replica: int) -> List[FaultSpec]:
+        """Worker-process-level specs for one replica — driven by the
+        supervisor before the replica's step, never by the worker."""
+        return [f for f in self.faults
+                if f.kind in PROC_KINDS and f.kind != "supervisor_crash"
+                and f.replica == replica]
+
+    def supervisor_crashes(self) -> List[FaultSpec]:
+        """``supervisor_crash`` specs (tick-coordinate, replica -1)."""
+        return [f for f in self.faults if f.kind == "supervisor_crash"]
 
 
 class FaultInjector:
@@ -183,7 +224,11 @@ class FaultInjector:
         self.clock = clock
         self.step = -1             # advanced by begin_step()
         self.fired: List[FaultSpec] = []
-        self._pending = [f for f in plan.faults if f.replica == replica]
+        # engine-level kinds only: PROC_KINDS are driven supervisor-side
+        # (a worker rebuilt after a sigkill gets a fresh injector whose
+        # step offset the supervisor sets — see serve.worker)
+        self._pending = [f for f in plan.faults
+                         if f.replica == replica and f.kind in KINDS]
         self._rng = (np.random.default_rng(
             np.random.SeedSequence([plan.seed, replica + 1]))
             if plan.seed is not None else None)

@@ -1,0 +1,234 @@
+"""Durable request journal: the supervisor's write-ahead log.
+
+PR 6's exactly-once guarantee lived in the in-memory ``_Book`` — it died
+with the supervisor. This journal makes that bookkeeping durable enough
+to survive a supervisor SIGKILL:
+
+  * **Append-only, CRC-per-record** — each record is a JSON object in
+    the same ``<u32 len><u32 crc32>`` framing as ``serve.transport``;
+    appends buffer in the file object and ``flush()`` (called once per
+    supervisor tick) does one write + fsync, so durability costs one
+    syscall batch per tick, not per token.
+  * **Torn-tail truncation** — a crash mid-append leaves a partial or
+    CRC-broken record at the tail. Opening the journal scans it, keeps
+    the longest valid prefix, truncates the rest (counted, never
+    silent), and raises ``JournalCorruptionError`` only for corruption
+    *inside* the valid region (a bad CRC followed by good records means
+    disk damage, not a torn write).
+  * **Sealed manifest** — ``seal()`` writes ``<path>.manifest.json``
+    with the sha256 + byte count of the log prefix (the
+    ``checkpoint.checkpointer.digest_bytes`` discipline). Re-opening
+    verifies the sealed prefix before trusting it; records past the seal
+    are covered by their per-record CRCs.
+
+Record types (all carry ``"t"``):
+
+    {"t": "admit", "id", "prompt": [...], "new", "dl", "arr"}
+    {"t": "emit",  "id", "i": first_index, "toks": [...]}
+    {"t": "term",  "id", "st": "ok|timeout|rejected|failed"}
+
+``replay_state`` folds a record list into per-request recovery state:
+prompt, emitted prefix, terminal status (or None). Emit records are
+idempotent under replay — an overlap re-delivers the same tokens at the
+same indices (verified; a mismatch or a gap is corruption). On recovery
+the supervisor re-admits every non-terminal request as
+``prompt + emitted`` — greedy decode then continues the token stream
+bitwise-identically, and clients are re-synced with the journaled prefix
+via ``on_replay`` (exactly-once across supervisor death).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import struct
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+from ..checkpoint.checkpointer import digest_bytes
+
+_REC = struct.Struct("<II")
+
+
+class JournalCorruptionError(RuntimeError):
+    """The journal's valid region (sealed prefix, or records before the
+    tail) failed verification — refusing to rebuild serving state from
+    corrupt bookkeeping."""
+
+
+def encode_record(rec: dict) -> bytes:
+    payload = json.dumps(rec, separators=(",", ":")).encode()
+    return _REC.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def scan_records(data: bytes) -> Tuple[List[dict], int]:
+    """Parse the longest valid record prefix of ``data``; returns
+    (records, good_end). A partial/CRC-broken record at the very tail is
+    a torn write (good_end stops before it); the same breakage followed
+    by MORE parseable bytes would also stop there — the caller decides
+    whether that region was sealed (corruption) or tail (truncate)."""
+    records: List[dict] = []
+    off = 0
+    n = len(data)
+    while off + _REC.size <= n:
+        length, crc = _REC.unpack_from(data, off)
+        end = off + _REC.size + length
+        if length > (1 << 26) or end > n:
+            break
+        payload = data[off + _REC.size:end]
+        if zlib.crc32(payload) != crc:
+            break
+        try:
+            records.append(json.loads(payload))
+        except json.JSONDecodeError:
+            break
+        off = end
+    return records, off
+
+
+class Journal:
+    """Append handle + recovery scan over one journal file.
+
+    Opening an existing journal IS the recovery: the constructor
+    verifies the sealed manifest (if any), scans records, truncates a
+    torn tail in place, and leaves the parsed records in ``recovered``
+    for ``Supervisor.resume``."""
+
+    def __init__(self, path, *, fsync: bool = True):
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.fsync = fsync
+        self.truncated_bytes = 0
+        self.fsyncs = 0
+        self._dirty = False
+        data = self.path.read_bytes() if self.path.exists() else b""
+        sealed = self._verify_manifest(data)
+        self.recovered, good_end = scan_records(data)
+        if good_end < sealed:
+            raise JournalCorruptionError(
+                f"{self.path}: record breakage at byte {good_end} inside "
+                f"the sealed prefix ({sealed} bytes) — manifest says those "
+                "bytes were durable; this is corruption, not a torn tail")
+        if good_end < len(data):
+            self.truncated_bytes = len(data) - good_end
+            with open(self.path, "r+b") as f:
+                f.truncate(good_end)
+        self.records = len(self.recovered)
+        self.bytes = good_end
+        self._fp = open(self.path, "ab")
+
+    @property
+    def manifest_path(self) -> pathlib.Path:
+        return self.path.with_name(self.path.name + ".manifest.json")
+
+    def _verify_manifest(self, data: bytes) -> int:
+        """Returns the sealed byte count (0 if never sealed). The sealed
+        prefix must be present and hash-identical."""
+        mp = self.manifest_path
+        if not mp.exists():
+            return 0
+        try:
+            manifest = json.loads(mp.read_text())
+        except json.JSONDecodeError as e:
+            raise JournalCorruptionError(
+                f"{mp}: unreadable manifest: {e}") from e
+        sealed = int(manifest.get("bytes", 0))
+        if len(data) < sealed:
+            raise JournalCorruptionError(
+                f"{self.path}: journal shorter than its sealed manifest "
+                f"({len(data)} < {sealed} bytes)")
+        got = digest_bytes(data[:sealed])
+        if got["sha256"] != manifest.get("sha256"):
+            raise JournalCorruptionError(
+                f"{self.path}: sealed prefix failed sha256 verification "
+                "— refusing to rebuild state from corrupt bookkeeping")
+        return sealed
+
+    # -------------------------------------------------------------- writing
+    def append(self, rec: dict) -> None:
+        data = encode_record(rec)
+        self._fp.write(data)
+        self.records += 1
+        self.bytes += len(data)
+        self._dirty = True
+
+    def flush(self) -> None:
+        """One write + fsync for everything appended since the last
+        flush — the supervisor calls this once per tick, so the fsync
+        cost amortizes over the tick's token batch."""
+        if not self._dirty:
+            return
+        self._fp.flush()
+        if self.fsync:
+            os.fsync(self._fp.fileno())
+            self.fsyncs += 1
+        self._dirty = False
+
+    def seal(self) -> None:
+        """Flush, then record the durable prefix's digest in the
+        manifest (tmp + rename: a crash mid-seal keeps the old one)."""
+        self.flush()
+        tmp = self.manifest_path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            dict(records=self.records,
+                 **digest_bytes(self.path.read_bytes()))))
+        tmp.rename(self.manifest_path)
+
+    def close(self, *, seal: bool = True) -> None:
+        """``seal=False`` closes without writing a manifest — modelling a
+        writer that died before its clean shutdown."""
+        if not self._fp.closed:
+            if seal:
+                self.seal()
+            else:
+                self.flush()
+            self._fp.close()
+
+
+@dataclasses.dataclass
+class ReplayEntry:
+    """Recovered per-request state."""
+    prompt: List[int]
+    max_new_tokens: int
+    deadline_s: Optional[float]
+    arrival: float
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    status: Optional[str] = None
+
+
+def replay_state(records: List[dict]) -> Dict[int, ReplayEntry]:
+    """Fold journal records into per-request recovery state. Emit
+    overlaps (same tokens re-journaled at the same indices) are
+    idempotent; a token mismatch or an index gap is corruption."""
+    state: Dict[int, ReplayEntry] = {}
+    for rec in records:
+        t = rec.get("t")
+        if t == "admit":
+            state[rec["id"]] = ReplayEntry(
+                prompt=list(rec["prompt"]),
+                max_new_tokens=int(rec["new"]),
+                deadline_s=rec.get("dl"),
+                arrival=float(rec.get("arr", 0.0)))
+        elif t == "emit":
+            e = state.get(rec["id"])
+            if e is None:
+                raise JournalCorruptionError(
+                    f"emit for unknown request {rec['id']}")
+            i0, toks = int(rec["i"]), list(rec["toks"])
+            if i0 > len(e.emitted):
+                raise JournalCorruptionError(
+                    f"request {rec['id']}: emit gap (have "
+                    f"{len(e.emitted)} tokens, record starts at {i0})")
+            overlap = len(e.emitted) - i0
+            if e.emitted[i0:] != toks[:overlap]:
+                raise JournalCorruptionError(
+                    f"request {rec['id']}: emit overlap mismatch at {i0}")
+            e.emitted.extend(toks[overlap:])
+        elif t == "term":
+            e = state.get(rec["id"])
+            if e is None:
+                raise JournalCorruptionError(
+                    f"terminal status for unknown request {rec['id']}")
+            e.status = rec["st"]
+    return state

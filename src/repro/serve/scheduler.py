@@ -87,7 +87,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter, deque
-from typing import Callable, Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -361,6 +361,13 @@ class ContinuousScheduler:
         computed here that a resume must recompute."""
         return [(s.arrival, s.req, list(s.tokens), s.pos)
                 for s in self._slots if s.state != _FREE]
+
+    def progress(self) -> Dict[int, int]:
+        """Prompt positions prefilled per admitted request — the compact
+        form of ``inflight`` a process worker ships in every step reply
+        so the supervisor can account wasted work for a replica it can
+        no longer query (SIGKILL leaves nothing to ask)."""
+        return {s.req.id: s.pos for s in self._slots if s.state != _FREE}
 
     def _terminal(self, req: Request, arrival: float, status: str,
                   now: Optional[float] = None) -> SchedResult:

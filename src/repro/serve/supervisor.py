@@ -2,32 +2,43 @@
 admission queue, with supervised restart and zero dropped requests.
 
 The scheduler (``serve.scheduler``) made one engine continuous; this
-module makes a fleet of them survivable. One deterministic thread drives
-every replica's ``step()`` round-robin, so a chaos test with a virtual
-clock replays bit-identically — there is no race to lose a request in.
+module makes a fleet of them survivable — and, since the cross-process
+fleet, survivable *across address spaces*. One deterministic loop drives
+every replica's ``step()`` round-robin behind one replica interface with
+two implementations:
+
+  * **InprocReplica** — the PR 6 fleet: engine + scheduler objects in
+    the supervisor's process. A chaos test with a virtual clock replays
+    bit-identically — there is no race to lose a request in.
+  * **ProcessReplica** — a ``serve.worker`` subprocess driven over the
+    framed RPC transport (``serve.transport``): spawn, heartbeat-over-
+    transport health, EOF/exit crash detection, capped-backoff respawn.
+    SIGKILL is survivable *by construction*: the worker holds no
+    authoritative state — emitted tokens live in the supervisor's book
+    (and journal), and a respawned worker rebuilds params
+    deterministically from the spec seed.
 
 Failure model and recovery:
 
   * A replica **fails** when its step raises — a real exception, an
-    injected one (``serve.faults``), or the scheduler's NaN guard
-    refusing to sample from a corrupted cache. The supervisor salvages
+    injected one (``serve.faults``), the scheduler's NaN guard, a
+    ``WorkerError`` reported over a healthy pipe, or a
+    ``TransportError`` (the pipe itself died). The supervisor salvages
     exactly what the replica held: queued requests re-enter the shared
     queue unchanged; **in-flight requests are re-admitted as
     ``prompt + tokens_emitted_so_far``** — greedy decode makes the
     continuation bitwise-identical to an uninterrupted run, and because
     the already-emitted tokens ride in the resume *prompt*, replay can
     never re-stream them (exactly-once streaming by construction). A
-    replica killed mid-speculative-window salvages at the last
-    *accepted* token: draft tokens only enter ``tokens_emitted`` after
-    the verify pass confirms them, so a kill at the verify step (fault
-    site ``verify``) resumes from exactly the non-speculative state.
+    SIGKILLed worker cannot be queried, so the process replica keeps a
+    supervisor-side assignment table (admission + progress hints from
+    every step reply) as its salvage source.
   * The replica is **rebuilt** after a seeded exponential backoff
-    (``distributed.fault.backoff_delay``): a fresh cache via
-    ``CacheBackend.start`` (inside ``scheduler.start`` — the paged
-    backend rebuilds its page pool, page tables and prefix trie from
-    scratch, and shared prefixes re-pin as the salvaged requests
-    re-prefill), optionally reloading params from the checksum-verified
-    latest checkpoint.
+    (``distributed.fault.backoff_delay``): in-process, a fresh cache via
+    ``scheduler.start`` (optionally reloading params from the
+    checksum-verified latest checkpoint); cross-process, a fresh worker
+    spawn — the ``start`` RPC carries the replica's lifetime step count
+    so one-shot fault coordinates never re-trip after a respawn.
   * **Caps are terminal, never silent**: a replica exceeding
     ``max_restarts`` is retired from the fleet; a request re-admitted
     more than ``max_request_replays`` times (a poison pill that keeps
@@ -35,21 +46,42 @@ Failure model and recovery:
     it had; if every replica is dead, all remaining requests fail
     visibly. Every submitted request ends ``ok | timeout | rejected |
     failed`` — the report reconciles counts to zero drops.
+  * **Durability** (``serve.journal``): with a journal wired, every
+    admit, emitted-token batch and terminal status is CRC-logged and
+    fsynced once per tick. If the *supervisor* dies (simulated by the
+    ``supervisor_crash`` fault kind, which flushes then raises
+    ``SupervisorCrash``), a fresh supervisor's ``resume()`` replays the
+    journal: terminal requests keep their outcomes, non-terminal ones
+    re-admit as ``prompt + journaled emitted`` (bitwise-identical
+    continuation), and clients re-sync via ``on_replay(id, prefix)`` —
+    token streams stay exactly-once across worker AND supervisor death.
   * **Health**: every replica step feeds
-    ``distributed.fault.HealthMonitor.heartbeat``; its ``check`` flags
-    stragglers from step-time quantiles (deterministic under the virtual
-    clock via ``step_cost_s``), and ``restart_stragglers`` routes them
-    through the same salvage-and-restart path as a crash.
+    ``distributed.fault.HealthMonitor.heartbeat`` (idle process workers
+    are pinged every ``heartbeat_s``); ``check`` flags stragglers from
+    step-time quantiles, and ``restart_stragglers`` routes them through
+    the same salvage-and-restart path as a crash.
+
+Wasted-work accounting is split honestly: ``wasted_compute_tokens``
+(prompt positions prefilled on a dead replica — genuinely lost forward
+passes) vs ``replayed_emitted_tokens`` (tokens already journaled/
+streamed that merely ride the resume prompt — recovery cost, not lost
+output). ``wasted_tokens`` keeps the legacy sum.
 
 Admission control lives at the shared queue: per-request ``deadline_s``
 is enforced while queued (timeout before ever occupying a slot) and the
 remaining budget rides into the replica for mid-flight expiry;
 ``queue_cap`` bounds arrived-but-unserved requests with explicit
-``rejected`` load-shedding.
+``rejected`` load-shedding. A worker draining after SIGTERM refuses new
+submits — the supervisor re-routes them and retires the worker once its
+assigned work completes (exit 0, no failure counted).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
+import subprocess
+import sys
 from collections import Counter, deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -57,8 +89,19 @@ import numpy as np
 
 from ..distributed.fault import HealthMonitor, backoff_delay
 from .engine import Engine, Request
-from .faults import Clock, FaultPlan
+from .faults import Clock, FaultPlan, FaultSpec, InjectedFault, VirtualClock
+from .journal import Journal, replay_state
 from .scheduler import ContinuousScheduler
+from .transport import (FramedConnection, RPCClient, TransportConfig,
+                        TransportError)
+
+
+class SupervisorCrash(RuntimeError):
+    """Injected supervisor death (the ``supervisor_crash`` fault kind):
+    the journal is flushed, every worker process is killed (a real
+    supervisor SIGKILL takes its process group down), and this
+    propagates out of ``serve()``. Recovery is a NEW supervisor calling
+    ``resume()`` on the same journal."""
 
 
 @dataclasses.dataclass
@@ -79,6 +122,13 @@ class SupervisorConfig:
                                     # straggler/deadline tests deterministic
                                     # under a VirtualClock (0 = real timing)
     ckpt_every: int = 0             # checkpoint params every N ticks (0=off)
+    # --- cross-process fleet -----------------------------------------------
+    call_timeout_s: float = 30.0    # per-RPC-attempt recv deadline
+    partition_tolerance_s: float = 5.0  # retryable-failure budget per call;
+                                    # past it the worker is declared dead
+    heartbeat_s: float = 1.0        # idle-worker ping cadence
+    spawn_timeout_s: float = 300.0  # worker build+compile budget (the
+                                    # ``start`` RPC's recv deadline)
 
 
 @dataclasses.dataclass
@@ -102,8 +152,17 @@ class SupervisorReport:
     failures: List[Tuple[int, str]]     # (replica, exception repr)
     straggler_events: int
     ckpt_failures: int
-    wasted_tokens: int                  # positions recomputed after failures
+    wasted_compute_tokens: int          # positions genuinely lost to failures
+    replayed_emitted_tokens: int        # journaled/streamed tokens that rode
+                                        # a resume prompt (recovery cost, not
+                                        # lost output)
     useful_tokens: int                  # prompt + generated across outcomes
+    journal_records: int = 0
+    journal_bytes: int = 0
+    journal_replayed: int = 0           # records replayed by resume()
+    journal_fsyncs: int = 0
+    frames_sent: int = 0                # RPC frames (process fleet)
+    frames_retried: int = 0             # retried call attempts
 
     def status_counts(self) -> Counter:
         return Counter(o.status for o in self.outcomes)
@@ -115,9 +174,26 @@ class SupervisorReport:
             len({o.id for o in self.outcomes}) == self.submitted
 
     @property
+    def wasted_tokens(self) -> int:
+        """Legacy aggregate: every position recomputed after failures."""
+        return self.wasted_compute_tokens + self.replayed_emitted_tokens
+
+    @property
     def wasted_token_fraction(self) -> float:
         total = self.wasted_tokens + self.useful_tokens
         return self.wasted_tokens / total if total else 0.0
+
+    @property
+    def wasted_compute_fraction(self) -> float:
+        """Genuinely lost forward passes as a fraction of all computed
+        positions — the honest recovery-cost gate."""
+        total = self.wasted_tokens + self.useful_tokens
+        return self.wasted_compute_tokens / total if total else 0.0
+
+    @property
+    def replayed_emitted_fraction(self) -> float:
+        total = self.wasted_tokens + self.useful_tokens
+        return self.replayed_emitted_tokens / total if total else 0.0
 
 
 @dataclasses.dataclass
@@ -129,42 +205,399 @@ class _Book:
     first_token_t: float = -1.0
     replays: int = 0
     done: bool = False
+    base_emitted: int = 0       # len(emitted) at the last dispatch — the
+                                # split between replayed-emitted and
+                                # this-incarnation tokens
 
 
-class _Replica:
-    def __init__(self, rid: int, engine: Engine,
-                 scheduler: ContinuousScheduler):
+@dataclasses.dataclass
+class StepEvents:
+    """One replica step's observable output, fleet-agnostic."""
+    progressed: bool = False
+    events: List[Tuple[int, int, bool]] = \
+        dataclasses.field(default_factory=list)    # (req_id, tok, done)
+    results: List[Tuple[int, str]] = \
+        dataclasses.field(default_factory=list)    # (req_id, status)
+    draining: bool = False
+    exiting: bool = False
+
+
+class InprocReplica:
+    """PR 6 replica: engine + scheduler in the supervisor's process.
+    Token events buffer replica-side and drain through ``step()`` /
+    ``take_pending()`` — the same ingestion surface a process worker's
+    step reply provides, so the supervisor's book/journal/streaming
+    logic is fleet-agnostic."""
+
+    kind = "inproc"
+
+    def __init__(self, rid: int, engine: Engine, cfg: SupervisorConfig,
+                 clock: Clock, plan: Optional[FaultPlan]):
         self.id = rid
         self.engine = engine
-        self.scheduler = scheduler
+        inj = plan.injector(rid, clock) if plan else None
+        self.scheduler = ContinuousScheduler(
+            engine, prefill_chunk=cfg.prefill_chunk,
+            on_token=self._buffer, clock=clock, faults=inj, nan_guard=True)
         self.alive = True
-        self.dead = False           # restart cap exhausted
+        self.dead = False           # restart cap exhausted (or retired)
+        self.accepting = True
         self.restarts = 0
         self.restart_at = 0.0
-        self.consumed = 0           # scheduler results already collected
+        self.steps_taken = 0        # lifetime step attempts (never reset)
+        self.frames_sent = 0
+        self.frames_retried = 0
+        self._events: List[Tuple[int, int, bool]] = []
+        self._consumed = 0
+        self._draining = False
+
+    def _buffer(self, req_id: int, tok: int, done: bool) -> None:
+        self._events.append((req_id, tok, done))
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        self.scheduler.start()
+        self._events = []
+        self._consumed = 0
+        self.accepting = not self._draining
+
+    @property
+    def max_seq(self) -> int:
+        return self.engine.cfg.max_seq
+
+    @property
+    def eos_token(self) -> int:
+        return self.engine.cfg.eos_token
+
+    @property
+    def free_slots(self) -> int:
+        return self.scheduler.free_slots
+
+    @property
+    def done(self) -> bool:
+        return self.scheduler.done
+
+    def has_arrived_work(self) -> bool:
+        return self.scheduler.has_arrived_work()
+
+    def submit(self, req: Request) -> bool:
+        if not self.accepting:
+            return False
+        return self.scheduler.submit(req)
+
+    def step(self) -> StepEvents:
+        self.steps_taken += 1
+        progressed = self.scheduler.step()
+        ev = self.take_pending()
+        ev.progressed = progressed
+        ev.draining = self._draining
+        ev.exiting = self._draining and self.scheduler.done
+        return ev
+
+    def take_pending(self) -> StepEvents:
+        """Buffered events + uncollected results — everything observable
+        that survived a mid-step raise (tokens emitted and requests
+        retired before the exception)."""
+        events, self._events = self._events, []
+        results = self.scheduler.results[self._consumed:]
+        self._consumed = len(self.scheduler.results)
+        return StepEvents(events=events,
+                          results=[(r.id, r.status) for r in results])
+
+    def idle_beat(self, now: float, monitor: HealthMonitor) -> None:
+        pass                        # same process: liveness is trivial
+
+    def salvage(self) -> List[Tuple[int, bool, int]]:
+        """(req_id, was_inflight, prompt_pos) for everything held."""
+        out = [(req.id, False, 0) for _, req in self.scheduler.pending()]
+        out += [(req.id, True, pos)
+                for _, req, _toks, pos in self.scheduler.inflight()]
+        return out
+
+    # ------------------------------------------------------- fault driving
+    def inject_kill(self) -> None:
+        pass                        # the supervisor raises the failure
+
+    def inject_sigterm(self) -> None:
+        self._draining = True
+        self.accepting = False
+
+    def arm_partition(self, n_calls: int) -> None:
+        raise ValueError("partition faults need a process fleet "
+                         "(fleet='procs'): there is no transport to drop "
+                         "frames on in-process")
+
+    def arm_slowpipe(self, delay_s: float) -> None:
+        raise ValueError("slowpipe faults need a process fleet "
+                         "(fleet='procs')")
+
+    def retire(self) -> None:
+        self.alive = False
+        self.dead = True
+
+    def hard_kill(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class ProcessReplica:
+    """A ``serve.worker`` subprocess behind the framed RPC transport.
+
+    The worker holds no authoritative request state: this handle keeps
+    an assignment table (request id -> admitted?, prompt-progress hint)
+    updated from every step reply, which is the salvage source when the
+    process dies unqueryably (SIGKILL, OOM). Respawn = spawn a fresh
+    process (params rebuild deterministically from the spec seed) and
+    ``start`` it with the lifetime step offset."""
+
+    kind = "procs"
+
+    def __init__(self, rid: int, spec, cfg: SupervisorConfig):
+        self.id = rid
+        self.spec = dataclasses.replace(spec, replica=rid)
+        self.cfg = cfg
+        self.proc: Optional[subprocess.Popen] = None
+        self.client: Optional[RPCClient] = None
+        self.alive = True
+        self.dead = False
+        self.accepting = True
+        self.restarts = 0
+        self.restart_at = 0.0
+        self.steps_taken = 0
+        self.assigned: Dict[int, List] = {}     # id -> [admitted, pos]
+        self._last_beat = 0.0
+        self._frames_base = 0
+        self._retries_base = 0
+        self._armed_partition = 0
+        self._armed_slowpipe = 0.0
+        serve = self.spec.serve
+        self.max_seq = int(serve["cache"]["max_seq"]
+                           if serve.get("cache") else serve["max_seq"])
+        self.eos_token = int(serve["eos_token"])
+
+    # ------------------------------------------------------------ lifecycle
+    def _reap(self) -> None:
+        if self.proc is not None:
+            if self.client is not None:
+                self._frames_base += self.client.frames_sent
+                self._retries_base += self.client.retries
+            if self.proc.poll() is None:
+                self.proc.kill()
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                pass
+            self.proc = None
+            self.client = None
+
+    def start(self) -> None:
+        from .worker import SPEC_ENV
+        if self.proc is not None and self.proc.poll() is not None:
+            self._reap()            # crashed incarnation: reap the zombie
+        if self.proc is None:
+            env = dict(os.environ)
+            env[SPEC_ENV] = self.spec.to_json()
+            # the worker must import `repro` no matter the caller's cwd
+            src = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+            env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+            # -c (not -m): the package already imports .worker, and
+            # runpy would warn about re-executing an imported module
+            self.proc = subprocess.Popen(
+                [sys.executable, "-c",
+                 "from repro.serve.worker import main; "
+                 "raise SystemExit(main())"],
+                stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                bufsize=0, env=env)
+            self.client = RPCClient(
+                FramedConnection(self.proc.stdout.fileno(),
+                                 self.proc.stdin.fileno()),
+                TransportConfig(call_timeout_s=self.cfg.call_timeout_s,
+                                tolerance_s=self.cfg.partition_tolerance_s,
+                                backoff_base_s=min(
+                                    0.05, self.cfg.backoff_base_s or 0.05),
+                                backoff_factor=self.cfg.backoff_factor,
+                                backoff_jitter=self.cfg.backoff_jitter,
+                                seed=self.cfg.seed * 1000 + self.id))
+        try:
+            self.client.call("start",
+                             {"fault_step_offset": self.steps_taken},
+                             timeout=self.cfg.spawn_timeout_s)
+        except TransportError as e:
+            code = self.proc.poll()
+            raise TransportError(
+                f"worker {self.id} failed to start "
+                f"(exit={code}): {e}", retryable=False) from e
+        self.assigned = {}
+        self.accepting = True
+
+    @property
+    def free_slots(self) -> int:
+        slots = int(self.spec.serve["cache"]["max_slots"]
+                    if self.spec.serve.get("cache")
+                    else self.spec.serve["max_slots"])
+        # the worker admits from its own queue; the supervisor bounds
+        # assigned-but-unfinished work to the slot count so no worker
+        # hoards the shared queue
+        return max(0, slots - len(self.assigned))
+
+    @property
+    def done(self) -> bool:
+        return not self.assigned
+
+    def has_arrived_work(self) -> bool:
+        return bool(self.assigned)
+
+    def submit(self, req: Request) -> bool:
+        if not self.accepting or self.client is None:
+            return False
+        rep = self.client.call("submit", {
+            "prompt": np.asarray(req.prompt, np.int32).tolist(),
+            "new": int(req.max_new_tokens), "id": int(req.id),
+            "dl": req.deadline_s})
+        if rep.get("draining"):
+            self.accepting = False
+        if rep.get("accepted"):
+            self.assigned[req.id] = [False, 0]
+            return True
+        return False
+
+    def step(self) -> StepEvents:
+        self.steps_taken += 1
+        if self._armed_slowpipe > 0:
+            s, self._armed_slowpipe = self._armed_slowpipe, 0.0
+            self.client.arm_slowpipe(s)
+        if self._armed_partition > 0:
+            n, self._armed_partition = self._armed_partition, 0
+            self.client.arm_partition(n)
+        rep = self.client.call("step", {})
+        self._last_beat = 0.0       # forces no extra ping while stepping
+        for rid in rep.get("admitted", ()):
+            if int(rid) in self.assigned:
+                self.assigned[int(rid)][0] = True
+        for rid, pos in (rep.get("progress") or {}).items():
+            if int(rid) in self.assigned:
+                self.assigned[int(rid)][1] = int(pos)
+        results = [(int(r), str(st)) for r, st in rep.get("results", ())]
+        for rid, _st in results:
+            self.assigned.pop(rid, None)
+        if rep.get("draining"):
+            self.accepting = False
+        return StepEvents(
+            progressed=bool(rep.get("progressed")),
+            events=[(int(r), int(t), bool(d))
+                    for r, t, d in rep.get("events", ())],
+            results=results,
+            draining=bool(rep.get("draining")),
+            exiting=bool(rep.get("exiting")))
+
+    def take_pending(self) -> StepEvents:
+        # a dead process takes its un-replied step output with it; the
+        # journal/book already hold every token previously ingested
+        return StepEvents()
+
+    def idle_beat(self, now: float, monitor: HealthMonitor) -> None:
+        """Liveness for workers with nothing assigned: ping every
+        ``heartbeat_s``. A dead pipe raises out to the failure path."""
+        if self.client is None or now - self._last_beat < \
+                self.cfg.heartbeat_s:
+            return
+        self._last_beat = now
+        self.client.call("ping", {})
+        monitor.heartbeat(self.id, now=now)
+
+    def salvage(self) -> List[Tuple[int, bool, int]]:
+        out = [(rid, bool(adm), int(pos))
+               for rid, (adm, pos) in self.assigned.items()]
+        self.assigned = {}
+        return out
+
+    # ------------------------------------------------------- fault driving
+    def inject_kill(self) -> None:
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.kill()        # SIGKILL: no cleanup, no goodbye
+
+    def inject_sigterm(self) -> None:
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.send_signal(signal.SIGTERM)
+
+    def arm_partition(self, n_calls: int) -> None:
+        self._armed_partition += max(0, int(n_calls))
+
+    def arm_slowpipe(self, delay_s: float) -> None:
+        self._armed_slowpipe = max(self._armed_slowpipe, float(delay_s))
+
+    def retire(self) -> None:
+        """Graceful drain completed: the worker exited 0 on its own."""
+        self.alive = False
+        self.dead = True
+        self._reap()
+
+    def hard_kill(self) -> None:
+        self.inject_kill()
+        self._reap()
+
+    def close(self) -> None:
+        if self.proc is not None and self.proc.poll() is None \
+                and self.client is not None:
+            try:
+                self.client.call("shutdown", {}, timeout=2.0)
+            except Exception:  # noqa: BLE001 — best-effort goodbye
+                pass
+        self._reap()
+
+    @property
+    def frames_sent(self) -> int:
+        live = self.client.frames_sent if self.client is not None else 0
+        return self._frames_base + live
+
+    @property
+    def frames_retried(self) -> int:
+        live = self.client.retries if self.client is not None else 0
+        return self._retries_base + live
 
 
 class Supervisor:
-    """Drives ``cfg.replicas`` engines from one shared admission queue.
+    """Drives ``cfg.replicas`` replicas from one shared admission queue.
 
-    ``engine_factory()`` builds one Engine per replica (same model/params,
-    its own trace cache). ``fault_plan`` threads a per-replica
-    ``FaultInjector`` through each scheduler plus a host-side injector
-    (replica=-1) into the checkpointer's write path. All timing reads the
-    injectable ``clock``."""
+    In-process fleet (``fleet="inproc"``): ``engine_factory()`` builds
+    one Engine per replica (same model/params, its own trace cache).
+    Process fleet (``fleet="procs"``): ``worker_spec``
+    (``serve.worker.WorkerSpec``) describes how each worker subprocess
+    rebuilds its replica; engines live in the workers.
 
-    def __init__(self, engine_factory: Callable[[], Engine],
+    ``fault_plan`` threads engine-level faults through each replica's
+    injector and process-level kinds (``faults.PROC_KINDS``) through the
+    supervisor's own driving loop — chaos replays stay deterministic
+    because the worker never rolls its own dice. ``journal`` makes the
+    bookkeeping durable (see ``resume``); ``on_replay(id, tokens)``
+    re-syncs client streams with the journaled prefix after a recovery.
+    All timing reads the injectable ``clock`` (in-process only: worker
+    subprocesses live in real time)."""
+
+    def __init__(self, engine_factory: Optional[Callable[[], Engine]] = None,
                  cfg: SupervisorConfig = SupervisorConfig(), *,
                  on_token: Optional[Callable[[int, int, bool], None]] = None,
+                 on_replay: Optional[Callable[[int, List[int]], None]] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  clock: Optional[Clock] = None,
                  checkpointer=None,
-                 monitor: Optional[HealthMonitor] = None):
+                 monitor: Optional[HealthMonitor] = None,
+                 journal: Optional[Journal] = None,
+                 fleet: str = "inproc",
+                 worker_spec=None):
+        if fleet not in ("inproc", "procs"):
+            raise ValueError(f"fleet {fleet!r} (one of inproc|procs)")
         self.cfg = cfg
+        self.fleet = fleet
         self.clock = clock or Clock()
         self.on_token = on_token
+        self.on_replay = on_replay
         self.plan = fault_plan
         self.checkpointer = checkpointer
+        self.journal = journal
         self.monitor = monitor or HealthMonitor(
             n_hosts=cfg.replicas, timeout_s=cfg.heartbeat_timeout_s,
             straggler_factor=cfg.straggler_factor)
@@ -173,16 +606,34 @@ class Supervisor:
             if fault_plan else None
         if checkpointer is not None and self._host_faults is not None:
             checkpointer.fault_hook = self._host_faults.check
-        self.replicas: List[_Replica] = []
-        for rid in range(cfg.replicas):
-            eng = engine_factory()
-            inj = fault_plan.injector(rid, self.clock) if fault_plan else None
-            sched = ContinuousScheduler(
-                eng, prefill_chunk=cfg.prefill_chunk,
-                on_token=lambda req_id, tok, done, rid=rid:
-                    self._on_token(rid, req_id, tok, done),
-                clock=self.clock, faults=inj, nan_guard=True)
-            self.replicas.append(_Replica(rid, eng, sched))
+        if fleet == "procs":
+            if worker_spec is None:
+                raise ValueError("fleet='procs' needs a worker_spec "
+                                 "(serve.worker.WorkerSpec)")
+            if checkpointer is not None:
+                raise ValueError(
+                    "checkpointer is in-process only: process workers "
+                    "rebuild params deterministically from the spec seed")
+            if isinstance(self.clock, VirtualClock):
+                raise ValueError(
+                    "a VirtualClock cannot drive worker subprocesses "
+                    "(they live in real time)")
+            self.replicas = [ProcessReplica(rid, worker_spec, cfg)
+                             for rid in range(cfg.replicas)]
+        else:
+            if engine_factory is None:
+                raise ValueError("engine_factory is required for the "
+                                 "in-process fleet")
+            self.replicas = [
+                InprocReplica(rid, engine_factory(), cfg, self.clock,
+                              fault_plan)
+                for rid in range(cfg.replicas)]
+        # process-level fault schedule, driven supervisor-side
+        self._proc_pending: Dict[int, List[FaultSpec]] = {
+            r.id: (fault_plan.proc_faults(r.id) if fault_plan else [])
+            for r in self.replicas}
+        self._sup_pending: List[FaultSpec] = \
+            fault_plan.supervisor_crashes() if fault_plan else []
         # per-serve state
         self._book: Dict[int, _Book] = {}
         self._future: List[Tuple[float, Request]] = []
@@ -193,26 +644,37 @@ class Supervisor:
         self.failures: List[Tuple[int, str]] = []
         self.straggler_events = 0
         self.ckpt_failures = 0
-        self.wasted_tokens = 0
+        self.wasted_compute_tokens = 0
+        self.replayed_emitted_tokens = 0
+        self.journal_replayed = 0
 
-    # ------------------------------------------------------------ callbacks
-    def _on_token(self, rid: int, req_id: int, tok: int, done: bool) -> None:
-        b = self._book[req_id]
-        if b.first_token_t < 0:
-            b.first_token_t = self._now()
-        b.emitted.append(tok)
-        if self.on_token is not None:
-            # replayed tokens ride in the resume prompt, never re-emitted:
-            # the stream the user sees is exactly-once by construction
-            self.on_token(req_id, tok, done)
+    # ------------------------------------------------------------- plumbing
+    def __enter__(self) -> "Supervisor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def shutdown(self) -> None:
+        """Release worker processes (graceful shutdown RPC, then reap).
+        In-process replicas have nothing to release."""
+        for r in self.replicas:
+            r.close()
 
     def _now(self) -> float:
         return self.clock.now() - self._t0
 
+    @property
+    def _eos(self) -> int:
+        return self.replicas[0].eos_token
+
+    def _journal_add(self, rec: dict) -> None:
+        if self.journal is not None:
+            self.journal.append(rec)
+
     # -------------------------------------------------------------- serving
     def serve(self, requests: Sequence[Request],
               arrivals: Optional[Sequence[float]] = None) -> SupervisorReport:
-        cfg = self.cfg
         if arrivals is None:
             arrivals = [0.0] * len(requests)
         if len(arrivals) != len(requests):
@@ -225,10 +687,15 @@ class Supervisor:
         self._future = sorted(zip(map(float, arrivals), requests),
                               key=lambda t: t[0])
         submitted = len(requests)
-        max_seq = self.replicas[0].engine.cfg.max_seq
+        max_seq = self.replicas[0].max_seq
         valid: List[Tuple[float, Request]] = []
         for arr, req in self._future:
             self._book[req.id] = _Book(req=req, arrival=arr)
+            self._journal_add({
+                "t": "admit", "id": int(req.id),
+                "prompt": np.asarray(req.prompt).tolist(),
+                "new": int(req.max_new_tokens),
+                "dl": req.deadline_s, "arr": arr})
             need = len(req.prompt) + req.max_new_tokens
             if len(req.prompt) < 1 or req.max_new_tokens < 1 or \
                     need > max_seq:
@@ -238,33 +705,95 @@ class Supervisor:
             else:
                 valid.append((arr, req))
         self._future = valid
+        if self.journal is not None:
+            self.journal.flush()    # admits are durable before any step
+        return self._run(submitted)
+
+    def resume(self) -> SupervisorReport:
+        """Rebuild serving state from the journal after a supervisor
+        death and drain the unfinished work. Terminal requests keep their
+        journaled outcomes; non-terminal ones re-admit as
+        ``prompt + emitted`` (clients re-sync via ``on_replay``) so their
+        continuations — and the final streams — are bitwise-identical to
+        an undisturbed run, exactly-once."""
+        if self.journal is None:
+            raise ValueError("resume() requires a journal")
+        state = replay_state(self.journal.recovered)
+        self.journal_replayed = len(self.journal.recovered)
+        self._t0 = self.clock.now()
+        self._tick = 0
+        self._book = {}
+        self._outcomes = []
+        self._future = []
+        pending: List[Tuple[float, Request]] = []
+        for rid, e in state.items():
+            req = Request(prompt=np.asarray(e.prompt, np.int32),
+                          max_new_tokens=e.max_new_tokens, id=rid,
+                          deadline_s=e.deadline_s)
+            b = _Book(req=req, arrival=0.0, emitted=list(e.emitted))
+            self._book[rid] = b
+            if e.status is not None:
+                b.done = True
+                self._outcomes.append(Outcome(
+                    id=rid, tokens=list(e.emitted), status=e.status,
+                    arrival_s=e.arrival, ttft_s=0.0, finish_s=0.0,
+                    replica=-1))
+                continue
+            if self.on_replay is not None:
+                self.on_replay(rid, list(b.emitted))
+            if self._emission_complete(b):
+                # everything was emitted and journaled; only the terminal
+                # record died with the old supervisor
+                self._finish(rid, "ok", replica=-1)
+                continue
+            # deadline budget restarts at recovery: the original arrival
+            # belongs to a dead supervisor's clock frame
+            pending.append((0.0, req))
+        self._queue = deque(pending)
+        return self._run(len(state))
+
+    def _run(self, submitted: int) -> SupervisorReport:
+        cfg = self.cfg
         for r in self.replicas:
-            r.scheduler.start()
+            if not r.dead:
+                r.start()
+                r.alive = True
         if self.checkpointer is not None:
             self._checkpoint(blocking=True)
-
-        while True:
-            now = self._now()
-            self._admit_arrivals(now)
-            self._expire_queue(now)
-            if all(r.dead for r in self.replicas):
-                self._fail_everything()
-            self._dispatch(now)
-            progressed = self._step_replicas()
-            self._tick += 1
-            if self.checkpointer is not None and cfg.ckpt_every and \
-                    self._tick % cfg.ckpt_every == 0:
-                self._checkpoint(blocking=False)
-            self._health_check()
-            if self._done():
-                break
-            if not progressed:
-                self._advance_to_next_event()
+        try:
+            while True:
+                now = self._now()
+                self._admit_arrivals(now)
+                self._expire_queue(now)
+                if all(r.dead for r in self.replicas):
+                    self._fail_everything()
+                self._dispatch(now)
+                progressed = self._step_replicas()
+                self._tick += 1
+                if self.checkpointer is not None and cfg.ckpt_every and \
+                        self._tick % cfg.ckpt_every == 0:
+                    self._checkpoint(blocking=False)
+                self._health_check()
+                if self.journal is not None:
+                    self.journal.flush()
+                self._maybe_supervisor_crash()
+                if self._done():
+                    break
+                if not progressed:
+                    self._advance_to_next_event()
+        except SupervisorCrash:
+            if self.journal is not None:
+                self.journal.flush()
+            for r in self.replicas:
+                r.hard_kill()       # the process tree dies with its leader
+            raise
         if self.checkpointer is not None:
             try:
                 self.checkpointer.wait()
             except Exception:
                 self.ckpt_failures += 1
+        if self.journal is not None:
+            self.journal.seal()
         return self.report(submitted)
 
     def report(self, submitted: Optional[int] = None) -> SupervisorReport:
@@ -280,8 +809,15 @@ class Supervisor:
             failures=list(self.failures),
             straggler_events=self.straggler_events,
             ckpt_failures=self.ckpt_failures,
-            wasted_tokens=self.wasted_tokens,
-            useful_tokens=useful)
+            wasted_compute_tokens=self.wasted_compute_tokens,
+            replayed_emitted_tokens=self.replayed_emitted_tokens,
+            useful_tokens=useful,
+            journal_records=self.journal.records if self.journal else 0,
+            journal_bytes=self.journal.bytes if self.journal else 0,
+            journal_replayed=self.journal_replayed,
+            journal_fsyncs=self.journal.fsyncs if self.journal else 0,
+            frames_sent=sum(r.frames_sent for r in self.replicas),
+            frames_retried=sum(r.frames_retried for r in self.replicas))
 
     # ------------------------------------------------------ queue machinery
     def _admit_arrivals(self, now: float) -> None:
@@ -313,15 +849,18 @@ class Supervisor:
         """Shared queue -> free replica slots, FIFO by arrival, least
         loaded replica first. A replayed request resumes as
         ``prompt + emitted``; its deadline budget keeps draining across
-        incarnations."""
+        incarnations. A replica refusing a submit (draining worker) is
+        skipped; a submit whose transport dies routes through the normal
+        failure path (the killed incarnation never gets stepped again, so
+        a possibly-delivered request cannot double-serve)."""
         while self._queue:
             live = [r for r in self.replicas
-                    if r.alive and r.scheduler.free_slots > 0]
+                    if r.alive and not r.dead and r.accepting
+                    and r.free_slots > 0]
             if not live:
                 return
             arr, req = self._queue.popleft()
             b = self._book[req.id]
-            r = max(live, key=lambda rep: rep.scheduler.free_slots)
             run = req
             if b.emitted:
                 run = dataclasses.replace(
@@ -332,7 +871,22 @@ class Supervisor:
             if req.deadline_s is not None:
                 run = dataclasses.replace(
                     run, deadline_s=req.deadline_s - (now - arr))
-            r.scheduler.submit(run)
+            placed = False
+            for r in sorted(live, key=lambda rep: (-rep.free_slots,
+                                                   rep.id)):
+                try:
+                    accepted = r.submit(run)
+                except Exception as e:  # noqa: BLE001 — transport death
+                    self._ingest(r, r.take_pending())
+                    self._on_failure(r, e)
+                    continue
+                if accepted:
+                    b.base_emitted = len(b.emitted)
+                    placed = True
+                    break
+            if not placed:
+                self._queue.appendleft((arr, req))
+                return
 
     # ---------------------------------------------------------- replica ops
     def _step_replicas(self) -> bool:
@@ -342,32 +896,107 @@ class Supervisor:
                 continue
             if not r.alive:
                 if self.clock.now() >= r.restart_at:
-                    self._restart(r)
+                    try:
+                        self._restart(r)
+                    except Exception as e:  # noqa: BLE001 — spawn failed
+                        self._on_failure(r, e)
+                        progressed = True
+                        continue
                 else:
                     continue
-            if not r.scheduler.has_arrived_work():
+            if self._drive_proc_faults(r):
+                progressed = True
+                continue
+            if not r.has_arrived_work():
+                try:
+                    r.idle_beat(self.clock.now(), self.monitor)
+                except Exception as e:  # noqa: BLE001 — dead pipe
+                    self._ingest(r, r.take_pending())
+                    self._on_failure(r, e)
+                    progressed = True
                 continue
             t_a = self.clock.now()
             try:
-                if r.scheduler.step():
+                ev = r.step()
+                if ev.progressed:
                     progressed = True
+                self._ingest(r, ev)
                 if self.cfg.step_cost_s:
                     self.clock.sleep(self.cfg.step_cost_s)
                 self.monitor.heartbeat(
                     r.id, step_time_s=self.clock.now() - t_a,
                     now=self.clock.now())
-                self._collect(r)
+                if ev.exiting:
+                    r.retire()      # graceful drain done: exit 0, not a
+                                    # failure — no restart, no salvage
             except Exception as e:  # noqa: BLE001 — any step failure is a
-                self._on_failure(r, e)  # replica failure, by design
+                self._ingest(r, r.take_pending())  # replica failure,
+                self._on_failure(r, e)             # by design
                 progressed = True
         return progressed
 
-    def _collect(self, r: _Replica) -> None:
-        results = r.scheduler.results
-        while r.consumed < len(results):
-            res = results[r.consumed]
-            r.consumed += 1
-            self._finish(res.id, res.status, replica=r.id)
+    def _drive_proc_faults(self, r) -> bool:
+        """Fire due process-level fault coordinates. Returns True when
+        the replica was killed here (skip its step this tick)."""
+        due = [f for f in self._proc_pending[r.id]
+               if f.step <= r.steps_taken]
+        killed = False
+        for f in due:
+            self._proc_pending[r.id].remove(f)
+            if f.kind == "sigkill":
+                r.inject_kill()
+                if r.kind == "inproc":
+                    # no process to kill: the failure IS the injection
+                    self._ingest(r, r.take_pending())
+                    self._on_failure(r, InjectedFault(
+                        f"injected sigkill at step={f.step} "
+                        f"replica={r.id}"))
+                    killed = True
+                # process fleet: the next RPC hits EOF/EPIPE and routes
+                # through the same failure path with a real dead process
+            elif f.kind == "sigterm":
+                r.inject_sigterm()
+            elif f.kind == "partition":
+                r.arm_partition(int(f.arg) or 4)
+            elif f.kind == "slowpipe":
+                r.arm_slowpipe(f.delay_s or 0.05)
+        return killed
+
+    def _maybe_supervisor_crash(self) -> None:
+        due = [f for f in self._sup_pending if f.step <= self._tick]
+        if not due:
+            return
+        for f in due:
+            self._sup_pending.remove(f)
+        if self.journal is not None:
+            self.journal.flush()
+        raise SupervisorCrash(
+            f"injected supervisor crash at tick {self._tick}")
+
+    def _ingest(self, r, ev: Optional[StepEvents]) -> None:
+        """Fold one step's observable output into the book, the journal
+        and the client stream — in that order, per batch, so a token is
+        journal-buffered before it is streamed."""
+        if ev is None:
+            return
+        starts: Dict[int, int] = {}
+        for req_id, tok, _done in ev.events:
+            b = self._book[req_id]
+            starts.setdefault(req_id, len(b.emitted))
+            if b.first_token_t < 0:
+                b.first_token_t = self._now()
+            b.emitted.append(tok)
+        for req_id, i0 in starts.items():
+            self._journal_add({"t": "emit", "id": int(req_id), "i": i0,
+                               "toks": self._book[req_id].emitted[i0:]})
+        if self.on_token is not None:
+            for req_id, tok, done in ev.events:
+                # replayed tokens ride in the resume prompt, never
+                # re-emitted: the stream the user sees is exactly-once
+                # by construction
+                self.on_token(req_id, tok, done)
+        for req_id, status in ev.results:
+            self._finish(req_id, status, replica=r.id)
 
     def _finish(self, req_id: int, status: str, replica: int) -> None:
         b = self._book[req_id]
@@ -375,6 +1004,7 @@ class Supervisor:
             return
         b.done = True
         now = self._now()
+        self._journal_add({"t": "term", "id": int(req_id), "st": status})
         self._outcomes.append(Outcome(
             id=req_id, tokens=list(b.emitted), status=status,
             arrival_s=b.arrival,
@@ -382,57 +1012,67 @@ class Supervisor:
             if b.first_token_t >= 0 else 0.0,
             finish_s=now - b.arrival, replays=b.replays, replica=replica))
 
-    def _on_failure(self, r: _Replica, exc: BaseException) -> None:
+    def _emission_complete(self, b: _Book) -> bool:
+        """The request's token budget is fully emitted (or EOS landed)
+        but its terminal record is missing — a result that died with a
+        replica/supervisor. Finishing it ``ok`` beats re-admitting a
+        zero-budget resume."""
+        return len(b.emitted) >= b.req.max_new_tokens or \
+            (bool(b.emitted) and b.emitted[-1] == self._eos)
+
+    def _on_failure(self, r, exc: BaseException) -> None:
         """Salvage everything the replica held, then schedule its rebuild
         (or retire it past the cap). No request is ever dropped here: each
-        one either re-queues or gets a terminal ``failed`` outcome."""
+        one either re-queues, finishes from its complete emission, or
+        gets a terminal ``failed`` outcome."""
+        if r.dead:
+            return
         self.failures.append((r.id, repr(exc)))
-        # requests retired DURING the failing step (before the raise) have
-        # results sitting in the scheduler — collect them first, or the
-        # restart's state reset would silently drop them
-        self._collect(r)
-        salvage: List[Tuple[float, Request, int]] = []
-        for arr, req in r.scheduler.pending():
-            salvage.append((arr, req, 0))
-        for arr, req, toks, pos in r.scheduler.inflight():
-            # positions computed on the dead replica that a resume must
-            # recompute: prefilled prompt positions + emitted tokens
-            self.wasted_tokens += pos + len(toks)
-            salvage.append((arr, req, 1))
-        for arr, req, replayed in salvage:
+        for req_id, was_inflight, pos in r.salvage():
+            b = self._book[req_id]
+            if b.done:
+                continue
+            if was_inflight:
+                # positions computed on the dead replica: the prefilled
+                # prompt span is genuinely lost compute; tokens emitted
+                # this incarnation were already journaled/streamed and
+                # merely ride the next resume prompt
+                self.wasted_compute_tokens += pos
+                self.replayed_emitted_tokens += \
+                    len(b.emitted) - b.base_emitted
+            if self._emission_complete(b):
+                self._finish(req_id, "ok", replica=r.id)
+                continue
+            b.replays += 1 if was_inflight else 0
+            if b.replays > self.cfg.max_request_replays:
+                self._finish(req_id, "failed", replica=r.id)
+                continue
             # the replica-local request may be a resume (concatenated
             # prompt, shrunk budget, drained deadline) — always re-queue
             # the ORIGINAL from the book; emitted tokens ride separately
-            b = self._book[req.id]
-            b.replays += replayed
-            if b.replays > self.cfg.max_request_replays:
-                self._finish(req.id, "failed", replica=r.id)
-                continue
             self._queue.append((b.arrival, b.req))
         self._queue = deque(sorted(self._queue, key=lambda t: t[0]))
         r.alive = False
         r.restarts += 1
         if r.restarts > self.cfg.max_restarts:
             r.dead = True
+            r.hard_kill()
             return
         r.restart_at = self.clock.now() + backoff_delay(
             r.restarts - 1, self.cfg.backoff_base_s,
             self.cfg.backoff_factor, self.cfg.backoff_jitter, self._rng)
 
-    def _restart(self, r: _Replica) -> None:
-        """Rebuild: fresh cache via CacheBackend.start (inside
-        scheduler.start), and — when a checkpointer is wired — params
-        reloaded from the latest checksum-verified checkpoint (the
-        restart-from-checkpoint path a real weight-holding replica
-        takes)."""
-        if self.checkpointer is not None:
+    def _restart(self, r) -> None:
+        """Rebuild: in-process, a fresh cache via ``scheduler.start``
+        (params optionally reloaded from the latest checksum-verified
+        checkpoint); cross-process, a fresh worker spawn."""
+        if r.kind == "inproc" and self.checkpointer is not None:
             try:
                 params, _ = self.checkpointer.restore(r.engine.params)
                 r.engine.params = params
             except FileNotFoundError:
                 pass  # no complete checkpoint yet: keep in-memory params
-        r.scheduler.start()
-        r.consumed = 0
+        r.start()
         r.alive = True
 
     def _fail_everything(self) -> None:
@@ -454,6 +1094,7 @@ class Supervisor:
         for rid in plan.straggler_hosts:
             r = self.replicas[rid]
             if r.alive and not r.dead:
+                self._ingest(r, r.take_pending())
                 self._on_failure(r, TimeoutError(
                     f"replica {rid} straggling (health-monitor verdict)"))
 
@@ -470,7 +1111,7 @@ class Supervisor:
     def _done(self) -> bool:
         if self._future or self._queue:
             return False
-        return all(r.dead or r.scheduler.done for r in self.replicas)
+        return all(r.dead or r.done for r in self.replicas)
 
     def _advance_to_next_event(self) -> None:
         """Nothing progressed: jump the clock to the next arrival or

@@ -1,0 +1,255 @@
+"""Framed RPC transport for the cross-process serving fleet.
+
+The supervisor talks to each ``serve.worker`` subprocess over a pair of
+pipes carrying length-prefixed, CRC32-checked JSON frames::
+
+    <u32 payload_len><u32 crc32(payload)><payload bytes>
+
+Framing survives exactly the failures a process fleet sees:
+
+  * **Torn reads** — a recv deadline that fires mid-frame leaves the
+    partial bytes buffered; the next recv resumes where it stopped, so a
+    slow worker never desynchronizes the stream. Only EOF (peer died) or
+    a CRC/oversize mismatch (stream corrupt) is fatal.
+  * **Typed retryability** — every failure surfaces as
+    ``TransportError(retryable=...)``: deadlines and injected partition
+    drops are retryable; EOF, broken pipes and corrupt frames are not
+    (the process behind the pipe is gone — respawn, don't retry).
+  * **Idempotent retries** — ``RPCClient`` stamps every call with a
+    monotonically increasing id and retries retryable failures under a
+    seeded exponential backoff (``distributed.fault.backoff_delay``)
+    bounded by ``tolerance_s``. The worker caches its last reply by call
+    id and *retransmits instead of re-executing* on a duplicate id, so a
+    reply lost to a partition never double-executes a step (which would
+    duplicate streamed tokens). Stale replies from earlier attempts are
+    discarded by id mismatch.
+  * **Injected partitions** — ``arm_partition(n)`` drops the next ``n``
+    call attempts supervisor-side, alternating request-lost / reply-lost
+    so both halves of the idempotency contract are exercised;
+    ``arm_slowpipe(s)`` stalls the next call (straggler-via-transport).
+    Both are driven by the supervisor's fault plan, never by the worker,
+    so chaos replays stay deterministic.
+
+``WorkerError`` (a method raised *inside* the worker — an injected
+engine fault, a NaN guard) is deliberately NOT a ``TransportError``:
+the pipe is healthy, the replica failed; the supervisor routes it
+through the same salvage-and-respawn path as a crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import select
+import struct
+import time
+import zlib
+from typing import Optional
+
+import numpy as np
+
+from ..distributed.fault import backoff_delay
+
+_HEADER = struct.Struct("<II")
+MAX_FRAME = 1 << 26             # 64 MB: anything larger is a desync
+
+
+class TransportError(RuntimeError):
+    """A transport-layer failure. ``retryable=True`` means the frame may
+    simply be late (deadline, injected drop) — retry with the same call
+    id; ``False`` means the peer or the stream is gone — respawn."""
+
+    def __init__(self, msg: str, *, retryable: bool = False):
+        super().__init__(msg)
+        self.retryable = retryable
+
+
+class WorkerError(RuntimeError):
+    """The worker executed the call and raised: a replica failure
+    (injected fault, NaN guard, real bug) reported over a healthy pipe."""
+
+
+def encode_frame(obj) -> bytes:
+    payload = json.dumps(obj, separators=(",", ":")).encode()
+    return _HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def _write_all(fd: int, data: bytes) -> None:
+    view = memoryview(data)
+    while view:
+        view = view[os.write(fd, view):]
+
+
+class FramedConnection:
+    """One duplex frame stream over raw file descriptors (pipe ends).
+
+    Reads are buffered and deadline-aware via ``select``; a timeout
+    mid-frame preserves the partial bytes (stream stays in sync).
+    Writes are atomic-from-the-caller's-view via a full-write loop."""
+
+    def __init__(self, read_fd: int, write_fd: int):
+        self._rfd = read_fd
+        self._wfd = write_fd
+        self._buf = bytearray()
+        self.frames_sent = 0
+        self.frames_received = 0
+
+    # ------------------------------------------------------------- sending
+    def send(self, obj) -> None:
+        try:
+            _write_all(self._wfd, encode_frame(obj))
+        except (BrokenPipeError, OSError, ValueError) as e:
+            raise TransportError(f"send failed (peer pipe closed?): {e!r}",
+                                 retryable=False) from e
+        self.frames_sent += 1
+
+    # ----------------------------------------------------------- receiving
+    def _fill(self, n: int, deadline: Optional[float]) -> None:
+        """Grow the buffer to >= n bytes or raise. Deadline -> retryable
+        (bytes read so far stay buffered); EOF -> fatal."""
+        while len(self._buf) < n:
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TransportError(
+                        f"recv deadline ({n - len(self._buf)} bytes still "
+                        "outstanding)", retryable=True)
+                ready, _, _ = select.select([self._rfd], [], [], remaining)
+                if not ready:
+                    raise TransportError(
+                        f"recv deadline ({n - len(self._buf)} bytes still "
+                        "outstanding)", retryable=True)
+            try:
+                chunk = os.read(self._rfd, 1 << 16)
+            except OSError as e:
+                raise TransportError(f"recv failed: {e!r}",
+                                     retryable=False) from e
+            if not chunk:
+                raise TransportError("peer closed the pipe (EOF)",
+                                     retryable=False)
+            self._buf.extend(chunk)
+
+    def recv(self, timeout: Optional[float] = None) -> dict:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        self._fill(_HEADER.size, deadline)
+        n, crc = _HEADER.unpack(bytes(self._buf[:_HEADER.size]))
+        if n > MAX_FRAME:
+            raise TransportError(
+                f"oversized frame ({n} bytes): stream desynchronized",
+                retryable=False)
+        self._fill(_HEADER.size + n, deadline)
+        payload = bytes(self._buf[_HEADER.size:_HEADER.size + n])
+        del self._buf[:_HEADER.size + n]
+        if zlib.crc32(payload) != crc:
+            raise TransportError("frame CRC mismatch: stream corrupt",
+                                 retryable=False)
+        self.frames_received += 1
+        try:
+            return json.loads(payload)
+        except json.JSONDecodeError as e:
+            raise TransportError(f"frame payload not JSON: {e}",
+                                 retryable=False) from e
+
+
+@dataclasses.dataclass
+class TransportConfig:
+    call_timeout_s: float = 30.0    # per-attempt recv deadline
+    tolerance_s: float = 5.0        # total retry budget (partition
+                                    # tolerance): past it the call fails
+                                    # non-retryably and the replica is
+                                    # declared dead
+    backoff_base_s: float = 0.02
+    backoff_factor: float = 2.0
+    backoff_jitter: float = 0.25
+    seed: int = 0
+
+
+class RPCClient:
+    """Supervisor-side call surface over one FramedConnection."""
+
+    def __init__(self, conn: FramedConnection,
+                 cfg: TransportConfig = TransportConfig()):
+        self.conn = conn
+        self.cfg = cfg
+        self._next_id = 0
+        self.retries = 0
+        self._rng = np.random.default_rng(cfg.seed)
+        self._partition_left = 0
+        self._partition_phase = 0
+        self._slow_s = 0.0
+        self.slow_events = 0
+
+    # ------------------------------------------------------ fault injection
+    def arm_partition(self, n_calls: int) -> None:
+        """Drop the next ``n_calls`` call attempts (alternating
+        request-lost / reply-lost). The worker's reply cache makes the
+        eventual retry idempotent."""
+        self._partition_left += max(0, int(n_calls))
+
+    def arm_slowpipe(self, delay_s: float) -> None:
+        """Stall the next call attempt by ``delay_s`` (real sleep: the
+        supervisor's health monitor sees a genuinely slow step)."""
+        self._slow_s = max(self._slow_s, float(delay_s))
+
+    # -------------------------------------------------------------- calling
+    @property
+    def frames_sent(self) -> int:
+        return self.conn.frames_sent
+
+    def call(self, method: str, params: Optional[dict] = None,
+             timeout: Optional[float] = None):
+        """One RPC with retryable-failure backoff bounded by
+        ``tolerance_s``. Raises ``WorkerError`` if the worker's handler
+        raised, ``TransportError(retryable=False)`` if the pipe/budget is
+        gone."""
+        cid = self._next_id
+        self._next_id += 1
+        frame = {"t": "call", "id": cid, "m": method, "p": params or {}}
+        per_attempt = self.cfg.call_timeout_s if timeout is None else timeout
+        deadline = time.monotonic() + self.cfg.tolerance_s + per_attempt
+        attempt = 0
+        while True:
+            try:
+                return self._attempt(frame, cid, per_attempt)
+            except TransportError as e:
+                if not e.retryable:
+                    raise
+                self.retries += 1
+                delay = backoff_delay(attempt, self.cfg.backoff_base_s,
+                                      self.cfg.backoff_factor,
+                                      self.cfg.backoff_jitter, self._rng)
+                attempt += 1
+                if time.monotonic() + delay > deadline:
+                    raise TransportError(
+                        f"call {method!r} exceeded partition tolerance "
+                        f"({self.cfg.tolerance_s}s, {attempt} attempts): "
+                        f"{e}", retryable=False) from e
+                time.sleep(delay)
+
+    def _attempt(self, frame: dict, cid: int, timeout: float):
+        if self._slow_s > 0:
+            s, self._slow_s = self._slow_s, 0.0
+            self.slow_events += 1
+            time.sleep(s)
+        if self._partition_left > 0:
+            self._partition_left -= 1
+            self._partition_phase ^= 1
+            if self._partition_phase == 1:
+                # request frame lost: the worker never sees this attempt
+                raise TransportError(
+                    "partition: request frame dropped (injected)",
+                    retryable=True)
+            # reply frame lost: the worker EXECUTES the call, we never
+            # read the answer — the retry must hit the reply cache
+            self.conn.send(frame)
+            raise TransportError(
+                "partition: reply frame dropped (injected)", retryable=True)
+        self.conn.send(frame)
+        while True:
+            reply = self.conn.recv(timeout=timeout)
+            if reply.get("t") == "reply" and reply.get("id") == cid:
+                break
+            # stale reply from an earlier dropped attempt: discard by id
+        if not reply.get("ok", False):
+            raise WorkerError(reply.get("err", "unknown worker error"))
+        return reply.get("r")

@@ -1,0 +1,260 @@
+"""Subprocess replica: one Engine + ContinuousScheduler behind framed RPC.
+
+    REPRO_WORKER_SPEC='<json>' python -m repro.serve.worker
+
+The supervisor's ``ProcessReplica`` spawns this entrypoint with a
+``WorkerSpec`` (model config, seed, quantization, serve config, fault
+plan) in the environment and drives it over stdin/stdout frames
+(``serve.transport``). Design points that make the fleet survivable:
+
+  * **stdout is the wire** — the first thing ``main`` does is dup the
+    real stdout aside for frames and point fd 1 at stderr, so a stray
+    ``print`` (JAX warnings, debug output) can never corrupt framing.
+  * **Deterministic construction** — params come from
+    ``model.init(PRNGKey(seed))`` (+ the same stacked FLRQ quantization
+    the launcher runs), so a respawned worker is bit-identical to the
+    one that died and to the in-process oracle; no weight shipping.
+  * **Idempotent replies** — the last reply is cached by call id and
+    retransmitted on a duplicate id instead of re-executing, so a
+    partition that eats a reply cannot double-step the scheduler (which
+    would duplicate emitted tokens).
+  * **SIGTERM = graceful drain** — the handler only flips a flag: new
+    submits are refused (the supervisor re-routes them), assigned work
+    finishes normally, and once drained the worker replies
+    ``exiting: true`` and exits 0. SIGKILL needs no handler — the
+    supervisor detects EOF/exit and respawns; the journal +
+    resume-prefill protocol makes the tokens safe, not the worker.
+  * **Orphan cleanup** — EOF on stdin (the supervisor died) exits the
+    worker, so a supervisor crash never leaks a process tree.
+  * **Fault step offsets** — the ``start`` call carries the replica's
+    lifetime step count, which offsets the fresh ``FaultInjector`` so a
+    one-shot engine-fault coordinate never re-trips after a respawn
+    (the same discipline the in-process injector keeps via its
+    monotonic step counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import sys
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+SPEC_ENV = "REPRO_WORKER_SPEC"
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    """Everything a worker needs to rebuild its replica from scratch —
+    JSON-safe by construction (``ModelConfig.dtype`` rides as a string),
+    so respawns and cross-process determinism cost one env var."""
+    model: dict                 # ModelConfig fields (dtype as string)
+    serve: dict                 # ServeConfig.to_dict()
+    seed: int = 0
+    scan: bool = True
+    quantize_bits: int = 0      # 0 = serve fp weights
+    blc_epochs: int = 0         # 0 = derive from bits (launcher default)
+    max_rank: Optional[int] = None
+    prefill_chunk: int = 32
+    replica: int = 0
+    fault_plan: str = ""        # full CLI plan; the worker's injector
+                                # keeps only engine-level kinds
+    nan_guard: bool = True
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, s: str) -> "WorkerSpec":
+        return cls(**json.loads(s))
+
+
+def model_config_to_dict(cfg) -> dict:
+    import jax.numpy as jnp
+    d = dataclasses.asdict(cfg)
+    d["dtype"] = jnp.dtype(cfg.dtype).name
+    return d
+
+
+def model_config_from_dict(d: dict):
+    import jax.numpy as jnp
+
+    from ..models.config import ModelConfig
+    d = dict(d)
+    d["dtype"] = jnp.dtype(d["dtype"]).type
+    d["global_layers"] = tuple(d.get("global_layers", ()))
+    return ModelConfig(**d)
+
+
+def build_replica(spec: WorkerSpec):
+    """Deterministically rebuild (engine, scheduler) from the spec —
+    shared by the worker process and any test that wants the bit-exact
+    in-process twin of a worker."""
+    import jax
+
+    from ..models import LM
+    from .engine import Engine, ServeConfig
+    from .faults import FaultPlan
+    from .scheduler import ContinuousScheduler
+    cfg = model_config_from_dict(spec.model)
+    model = LM(cfg)
+    if not spec.scan:
+        model = model.with_scan(False)
+    params = model.init(jax.random.PRNGKey(spec.seed))
+    if spec.quantize_bits:
+        from ..core.flrq import FLRQConfig
+        from ..quant.stacked import quantize_model_stacked
+        epochs = spec.blc_epochs or (2 if spec.quantize_bits > 2 else 8)
+        fq = FLRQConfig(bits=spec.quantize_bits, blc_epochs=epochs)
+        if spec.max_rank is not None:
+            fq = dataclasses.replace(fq, max_rank=spec.max_rank)
+        params, _ = quantize_model_stacked(params, None, fq)
+    engine = Engine(model, params, ServeConfig.from_dict(spec.serve))
+    injector = None
+    plan = FaultPlan.parse(spec.fault_plan) if spec.fault_plan else None
+    if plan:
+        injector = plan.injector(spec.replica)
+    scheduler = ContinuousScheduler(
+        engine, prefill_chunk=spec.prefill_chunk, faults=injector,
+        nan_guard=spec.nan_guard)
+    return engine, scheduler
+
+
+class WorkerServer:
+    """Method dispatch over one replica. Token events buffer between
+    ``step`` calls and ride out in the step reply (the supervisor owns
+    streaming and journaling; the worker owns compute)."""
+
+    def __init__(self, spec: WorkerSpec):
+        self.spec = spec
+        self.engine, self.scheduler = build_replica(spec)
+        self.scheduler.on_token = self._buffer
+        self._events: List[Tuple[int, int, bool]] = []
+        self._consumed = 0
+        self.draining = False
+        self.exit_after_reply = False
+
+    def _buffer(self, req_id: int, tok: int, done: bool) -> None:
+        self._events.append((req_id, tok, done))
+
+    def drain(self, *_a) -> None:
+        """SIGTERM: stop accepting, finish what's assigned, then exit."""
+        self.draining = True
+
+    # ------------------------------------------------------------- handlers
+    def dispatch(self, method: str, p: dict):
+        return getattr(self, f"_h_{method}")(p)
+
+    def _h_ping(self, p):
+        return {"pong": True, "draining": self.draining}
+
+    def _h_start(self, p):
+        if self.scheduler.faults is not None:
+            # lifetime step offset: one-shot coordinates already spent by
+            # the previous incarnation must not re-trip in this one
+            self.scheduler.faults.step = int(p.get("fault_step_offset",
+                                                   0)) - 1
+        self.scheduler.start()
+        self._events = []
+        self._consumed = 0
+        return {"started": True}
+
+    def _h_submit(self, p):
+        if self.draining:
+            return {"accepted": False, "draining": True}
+        from .engine import Request
+        req = Request(np.asarray(p["prompt"], np.int32),
+                      max_new_tokens=int(p["new"]), id=int(p["id"]),
+                      deadline_s=p.get("dl"))
+        accepted = self.scheduler.submit(req)
+        return {"accepted": bool(accepted), "draining": False}
+
+    def _h_step(self, p):
+        admitted_before = len(self.scheduler.admission_order)
+        progressed = self.scheduler.step()
+        events, self._events = self._events, []
+        results = self.scheduler.results[self._consumed:]
+        self._consumed = len(self.scheduler.results)
+        done = self.scheduler.done
+        if self.draining and done:
+            self.exit_after_reply = True
+        return {
+            "progressed": bool(progressed),
+            "events": [[int(r), int(t), bool(d)] for r, t, d in events],
+            "results": [[int(r.id), r.status] for r in results],
+            "admitted": [int(i) for i in
+                         self.scheduler.admission_order[admitted_before:]],
+            "progress": {str(k): int(v)
+                         for k, v in self.scheduler.progress().items()},
+            "free_slots": int(self.scheduler.free_slots),
+            "done": bool(done),
+            "draining": self.draining,
+            "exiting": self.exit_after_reply,
+        }
+
+    def _h_shutdown(self, p):
+        self.exit_after_reply = True
+        return {"bye": True}
+
+
+def serve_forever(spec: WorkerSpec, conn) -> int:
+    from .transport import TransportError
+    server = WorkerServer(spec)
+    signal.signal(signal.SIGTERM, server.drain)
+    last_id, last_reply = None, None
+    while True:
+        try:
+            frame = conn.recv(timeout=None)
+        except TransportError:
+            return 0            # supervisor gone (EOF): orphan cleanup
+        if frame.get("t") != "call":
+            continue
+        cid = frame.get("id")
+        if cid == last_id and last_reply is not None:
+            conn.send(last_reply)   # duplicate id: retransmit, never
+            continue                # re-execute (exactly-once steps)
+        try:
+            result = server.dispatch(frame.get("m", ""),
+                                     frame.get("p") or {})
+            reply = {"t": "reply", "id": cid, "ok": True, "r": result}
+        except Exception as e:  # noqa: BLE001 — a replica failure is a
+            # reply, not a worker death: the pipe stays healthy and the
+            # supervisor routes it through salvage-and-respawn
+            reply = {"t": "reply", "id": cid, "ok": False, "err": repr(e)}
+        last_id, last_reply = cid, reply
+        try:
+            conn.send(reply)
+        except TransportError:
+            return 0
+        if server.exit_after_reply:
+            return 0
+
+
+def main(argv=None) -> int:
+    # frames ride the REAL stdout; fd 1 then aliases stderr so stray
+    # prints (library warnings) can never corrupt the wire
+    wire_fd = os.dup(1)
+    os.dup2(2, 1)
+    sys.stdout = sys.stderr
+    from .transport import FramedConnection
+    raw = os.environ.get(SPEC_ENV)
+    if not raw and argv:
+        raw = pathlib_read(argv[0])
+    if not raw:
+        print(f"worker: no spec ({SPEC_ENV} unset)", file=sys.stderr)
+        return 2
+    spec = WorkerSpec.from_json(raw)
+    conn = FramedConnection(read_fd=0, write_fd=wire_fd)
+    return serve_forever(spec, conn)
+
+
+def pathlib_read(path: str) -> str:
+    import pathlib
+    return pathlib.Path(path).read_text()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,434 @@
+"""Cross-process fleet chaos suite: exactly-once serving across real
+process death.
+
+The oracle is the same as ``test_fault_tolerance``: a fault-free greedy
+run. Worker SIGKILL, transport partitions, graceful SIGTERM drains and
+supervisor crashes (with journal replay) must change WHEN tokens are
+computed, never WHAT they are — every test asserts zero drops, terminal
+statuses from the glossary, and bitwise parity of both outcome tokens
+and the streamed-token view (``on_token`` + ``on_replay``) against the
+oracle. Worker processes live in real time, so these tests use the real
+clock with small backoffs; the journal/transport unit tests are pure.
+
+CI re-runs this file under several CHAOS_SEED values; the seed moves the
+kill coordinate so the suite sweeps kill-mid-prefill vs kill-mid-decode
+without losing determinism per seed.
+"""
+import dataclasses
+import os
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_PROXIES
+from repro.models import LM
+from repro.serve import (Engine, FaultPlan, Journal, JournalCorruptionError,
+                         Request, ServeConfig, Supervisor, SupervisorConfig,
+                         SupervisorCrash, VirtualClock, WorkerSpec,
+                         model_config_from_dict, model_config_to_dict,
+                         replay_state)
+from repro.serve.journal import encode_record, scan_records
+from repro.serve.transport import (FramedConnection, TransportError,
+                                   encode_frame)
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    base = dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                head_dim=32, d_ff=128, vocab=128, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+def _requests(lens=(3, 9, 5, 14, 7), new=None, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(2, 128, l).astype(np.int32),
+                    max_new_tokens=(new or 4 + i), id=i, **kw)
+            for i, l in enumerate(lens)]
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return WorkerSpec(model=model_config_to_dict(_tiny_cfg()),
+                      serve=ServeConfig(max_slots=2, max_seq=32).to_dict(),
+                      seed=0, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def oracle(key):
+    """Fault-free greedy ground truth (one in-process engine, one slot)."""
+    model = LM(_tiny_cfg())
+    params = model.init(key)
+    eng = Engine(model, params, ServeConfig(max_slots=1, max_seq=32))
+    return {r.id: eng.generate([r])[0].tokens for r in _requests()}
+
+
+def _sup_cfg(**over):
+    kw = dict(replicas=2, prefill_chunk=4, backoff_base_s=0.01,
+              backoff_jitter=0.0, partition_tolerance_s=5.0)
+    kw.update(over)
+    return SupervisorConfig(**kw)
+
+
+class _Streams:
+    """Client-side view of the token streams: on_token appends,
+    on_replay resets to the journaled prefix after a recovery."""
+
+    def __init__(self):
+        self.toks = {}
+        self.events = []
+
+    def on_token(self, rid, tok, done):
+        self.toks.setdefault(rid, []).append(tok)
+        self.events.append((rid, tok))
+
+    def on_replay(self, rid, prefix):
+        self.toks[rid] = list(prefix)
+
+
+def _assert_parity(report, oracle, streams=None, statuses=("ok",)):
+    assert report.zero_drops, report.status_counts()
+    for o in report.outcomes:
+        assert o.status in ("ok", "timeout", "rejected", "failed")
+        assert o.status in statuses, (o.id, o.status)
+        if o.status == "ok":
+            assert o.tokens == oracle[o.id], (o.id, o.tokens, oracle[o.id])
+            if streams is not None:
+                assert streams.toks[o.id] == oracle[o.id], o.id
+
+
+# ======================================================== journal (pure)
+class TestJournal:
+    def test_roundtrip_and_replay(self, tmp_path):
+        p = tmp_path / "wal.journal"
+        j = Journal(p)
+        j.append({"t": "admit", "id": 0, "prompt": [3, 4], "new": 3,
+                  "dl": None, "arr": 0.0})
+        j.append({"t": "emit", "id": 0, "i": 0, "toks": [7, 8]})
+        j.flush()
+        j.append({"t": "emit", "id": 0, "i": 2, "toks": [9]})
+        j.append({"t": "term", "id": 0, "st": "ok"})
+        j.flush()
+        j.seal()
+        j.close()
+        j2 = Journal(p)
+        assert j2.records == 4 and j2.truncated_bytes == 0
+        state = replay_state(j2.recovered)
+        assert state[0].emitted == [7, 8, 9]
+        assert state[0].status == "ok"
+        assert state[0].prompt == [3, 4]
+
+    def test_torn_tail_truncated(self, tmp_path):
+        p = tmp_path / "wal.journal"
+        j = Journal(p)
+        j.append({"t": "admit", "id": 0, "prompt": [3], "new": 2,
+                  "dl": None, "arr": 0.0})
+        j.flush()
+        j.close()
+        with open(p, "ab") as f:
+            f.write(encode_record({"t": "emit", "id": 0, "i": 0,
+                                   "toks": [5]})[:-3])  # torn mid-record
+        j2 = Journal(p)
+        assert j2.records == 1 and j2.truncated_bytes > 0
+        # recovery rewrote the file: a third open sees a clean tail
+        assert Journal(p).truncated_bytes == 0
+
+    def test_crc_corruption_in_sealed_prefix_raises(self, tmp_path):
+        p = tmp_path / "wal.journal"
+        j = Journal(p)
+        j.append({"t": "admit", "id": 0, "prompt": [3], "new": 2,
+                  "dl": None, "arr": 0.0})
+        j.flush()
+        j.seal()
+        j.close()
+        raw = bytearray(p.read_bytes())
+        raw[-1] ^= 0xFF
+        p.write_bytes(bytes(raw))
+        with pytest.raises(JournalCorruptionError):
+            Journal(p)
+
+    def test_unsealed_mid_corruption_truncates_not_raises(self, tmp_path):
+        p = tmp_path / "wal.journal"
+        j = Journal(p)
+        j.append({"t": "admit", "id": 0, "prompt": [3], "new": 2,
+                  "dl": None, "arr": 0.0})
+        j.append({"t": "term", "id": 0, "st": "ok"})
+        j.close(seal=False)     # writer died before sealing
+        data = p.read_bytes()
+        recs, _ = scan_records(data)
+        assert len(recs) == 2
+        first_len = len(encode_record(recs[0]))
+        raw = bytearray(data)
+        raw[first_len + 9] ^= 0xFF  # corrupt the second record
+        p.write_bytes(bytes(raw))
+        j2 = Journal(p)  # no manifest: bad tail is truncated, not fatal
+        assert j2.records == 1 and j2.truncated_bytes > 0
+
+    def test_empty_journal(self, tmp_path):
+        j = Journal(tmp_path / "wal.journal")
+        assert j.records == 0 and j.recovered == []
+        assert replay_state([]) == {}
+
+    def test_replay_rejects_gap_and_mismatch(self):
+        admit = {"t": "admit", "id": 1, "prompt": [2], "new": 4,
+                 "dl": None, "arr": 0.0}
+        with pytest.raises(JournalCorruptionError):
+            replay_state([admit, {"t": "emit", "id": 1, "i": 2,
+                                  "toks": [9]}])
+        with pytest.raises(JournalCorruptionError):
+            replay_state([admit,
+                          {"t": "emit", "id": 1, "i": 0, "toks": [5, 6]},
+                          {"t": "emit", "id": 1, "i": 1, "toks": [7]}])
+        with pytest.raises(JournalCorruptionError):
+            replay_state([{"t": "emit", "id": 9, "i": 0, "toks": [1]}])
+
+    def test_replay_accepts_idempotent_overlap(self):
+        state = replay_state([
+            {"t": "admit", "id": 1, "prompt": [2], "new": 4, "dl": None,
+             "arr": 0.0},
+            {"t": "emit", "id": 1, "i": 0, "toks": [5, 6]},
+            {"t": "emit", "id": 1, "i": 1, "toks": [6, 7]}])
+        assert state[1].emitted == [5, 6, 7]
+
+
+# ====================================================== transport (pure)
+class TestTransport:
+    def _pipe(self):
+        """(write_fd, receiving FramedConnection) — raw bytes in, frames
+        out."""
+        r, w = os.pipe()
+        return w, FramedConnection(read_fd=r, write_fd=w)
+
+    def test_roundtrip(self):
+        w, conn = self._pipe()
+        conn.send({"m": "ping", "n": [1, 2, 3]})
+        assert conn.recv(timeout=1.0) == {"m": "ping", "n": [1, 2, 3]}
+
+    def test_crc_reject_is_fatal(self):
+        w, conn = self._pipe()
+        frame = bytearray(encode_frame({"m": "x"}))
+        frame[-1] ^= 0xFF
+        os.write(w, bytes(frame))
+        with pytest.raises(TransportError) as ei:
+            conn.recv(timeout=1.0)
+        assert not ei.value.retryable
+
+    def test_timeout_is_retryable_and_resyncs(self):
+        w, conn = self._pipe()
+        frame = encode_frame({"m": "x"})
+        os.write(w, frame[:5])  # partial header+payload
+        with pytest.raises(TransportError) as ei:
+            conn.recv(timeout=0.05)
+        assert ei.value.retryable
+        os.write(w, frame[5:])  # the rest arrives later
+        assert conn.recv(timeout=1.0) == {"m": "x"}
+
+    def test_eof_is_fatal(self):
+        w, conn = self._pipe()
+        os.close(w)
+        with pytest.raises(TransportError) as ei:
+            conn.recv(timeout=1.0)
+        assert not ei.value.retryable
+
+
+# ============================================================ spec (pure)
+def test_worker_spec_roundtrip(spec):
+    again = WorkerSpec.from_json(spec.to_json())
+    # JSON list-ifies tuples inside the model dict: compare semantically
+    assert model_config_from_dict(again.model) == _tiny_cfg()
+    assert dataclasses.replace(again, model={}) == \
+        dataclasses.replace(spec, model={})
+    scfg = ServeConfig.from_dict(again.serve)
+    assert scfg.cache.max_seq == 32 and scfg.cache.max_slots == 2
+
+
+# =============================================== process fleet (slow-ish)
+class TestProcessFleet:
+    def _serve(self, spec, reqs, plan=None, journal=None, streams=None,
+               **cfg_over):
+        streams = streams if streams is not None else _Streams()
+        sup = Supervisor(
+            cfg=_sup_cfg(**cfg_over), fleet="procs", worker_spec=spec,
+            on_token=streams.on_token, on_replay=streams.on_replay,
+            journal=journal,
+            fault_plan=FaultPlan.parse(plan) if plan else None)
+        with sup:
+            report = sup.serve(reqs)
+        return report, streams
+
+    def test_no_fault_parity(self, spec, oracle):
+        report, streams = self._serve(spec, _requests())
+        _assert_parity(report, oracle, streams)
+        assert report.frames_retried == 0
+        assert report.restarts == {0: 0, 1: 0}
+
+    def test_sigkill_mid_decode(self, spec, oracle):
+        # seed moves the kill coordinate: mid-prefill at low steps,
+        # mid-decode later — determinism per seed either way
+        step = 3 + (CHAOS_SEED % 7)
+        report, streams = self._serve(
+            spec, _requests(), plan=f"sigkill@{step}:step:0")
+        _assert_parity(report, oracle, streams)
+        assert report.restarts[0] >= 1
+        assert report.wasted_compute_tokens > 0
+        # no token was streamed twice: the raw on_token sequence per
+        # request IS the oracle (replayed tokens ride the resume prompt)
+        for o in report.outcomes:
+            assert [t for rid, t in streams.events if rid == o.id] == \
+                oracle[o.id]
+
+    def test_sigkill_mid_prefill(self, spec, oracle):
+        report, streams = self._serve(
+            spec, _requests(), plan="sigkill@1:step:0")
+        _assert_parity(report, oracle, streams)
+        assert report.restarts[0] >= 1
+
+    def test_partition_then_heal_no_duplicates(self, spec, oracle):
+        report, streams = self._serve(
+            spec, _requests(), plan="partition@4:transport:0:4")
+        _assert_parity(report, oracle, streams)
+        assert report.frames_retried > 0
+        # healed partition: retries, not failures — workers never died
+        assert report.restarts == {0: 0, 1: 0}
+        for rid, toks in streams.toks.items():
+            assert toks == oracle[rid]  # exactly-once despite retransmits
+
+    def test_sigterm_graceful_drain(self, spec, oracle):
+        report, streams = self._serve(
+            spec, _requests(), plan="sigterm@2:step:0")
+        _assert_parity(report, oracle, streams)
+        # a drain is not a failure: no salvage, no restart, no replay
+        assert report.restarts == {0: 0, 1: 0}
+        assert report.failures == []
+        assert all(o.replays == 0 for o in report.outcomes)
+
+    def test_supervisor_crash_then_resume_exactly_once(
+            self, spec, oracle, tmp_path):
+        jp = tmp_path / "wal.journal"
+        streams = _Streams()
+        with pytest.raises(SupervisorCrash):
+            self._serve(spec, _requests(), journal=Journal(jp),
+                        plan="sigkill@3:step:0,supervisor_crash@8",
+                        streams=streams)
+        sup2 = Supervisor(cfg=_sup_cfg(), fleet="procs", worker_spec=spec,
+                          on_token=streams.on_token,
+                          on_replay=streams.on_replay, journal=Journal(jp))
+        with sup2:
+            report = sup2.resume()
+        _assert_parity(report, oracle, streams)
+        assert report.journal_replayed > 0
+        # sealed journal now holds the complete story
+        state = replay_state(Journal(jp).recovered)
+        for o in report.outcomes:
+            assert state[o.id].status == "ok"
+            assert state[o.id].emitted == oracle[o.id]
+
+    def test_double_supervisor_crash(self, spec, oracle, tmp_path):
+        jp = tmp_path / "wal.journal"
+        streams = _Streams()
+        with pytest.raises(SupervisorCrash):
+            self._serve(spec, _requests(), journal=Journal(jp),
+                        plan="supervisor_crash@6", streams=streams)
+        sup2 = Supervisor(cfg=_sup_cfg(), fleet="procs", worker_spec=spec,
+                          on_token=streams.on_token,
+                          on_replay=streams.on_replay, journal=Journal(jp),
+                          fault_plan=FaultPlan.parse("supervisor_crash@3"))
+        with pytest.raises(SupervisorCrash):
+            with sup2:
+                sup2.resume()
+        sup3 = Supervisor(cfg=_sup_cfg(), fleet="procs", worker_spec=spec,
+                          on_token=streams.on_token,
+                          on_replay=streams.on_replay, journal=Journal(jp))
+        with sup3:
+            report = sup3.resume()
+        _assert_parity(report, oracle, streams)
+
+    def test_resume_survives_torn_tail(self, spec, oracle, tmp_path):
+        jp = tmp_path / "wal.journal"
+        streams = _Streams()
+        with pytest.raises(SupervisorCrash):
+            self._serve(spec, _requests(), journal=Journal(jp),
+                        plan="supervisor_crash@7", streams=streams)
+        with open(jp, "ab") as f:  # the crash tore the last record
+            f.write(encode_record({"t": "emit", "id": 0, "i": 99,
+                                   "toks": [1]})[:-2])
+        j = Journal(jp)
+        assert j.truncated_bytes > 0
+        sup2 = Supervisor(cfg=_sup_cfg(), fleet="procs", worker_spec=spec,
+                          on_token=streams.on_token,
+                          on_replay=streams.on_replay, journal=j)
+        with sup2:
+            report = sup2.resume()
+        _assert_parity(report, oracle, streams)
+
+    def test_procs_reject_virtual_clock_and_missing_spec(self, spec):
+        with pytest.raises(ValueError):
+            Supervisor(cfg=_sup_cfg(), fleet="procs", worker_spec=spec,
+                       clock=VirtualClock())
+        with pytest.raises(ValueError):
+            Supervisor(cfg=_sup_cfg(), fleet="procs")
+        with pytest.raises(ValueError):
+            Supervisor(lambda: None, _sup_cfg(), fleet="bogus")
+
+
+# ========================================== in-process fleet (fast, exact)
+class TestInprocSplitAccounting:
+    def _sup(self, tiny, plan, **kw):
+        model, params = tiny
+
+        def factory():
+            return Engine(model, params, ServeConfig(max_slots=2,
+                                                     max_seq=32))
+        return Supervisor(
+            factory, SupervisorConfig(replicas=2, prefill_chunk=4,
+                                      step_cost_s=0.01),
+            fault_plan=FaultPlan.parse(plan) if plan else None,
+            clock=VirtualClock(), **kw)
+
+    @pytest.fixture(scope="class")
+    def tiny(self, key):
+        model = LM(_tiny_cfg())
+        return model, model.init(key)
+
+    def test_wasted_split_sums_to_legacy_total(self, tiny, oracle):
+        sup = self._sup(tiny, "exception@3:decode:0")
+        report = sup.serve(_requests())
+        _assert_parity(report, oracle)
+        assert report.failures, "fault coordinate never fired"
+        assert report.wasted_compute_tokens > 0
+        assert report.replayed_emitted_tokens >= 0
+        assert report.wasted_tokens == report.wasted_compute_tokens + \
+            report.replayed_emitted_tokens
+        total = report.wasted_tokens + report.useful_tokens
+        assert report.wasted_token_fraction == report.wasted_tokens / total
+        assert abs(report.wasted_compute_fraction +
+                   report.replayed_emitted_fraction -
+                   report.wasted_token_fraction) < 1e-12
+
+    def test_inproc_sigkill_maps_to_hard_failure(self, tiny, oracle):
+        sup = self._sup(tiny, "sigkill@5:step:0")
+        report = sup.serve(_requests())
+        _assert_parity(report, oracle)
+        assert report.restarts[0] >= 1
+        assert any("sigkill" in msg for _, msg in report.failures)
+
+    def test_inproc_journal_records_complete_story(self, tiny, oracle,
+                                                   tmp_path):
+        jp = tmp_path / "wal.journal"
+        sup = self._sup(tiny, "exception@3:decode:0", journal=Journal(jp))
+        report = sup.serve(_requests())
+        _assert_parity(report, oracle)
+        assert report.journal_records > 0 and report.journal_fsyncs > 0
+        state = replay_state(Journal(jp).recovered)
+        for o in report.outcomes:
+            assert state[o.id].emitted == o.tokens
+            assert state[o.id].status == o.status
+
+    def test_inproc_rejects_transport_faults(self, tiny):
+        sup = self._sup(tiny, "partition@4:transport:0:4")
+        with pytest.raises(ValueError, match="process fleet"):
+            sup.serve(_requests())
