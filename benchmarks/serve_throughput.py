@@ -67,6 +67,12 @@ subtrees and each admission must match its own tenant's prefix. Bitwise
 parity with dense plus demonstrable reuse, recording
 ``multitenant_wall_min_s`` (gated) and the hit rate.
 
+Plus the **observability-overhead workload**: the same trace served with
+a disabled ``repro.obs`` bundle vs metrics + span tracing fully on. The
+traced export must validate as Chrome trace-event JSON and
+``obs_overhead_x`` (instrumented wall / bare wall) is gated at an
+absolute 1.05x — instrumentation is free or it is a regression.
+
 Each variant reports prefill and decode tokens/s; the record lands in the
 BENCH_quant_time.json trajectory and ``benchmarks.gate --bench serve``
 gates the scanned-ref decode wall time AND the mixed scheduler wall time
@@ -174,6 +180,16 @@ SPEC_NEW = 48
 SPEC_K = 4
 SPEC_DRAFT_RANK = 4
 
+# Observability-overhead workload: the same short trace served twice
+# through the continuous scheduler — once with a disabled Obs bundle,
+# once with metrics AND span tracing fully on. The instrumented wall
+# must stay within noise of the bare wall (obs_overhead_x, gated at an
+# absolute 1.05x — instrumentation that taxes the serve loop is a bug,
+# not a trade-off), and the traced run must export a schema-valid
+# Chrome trace or the benchmark hard-fails.
+OBS_REQUESTS = 8
+OBS_NEW = 16
+
 # Multi-tenant prefix-reuse trace: TENANTS distinct system prompts, the
 # request stream round-robins across them — the trie must keep several
 # live prefix subtrees at once and every tenant's requests must hit THEIR
@@ -251,6 +267,15 @@ def spec_workload_descriptor() -> dict:
                 spec_k=SPEC_K, draft_rank=SPEC_DRAFT_RANK)
 
 
+def obs_workload_descriptor() -> dict:
+    """Comparability key for the observability-overhead workload — its
+    own trajectory entries; the gate reads ``obs_overhead_x`` against an
+    absolute limit rather than the p95-of-history reference."""
+    return dict(kind="serve_obs", layers=SERVE_L, d_model=SERVE_D,
+                d_ff=SERVE_FF, vocab=SERVE_VOCAB, slots=SLOTS, bits=BITS,
+                requests=OBS_REQUESTS, prompt=PROMPT, new_tokens=OBS_NEW)
+
+
 def multitenant_workload_descriptor() -> dict:
     """Comparability key for the multi-tenant paged trace — its own
     trajectory entries, gated independently of the single-prefix
@@ -321,7 +346,7 @@ def run_mixed(model, qparams, repeats: int = 3) -> dict:
         # arbitrary (possibly the noisiest) run
         ttfts.extend(r.ttft_s for r in sres)
 
-    from repro.serve.scheduler import nearest_percentile
+    from repro.obs.stats import nearest_percentile
 
     c_min, s_min = float(np.min(chunked_walls)), float(np.min(sched_walls))
     p = lambda q: nearest_percentile(ttfts, q)
@@ -534,6 +559,58 @@ def run_multitenant(model, qparams, repeats: int = 3) -> dict:
     return out
 
 
+def run_obs_overhead(model, qparams, repeats: int = 3) -> dict:
+    """Fully-instrumented vs obs-disabled serve on the same trace and the
+    same warm engine: what span tracing (every prefill chunk, decode
+    step, admit and retire) plus registry counters cost the serve loop.
+    The traced export must validate as Chrome trace-event JSON and the
+    registry must actually have recorded counters — an overhead number
+    for instrumentation that silently no-opped would gate nothing."""
+    import json
+
+    from repro.obs import Obs
+    from repro.obs.trace import validate_chrome_trace
+
+    rng = np.random.default_rng(31)
+    reqs = [Request(rng.integers(2, SERVE_VOCAB, PROMPT).astype(np.int32),
+                    max_new_tokens=OBS_NEW, id=i)
+            for i in range(OBS_REQUESTS)]
+    eng = Engine(model, qparams, ServeConfig(
+        max_slots=SLOTS, max_seq=PROMPT + OBS_NEW + 8, backend="ref"))
+    ContinuousScheduler(eng, prefill_chunk=MIX_CHUNK).run(reqs)  # warm
+
+    def serve(obs_factory):
+        walls, obs = [], None
+        for _ in range(repeats):
+            obs = obs_factory()
+            sched = ContinuousScheduler(eng, prefill_chunk=MIX_CHUNK,
+                                        obs=obs)
+            t0 = time.perf_counter()
+            sched.run(reqs)
+            walls.append(time.perf_counter() - t0)
+        return float(np.min(walls)), obs
+
+    off_min, _ = serve(Obs.disabled)
+    on_min, obs = serve(lambda: Obs(trace=True))
+    errs = validate_chrome_trace(json.loads(obs.tracer.to_json()))
+    if errs:
+        raise RuntimeError(
+            f"instrumented serve exported an invalid Chrome trace: "
+            f"{errs[:3]}")
+    if not obs.registry.snapshot()["counters"]:
+        raise RuntimeError("instrumented serve recorded no counters")
+    out = {
+        "obs_off_wall_min_s": round(off_min, 4),
+        "obs_on_wall_min_s": round(on_min, 4),
+        "obs_overhead_x": round(on_min / max(off_min, 1e-9), 3),
+        "obs_trace_events": len(obs.tracer.events),
+    }
+    emit("serve_throughput.obs.overhead", on_min * 1e6,
+         f"instrumented/bare {out['obs_overhead_x']:.3f}x, "
+         f"{out['obs_trace_events']} trace events")
+    return out
+
+
 def run_chaos(model, qparams, repeats: int = 3) -> dict:
     """Recovery-overhead measurement: the supervised fleet serves the
     chaos trace twice — fault-free, then with replica 0 killed mid-decode
@@ -544,8 +621,8 @@ def run_chaos(model, qparams, repeats: int = 3) -> dict:
     that quietly shed work would be flattering fiction."""
     import itertools
 
+    from repro.obs.stats import nearest_percentile
     from repro.serve.faults import FaultPlan
-    from repro.serve.scheduler import nearest_percentile
     from repro.serve.supervisor import Supervisor, SupervisorConfig
 
     repeats = min(repeats, 3)  # two supervised fleets per repeat: cap cost
@@ -761,7 +838,8 @@ def run_bench(repeats: int = 3, include_fused: bool = True,
               include_prefix: bool = True,
               include_spec: bool = True,
               include_multitenant: bool = True,
-              include_proc_chaos: bool = True) -> dict:
+              include_proc_chaos: bool = True,
+              include_obs: bool = True) -> dict:
     """Measure every variant; returns the record appended to the
     BENCH_quant_time.json trajectory."""
     model, qparams, reqs = _build()
@@ -846,6 +924,13 @@ def run_bench(repeats: int = 3, include_fused: bool = True,
         pc.update(run_proc_chaos(model, repeats=repeats))
         emit_bench_json("quant_time", pc)
         record.update(pc)
+        record["proxy"] = workload_descriptor()
+    if include_obs:
+        ob = dict(proxy=obs_workload_descriptor(),
+                  backend=jax.default_backend(), host=host_family())
+        ob.update(run_obs_overhead(model, qparams, repeats=repeats))
+        emit_bench_json("quant_time", ob)
+        record.update(ob)
         record["proxy"] = workload_descriptor()
     return record
 

@@ -68,6 +68,17 @@ exactly-once token streams across worker AND supervisor death.
 partitioned worker is declared dead. The drain report grows a fleet
 section: per-worker restarts, journal records/bytes/replays, RPC frames
 sent/retried, and the wasted split (lost compute vs replayed-emitted).
+
+Observability (``repro.obs``): ``--trace out.json`` exports the full
+request lifecycle (queued → admit → prefill chunks → decode/spec windows
+→ retire, plus dispatch, journal flushes, checkpoints and respawns) as
+Chrome trace-event JSON — worker-subprocess spans stitch into the
+supervisor timeline via the trace id carried on RPC frames.
+``--metrics-json out.json`` snapshots the metrics registry behind every
+number the drain reports print; ``--flight-dir DIR`` arms the flight
+recorder, which dumps its ring there on supervisor crash, worker EOF or
+cache corruption. All three compose with crash+resume: one Obs bundle
+spans every supervisor the launcher builds.
 """
 from __future__ import annotations
 
@@ -81,6 +92,8 @@ from ..configs import get_config, get_smoke_config
 from ..core.flrq import FLRQConfig
 from ..data.pipeline import DataConfig, SyntheticCorpus
 from ..models import LM
+from ..obs import Obs
+from ..obs.metrics import default_registry
 from ..quant.apply import BACKENDS, dispatch_report
 from ..quant.stacked import quantize_model_stacked
 from ..serve.engine import Engine, Request, ServeConfig
@@ -210,6 +223,18 @@ def main(argv=None):
     ap.add_argument("--partition-tolerance-s", type=float, default=5.0,
                     help="per-RPC retry budget before a partitioned "
                          "worker is declared dead (process fleet)")
+    ap.add_argument("--trace", default="",
+                    help="export a Chrome trace-event JSON of the run "
+                         "(load in chrome://tracing or Perfetto); worker "
+                         "subprocess spans stitch into one timeline")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics-registry snapshot (the same "
+                         "instruments behind every drain report) to this "
+                         "path at exit")
+    ap.add_argument("--flight-dir", default="",
+                    help="directory for flight-recorder crash dumps "
+                         "(supervisor crash, worker EOF, cache "
+                         "corruption); nothing is written without one")
     args = ap.parse_args(argv)
     if args.fleet == "procs" and not (args.replicas > 0 or args.fault_plan):
         ap.error("--fleet procs requires the supervisor (--replicas N)")
@@ -245,6 +270,34 @@ def main(argv=None):
     reqs = make_requests(rng, args.requests, cfg.vocab, args.prompt_len,
                          args.new_tokens, args.mixed_lengths,
                          deadline_s=args.deadline_s or None)
+    supervised = args.replicas > 0 or bool(args.fault_plan)
+    # one observability bundle for the whole run: every engine, scheduler
+    # and supervisor below shares this registry and tracer, so the drain
+    # reports, --metrics-json snapshot and --trace timeline are three
+    # views over the same instruments — including across a supervisor
+    # crash + journal resume, which reuses the same Obs.
+    obs = Obs(trace=bool(args.trace),
+              flight_dir=args.flight_dir or None,
+              process_name="supervisor" if supervised else "serve")
+
+    def export_obs(code: int = 0) -> int:
+        if args.trace:
+            obs.tracer.export(args.trace)
+            print(f"  trace: {args.trace} "
+                  f"({len(obs.tracer.events)} events)")
+        if args.metrics_json:
+            snap = obs.registry.snapshot()
+            quant = default_registry().snapshot()
+            if snap.get("enabled") and quant.get("enabled"):
+                # quant.dispatch counters live in the process-wide default
+                # registry (module-level dispatch log); fold them into the
+                # run snapshot so one file carries every instrument
+                snap["counters"].update(quant["counters"])
+            import json
+            with open(args.metrics_json, "w") as f:
+                f.write(json.dumps(snap, sort_keys=True, indent=1))
+            print(f"  metrics: {args.metrics_json}")
+        return code
     scfg = ServeConfig(
         cache=CacheConfig(backend=args.cache_backend,
                           max_slots=args.slots,
@@ -255,7 +308,8 @@ def main(argv=None):
         backend=args.backend, interpret=args.interpret or None,
         speculative=args.speculative, draft_rank=args.draft_rank,
         spec_k=args.spec_k, spec_adaptive=args.spec_adaptive)
-    eng = Engine(model, params, scfg) if args.fleet == "inproc" else None
+    eng = Engine(model, params, scfg, obs=None if supervised else obs) \
+        if args.fleet == "inproc" else None
 
     def cache_report(engine):
         s = engine.cache_backend.stats()
@@ -286,7 +340,7 @@ def main(argv=None):
               f"wasted-draft {(drafted - accepted) / max(drafted, 1):.1%}")
 
     t0 = time.time()
-    if args.replicas > 0 or args.fault_plan:
+    if supervised:
         # fault-tolerant fleet: N replicas behind one shared admission
         # queue, supervised restart, zero dropped requests
         plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
@@ -315,7 +369,8 @@ def main(argv=None):
         sup = Supervisor(factory, sup_cfg, fault_plan=plan,
                          journal=Journal(args.journal) if args.journal
                          else None,
-                         fleet=args.fleet, worker_spec=worker_spec)
+                         fleet=args.fleet, worker_spec=worker_spec,
+                         obs=obs)
         try:
             with sup:
                 report = sup.serve(reqs, arrivals)
@@ -328,9 +383,12 @@ def main(argv=None):
                 resumed += 1
                 print(f"  supervisor crashed ({e}); resuming from "
                       f"{args.journal} (attempt {resumed})")
+                # same Obs across resume: one trace timeline and one
+                # registry span the crash and the replayed drain
                 sup = Supervisor(factory, sup_cfg,
                                  journal=Journal(args.journal),
-                                 fleet=args.fleet, worker_spec=worker_spec)
+                                 fleet=args.fleet, worker_spec=worker_spec,
+                                 obs=obs)
                 try:
                     with sup:
                         report = sup.resume()
@@ -372,17 +430,26 @@ def main(argv=None):
         if not report.zero_drops:
             print("  WARNING: request reconciliation failed "
                   f"({len(report.outcomes)} != {report.submitted})")
-            return 1
+            return export_obs(1)
         if args.quantize and args.fleet == "inproc":
             print(dispatch_report())
-        return 0
+        return export_obs(0)
     if args.scheduler == "continuous":
-        # flush the dispatch report at every queue drain — a long-running
-        # serve surfaces fused→ref fallbacks without waiting for the end
-        on_drain = (lambda: print(dispatch_report())) if args.quantize \
-            else None
+        # surface fused→ref fallbacks at queue drains without waiting for
+        # the end — but only when the routing registry actually changed,
+        # not a bare print per drain (steady-state serving re-drains
+        # constantly and decisions are static under jit)
+        on_drain = None
+        if args.quantize:
+            last_report = [""]
+
+            def on_drain():
+                rep = dispatch_report()
+                if rep != last_report[0]:
+                    last_report[0] = rep
+                    print(rep)
         sched = ContinuousScheduler(eng, prefill_chunk=args.prefill_chunk,
-                                    on_drain=on_drain)
+                                    on_drain=on_drain, obs=obs)
         arrivals = poisson_arrivals(rng, len(reqs), args.poisson_rate)
         sres = sched.run(reqs, arrivals)
         dt = time.time() - t0
@@ -403,7 +470,7 @@ def main(argv=None):
         spec_report(sched)
         for r in sres[:3]:
             print(f"  req {r.id}: {r.tokens}")
-        return 0
+        return export_obs(0)
 
     results = eng.generate(reqs)
     dt = time.time() - t0
@@ -415,7 +482,7 @@ def main(argv=None):
         print(f"  req {r.id}: {r.tokens}")
     if args.quantize:
         print(dispatch_report())
-    return 0
+    return export_obs(0)
 
 
 if __name__ == "__main__":

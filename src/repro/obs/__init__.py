@@ -1,0 +1,66 @@
+"""Unified observability for the serving stack: one metrics registry,
+span tracing with Perfetto export, and a crash flight recorder.
+
+``Obs`` bundles the three plus the clock they share, and is threaded
+Supervisor → replicas → scheduler/engine/cache-backend so every report
+surface (drain reports, ``dispatch_report()``, ``spec_stats()``, cache
+``stats()``, fleet journal/frame counters) reads the SAME instruments
+the registry snapshots — no independent counters. Defaults are chosen
+for the hot path: metrics on (a registry counter costs what the int it
+replaced cost), tracing off (spans allocate), flight recorder on but
+writing nothing until a crash dump is requested with a directory
+configured.
+
+Usage::
+
+    obs = Obs(trace=True, clock=clock, flight_dir="...")
+    with obs.tracer.span("prefill_chunk", request_id=req.id):
+        ...
+    obs.registry.counter("serve.decode.tokens").inc()
+    obs.tracer.export("trace.json")         # chrome://tracing / Perfetto
+    json.dump(obs.registry.snapshot(), f)   # --metrics-json
+"""
+from __future__ import annotations
+
+from .metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                      MonotonicClock, Registry, default_registry,
+                      metric_key)
+from .recorder import FlightRecorder
+from .stats import latency_summary, nearest_percentile
+from .trace import NULL_SPAN, Tracer, validate_chrome_trace
+
+
+class Obs:
+    """Registry + tracer + flight recorder sharing one injectable clock."""
+
+    def __init__(self, metrics: bool = True, trace: bool = False,
+                 clock=None, flight_dir=None, capacity: int = 256,
+                 process_name: str = "serve",
+                 trace_id: str = "00000000") -> None:
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.registry = Registry(enabled=metrics, clock=self.clock)
+        self.tracer = Tracer(clock=self.clock, enabled=trace,
+                             process_name=process_name, trace_id=trace_id)
+        self.recorder = FlightRecorder(capacity=capacity, clock=self.clock,
+                                       dir=flight_dir,
+                                       enabled=metrics or trace)
+        self.flight_dir = flight_dir
+
+    @classmethod
+    def disabled(cls) -> "Obs":
+        return cls(metrics=False, trace=False)
+
+
+# Fully-off bundle for "no observability" paths; every consumer treats
+# ``obs=None`` as "make me a default Obs()" (metrics on, tracing off),
+# NOT as NULL_OBS — reports must keep working out of the box.
+NULL_OBS = Obs.disabled()
+
+__all__ = [
+    "Obs", "NULL_OBS",
+    "Registry", "Counter", "Gauge", "Histogram", "default_registry",
+    "metric_key", "DEFAULT_BUCKETS", "MonotonicClock",
+    "Tracer", "NULL_SPAN", "validate_chrome_trace",
+    "FlightRecorder",
+    "nearest_percentile", "latency_summary",
+]

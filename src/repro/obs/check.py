@@ -1,0 +1,84 @@
+"""Schema check for emitted observability artifacts (the CI gate step).
+
+    PYTHONPATH=src python -m repro.obs.check --trace trace.json \
+        --metrics metrics.json
+
+Validates a Chrome trace-event JSON against the structural schema
+(``obs.trace.validate_chrome_trace``) and a ``--metrics-json`` snapshot
+against the registry shape (counters/gauges numeric, histogram dicts
+well-formed). Exit 0 = valid, 1 = problems (listed), 2 = unreadable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from .trace import validate_chrome_trace
+
+
+def validate_metrics_snapshot(obj) -> List[str]:
+    """Structural check for ``Registry.snapshot()`` JSON."""
+    errors: List[str] = []
+    if not isinstance(obj, dict):
+        return ["top level is not an object"]
+    if obj.get("enabled") is False:
+        return errors  # a disabled registry snapshots to {"enabled": false}
+    if obj.get("enabled") is not True:
+        errors.append("missing enabled flag")
+    for section in ("counters", "gauges"):
+        vals = obj.get(section)
+        if not isinstance(vals, dict):
+            errors.append(f"{section} is not an object")
+            continue
+        for k, v in vals.items():
+            if not isinstance(v, (int, float)):
+                errors.append(f"{section}[{k}]: non-numeric value {v!r}")
+    hists = obj.get("histograms")
+    if not isinstance(hists, dict):
+        errors.append("histograms is not an object")
+    else:
+        for k, h in hists.items():
+            if not isinstance(h, dict) or not isinstance(
+                    h.get("counts"), list):
+                errors.append(f"histograms[{k}]: malformed")
+                continue
+            if sum(h["counts"]) != h.get("count"):
+                errors.append(f"histograms[{k}]: bucket counts do not sum "
+                              f"to count")
+    return errors
+
+
+def _check(path: str, validator, what: str) -> List[str]:
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"[obs.check] cannot read {what} {path}: {e}")
+    return [f"{what} {path}: {e}" for e in validator(obj)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON to validate")
+    ap.add_argument("--metrics", default=None,
+                    help="registry snapshot JSON to validate")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to check: pass --trace and/or --metrics")
+    errors: List[str] = []
+    if args.trace:
+        errors += _check(args.trace, validate_chrome_trace, "trace")
+    if args.metrics:
+        errors += _check(args.metrics, validate_metrics_snapshot, "metrics")
+    for e in errors:
+        print(f"[obs.check] INVALID: {e}")
+    if not errors:
+        print("[obs.check] OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

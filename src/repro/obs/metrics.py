@@ -1,0 +1,248 @@
+"""Process-wide metrics registry: counters, gauges, fixed-bucket
+histograms.
+
+Design constraints (see tests/test_obs.py):
+
+  * **Handles, not lookups, on the hot path** — ``registry.counter(name,
+    **labels)`` returns a cached ``Counter`` object; callers hold the
+    handle and ``.inc()`` is one attribute add. The registry dict is only
+    touched at instrument-creation time.
+  * **Near-zero overhead when disabled** — a disabled registry hands out
+    shared no-op singletons (one per instrument kind, ever), so
+    instrumented code pays a method call on a slotted do-nothing object
+    and allocates nothing.
+  * **Injectable clock** — snapshots stamp ``ts`` from the same
+    ``Clock``/``VirtualClock`` the serving stack runs on, so chaos tests
+    under a virtual clock produce deterministic timestamps.
+  * **Adoptable instruments** — components that predate the shared
+    registry (a ``Journal`` opened by the launcher before the supervisor
+    exists) create counters standalone and the supervisor re-registers
+    the SAME objects under fleet labels via ``register_counter``; counts
+    are never copied, so report and snapshot read one storage location.
+
+Snapshot keys are ``name{label=value,...}`` with labels sorted — stable
+across runs, greppable, and JSON-safe.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+
+class MonotonicClock:
+    """Minimal stand-in for ``serve.faults.Clock`` (kept local so ``obs``
+    never imports the serving stack — the dependency points the other
+    way). Anything with a ``now() -> float`` works as a clock here."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        time.sleep(max(0.0, dt))
+
+
+# default histogram buckets: latencies in seconds, µs..10s
+DEFAULT_BUCKETS = (1e-6, 1e-5, 1e-4, 1e-3, 5e-3, 0.01, 0.025, 0.05, 0.1,
+                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+class Counter:
+    """Monotonically-increasing count (with an explicit ``reset`` for
+    per-serve accounting like the scheduler's spec counters)."""
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+
+class Gauge:
+    """Last-written value (utilizations, hit rates, report fields)."""
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def reset(self) -> None:
+        self.value = 0.0
+
+
+class Histogram:
+    """Fixed-bucket histogram: ``counts[i]`` observations <= buckets[i],
+    plus an overflow bucket, running sum and count."""
+    __slots__ = ("buckets", "counts", "sum", "count")
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS) -> None:
+        self.buckets = tuple(float(b) for b in buckets)
+        if list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError("histogram buckets must be sorted and unique")
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.sum += v
+        self.count += 1
+
+    def reset(self) -> None:
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def to_dict(self) -> dict:
+        return dict(buckets=list(self.buckets), counts=list(self.counts),
+                    sum=self.sum, count=self.count)
+
+
+class _NoopCounter:
+    __slots__ = ()
+    value = 0
+
+    def inc(self, n: int = 1) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+
+class _NoopGauge:
+    __slots__ = ()
+    value = 0.0
+
+    def set(self, v: float) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+
+class _NoopHistogram:
+    __slots__ = ()
+    buckets: Tuple[float, ...] = ()
+    sum = 0.0
+    count = 0
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+    def to_dict(self) -> dict:
+        return dict(buckets=[], counts=[], sum=0.0, count=0)
+
+
+NOOP_COUNTER = _NoopCounter()
+NOOP_GAUGE = _NoopGauge()
+NOOP_HISTOGRAM = _NoopHistogram()
+
+
+def metric_key(name: str, labels: Dict[str, object]) -> str:
+    """Stable snapshot key: ``name{k=v,...}`` with labels sorted."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Registry:
+    """One metrics registry per process (or per supervisor — the fleet
+    shares the supervisor's). Disabled registries hand out shared no-op
+    instruments and snapshot to an explicitly-empty dict."""
+
+    def __init__(self, enabled: bool = True, clock=None) -> None:
+        self.enabled = enabled
+        self.clock = clock if clock is not None else MonotonicClock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    # ------------------------------------------------------- instruments
+    def counter(self, name: str, **labels) -> Counter:
+        if not self.enabled:
+            return NOOP_COUNTER
+        k = metric_key(name, labels)
+        c = self._counters.get(k)
+        if c is None:
+            c = self._counters[k] = Counter()
+        return c
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        if not self.enabled:
+            return NOOP_GAUGE
+        k = metric_key(name, labels)
+        g = self._gauges.get(k)
+        if g is None:
+            g = self._gauges[k] = Gauge()
+        return g
+
+    def histogram(self, name: str,
+                  buckets: Sequence[float] = DEFAULT_BUCKETS,
+                  **labels) -> Histogram:
+        if not self.enabled:
+            return NOOP_HISTOGRAM
+        k = metric_key(name, labels)
+        h = self._histograms.get(k)
+        if h is None:
+            h = self._histograms[k] = Histogram(buckets)
+        return h
+
+    def register_counter(self, name: str, counter: Counter,
+                         **labels) -> Counter:
+        """Adopt an EXISTING counter object under this registry's key —
+        the component keeps its handle, the snapshot sees its live value,
+        and no count is ever copied between two storage locations."""
+        if self.enabled and not isinstance(counter, _NoopCounter):
+            self._counters[metric_key(name, labels)] = counter
+        return counter
+
+    # --------------------------------------------------------- snapshot
+    def snapshot(self) -> dict:
+        """JSON-serializable view of every instrument. Disabled
+        registries report themselves as such rather than pretending an
+        empty system."""
+        if not self.enabled:
+            return dict(enabled=False)
+        return dict(
+            enabled=True,
+            ts=round(float(self.clock.now()), 6),
+            counters={k: self._counters[k].value
+                      for k in sorted(self._counters)},
+            gauges={k: self._gauges[k].value
+                    for k in sorted(self._gauges)},
+            histograms={k: self._histograms[k].to_dict()
+                        for k in sorted(self._histograms)},
+        )
+
+    def snapshot_json(self) -> str:
+        return json.dumps(self.snapshot(), sort_keys=True, indent=1)
+
+    def reset(self) -> None:
+        for c in self._counters.values():
+            c.reset()
+        for g in self._gauges.values():
+            g.reset()
+        for h in self._histograms.values():
+            h.reset()
+
+
+# Process-global default registry for process-global state: the quant
+# dispatch log (``quant.apply``) is a module-level accumulator shared by
+# every engine in the process, so its counters live here rather than in
+# any one supervisor's registry.
+_DEFAULT_REGISTRY = Registry()
+
+
+def default_registry() -> Registry:
+    return _DEFAULT_REGISTRY

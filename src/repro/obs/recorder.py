@@ -1,0 +1,57 @@
+"""Flight recorder: a bounded ring of recent events per process, dumped
+to disk when something dies.
+
+Recording is always cheap (append to a ``deque(maxlen=...)``); nothing
+is written to disk until ``dump(reason)`` — which the supervisor calls on
+``SupervisorCrash``, ``CacheCorruptionError``, worker EOF and
+reconciliation failure — so a crashed chaos run leaves a post-mortem
+artifact (``flight-<reason>-<seq>.json`` in ``dir``) while healthy runs
+write nothing. With ``dir=None`` the ring still records (it is the
+in-memory black box) but dumps are skipped, keeping test suites and
+default CLI runs from littering the working directory.
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import deque
+from typing import List, Optional
+
+from .metrics import MonotonicClock
+
+
+class FlightRecorder:
+    def __init__(self, capacity: int = 256, clock=None,
+                 dir: Optional[str] = None, enabled: bool = True) -> None:
+        self.capacity = int(capacity)
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.dir = dir
+        self.enabled = enabled
+        self.events = deque(maxlen=self.capacity)
+        self.dumps: List[str] = []
+        self._seq = 0
+
+    def record(self, kind: str, **fields) -> None:
+        if not self.enabled:
+            return
+        fields["t"] = round(float(self.clock.now()), 6)
+        fields["kind"] = kind
+        self.events.append(fields)
+
+    def dump(self, reason: str, dir: Optional[str] = None) -> Optional[str]:
+        """Write the ring to ``<dir>/flight-<reason>-<seq>.json`` and
+        return the path (None when disabled or no directory is
+        configured)."""
+        d = dir if dir is not None else self.dir
+        if not self.enabled or d is None:
+            return None
+        self._seq += 1
+        path = os.path.join(str(d), f"flight-{reason}-{self._seq}.json")
+        payload = dict(reason=reason,
+                       dumped_at=round(float(self.clock.now()), 6),
+                       n_events=len(self.events),
+                       events=list(self.events))
+        with open(path, "w") as f:
+            json.dump(payload, f, sort_keys=True, indent=1)
+        self.dumps.append(path)
+        return path

@@ -1,0 +1,38 @@
+"""Latency statistics shared by every reporting surface.
+
+One nearest-rank percentile definition for the whole repo: the serve CLI,
+the continuous scheduler, the chunked engine and the serving benchmark all
+import THIS function (``serve.scheduler`` re-exports it for backward
+compatibility), so reported TTFT/ITL percentiles cannot silently diverge
+between surfaces. The semantics match ``benchmarks/gate.py``'s reference
+statistic: nearest-rank over the sorted sample, 0.0 for an empty one.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+
+def nearest_percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-index percentile over unsorted values (0.0 for an empty
+    sequence)."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    return float(vs[min(len(vs) - 1, int(q * len(vs)))])
+
+
+def latency_summary(values: Sequence[float]) -> Dict[str, float]:
+    """The standard latency digest every report prints: count, mean,
+    nearest-rank p50/p95, min/max. Zeroes for an empty sample (a drained
+    serve with no ok requests must not crash its own report)."""
+    vals: List[float] = [float(v) for v in values]
+    if not vals:
+        return dict(n=0, mean=0.0, p50=0.0, p95=0.0, min=0.0, max=0.0)
+    return dict(
+        n=len(vals),
+        mean=sum(vals) / len(vals),
+        p50=nearest_percentile(vals, 0.50),
+        p95=nearest_percentile(vals, 0.95),
+        min=min(vals),
+        max=max(vals),
+    )

@@ -1,0 +1,178 @@
+"""Span tracing with Chrome trace-event export (Perfetto-loadable).
+
+``tracer.span("prefill_chunk", request_id=3)`` is a context manager that
+records one complete ("ph":"X") event on exit; ``tracer.instant(...)``
+records a point event. Events carry the tracer's ``trace_id`` in their
+args, which is how worker-side spans are matched to the supervisor
+timeline: the supervisor ships its trace id in the ``start`` RPC, the
+worker stamps every span with it, and each ``step`` reply returns the
+worker's drained events for the supervisor to ``adopt`` under the
+worker's logical pid (supervisor = pid 0, worker replica r = pid r+1)
+with a clock offset measured at the start handshake.
+
+Determinism: timestamps come from the injectable clock (a
+``VirtualClock`` yields byte-identical exports across replayed chaos
+runs — asserted in tests/test_obs.py), ids are never random, and
+``to_json`` serializes with sorted keys. A disabled tracer hands back a
+shared no-op span so instrumented code pays one attribute check and no
+allocation.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from .metrics import MonotonicClock
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("_tracer", "name", "cat", "tid", "args", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, tid: int,
+                 args: dict) -> None:
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.tid = tid
+        self.args = args
+        self._t0 = 0
+
+    def __enter__(self):
+        self._t0 = self._tracer._us()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            # a span that ends in a raise records it — chaos timelines
+            # show WHERE the injected fault fired, not just that it did
+            self.args["error"] = exc_type.__name__
+        tr = self._tracer
+        tr.events.append({
+            "name": self.name, "ph": "X", "cat": self.cat,
+            "ts": self._t0, "dur": tr._us() - self._t0,
+            "pid": tr.pid, "tid": self.tid, "args": self.args,
+        })
+        return False
+
+
+class Tracer:
+    """Per-process span collector. ``pid`` is a LOGICAL process id in the
+    exported timeline (deterministic: supervisor 0, worker r at r+1), not
+    an OS pid."""
+
+    def __init__(self, clock=None, enabled: bool = False, pid: int = 0,
+                 process_name: str = "serve",
+                 trace_id: str = "00000000") -> None:
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.enabled = enabled
+        self.pid = pid
+        self.trace_id = trace_id
+        self.events: List[dict] = []
+        self._process_names: Dict[int, str] = {pid: process_name}
+
+    def _us(self) -> int:
+        return int(round(float(self.clock.now()) * 1e6))
+
+    # ------------------------------------------------------------ record
+    def span(self, name: str, cat: str = "serve", tid: int = 0, **args):
+        if not self.enabled:
+            return NULL_SPAN
+        args["trace"] = self.trace_id
+        return _Span(self, name, cat, tid, args)
+
+    def instant(self, name: str, cat: str = "serve", tid: int = 0,
+                **args) -> None:
+        if not self.enabled:
+            return
+        args["trace"] = self.trace_id
+        self.events.append({
+            "name": name, "ph": "i", "s": "t", "cat": cat,
+            "ts": self._us(), "pid": self.pid, "tid": tid, "args": args,
+        })
+
+    def set_process_name(self, pid: int, name: str) -> None:
+        self._process_names[pid] = name
+
+    # ------------------------------------------------------- stitching
+    def adopt(self, events: Optional[List[dict]], pid: Optional[int] = None,
+              offset_us: int = 0) -> None:
+        """Merge events drained from another process's tracer into this
+        timeline, re-homed under ``pid`` and shifted by ``offset_us``
+        (the supervisor-vs-worker clock offset measured at the start
+        handshake)."""
+        if not self.enabled or not events:
+            return
+        for e in events:
+            e = dict(e)
+            if pid is not None:
+                e["pid"] = pid
+            e["ts"] = int(e.get("ts", 0)) + int(offset_us)
+            self.events.append(e)
+
+    def drain(self) -> List[dict]:
+        """Take and clear the buffered events (what a worker ships in
+        each step reply)."""
+        ev, self.events = self.events, []
+        return ev
+
+    # ---------------------------------------------------------- export
+    def to_obj(self) -> dict:
+        meta = [{"name": "process_name", "ph": "M", "ts": 0,
+                 "pid": pid, "tid": 0, "args": {"name": name}}
+                for pid, name in sorted(self._process_names.items())]
+        return {"displayTimeUnit": "ms", "traceEvents": meta + self.events}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_obj(), sort_keys=True)
+
+    def export(self, path) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return str(path)
+
+
+def validate_chrome_trace(obj) -> List[str]:
+    """Schema check for a Chrome trace-event JSON object (the structure
+    chrome://tracing and Perfetto load). Returns a list of problems —
+    empty means valid. Used by the CI gate step and the obs tests."""
+    errors: List[str] = []
+    if not isinstance(obj, dict):
+        return ["top level is not an object"]
+    events = obj.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    for i, e in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            errors.append(f"{where}: missing name")
+        if ph not in ("X", "i", "I", "M", "B", "E", "b", "e", "C"):
+            errors.append(f"{where}: bad ph {ph!r}")
+        for field in ("pid", "tid"):
+            if not isinstance(e.get(field), int):
+                errors.append(f"{where}: {field} is not an int")
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"{where}: bad ts {ts!r}")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: complete event with bad dur "
+                              f"{dur!r}")
+    return errors

@@ -36,6 +36,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..obs.metrics import default_registry
 from .qtensor import QuantizedLinear, dequantize, is_stacked, truncate_rank
 
 BACKENDS = ("ref", "fused", "auto")
@@ -97,9 +98,26 @@ class BackendDecision:
 
 _DISPATCH_LOG: List[BackendDecision] = []
 
+# Route counts live in the process-wide default metrics registry
+# (``obs.metrics.default_registry``) so a --metrics-json snapshot carries
+# the same numbers dispatch_report() prints. The log keeps the per-config
+# detail (shape/reason); the counters keep the totals.
+_DISPATCH_COUNTERS: dict = {}
+
+
+def _count_dispatch(requested: str, chosen: str) -> None:
+    c = _DISPATCH_COUNTERS.get((requested, chosen))
+    if c is None:
+        c = default_registry().counter("quant.dispatch",
+                                       requested=requested, chosen=chosen)
+        _DISPATCH_COUNTERS[(requested, chosen)] = c
+    c.inc()
+
 
 def clear_dispatch_log() -> None:
     _DISPATCH_LOG.clear()
+    for c in _DISPATCH_COUNTERS.values():
+        c.reset()
 
 
 def dispatch_log() -> List[BackendDecision]:
@@ -122,6 +140,12 @@ def dispatch_report() -> str:
         seen.add(key)
         lines.append(f"  ({d.shape[0]}x{d.shape[1]}, w{d.bits}) "
                      f"{d.requested} -> {d.chosen}: {d.reason}")
+    routes = ", ".join(
+        f"{req}->{ch}: {c.value}"
+        for (req, ch), c in sorted(_DISPATCH_COUNTERS.items())
+        if c.value > 0)
+    if routes:
+        lines.append(f"  traced calls by route: {routes}")
     return "\n".join(lines)
 
 
@@ -250,6 +274,7 @@ def dispatch(qt: QuantizedLinear, x, out_dtype=None,
     if _DRAFT_RANK[-1] is not None:
         qt = truncate_rank(qt, _DRAFT_RANK[-1])
     chosen, reason = resolve_backend(requested, qt, interpret)
+    _count_dispatch(requested, chosen)
     _DISPATCH_LOG.append(BackendDecision(
         requested=requested, chosen=chosen, reason=reason,
         shape=(qt.m, qt.n), bits=qt.bits))

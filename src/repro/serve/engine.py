@@ -161,7 +161,7 @@ class Result:
 
 
 class Engine:
-    def __init__(self, model: LM, params, cfg: ServeConfig):
+    def __init__(self, model: LM, params, cfg: ServeConfig, obs=None):
         if cfg.cache.kv_cache_bits is not None and \
                 cfg.cache.kv_cache_bits != model.cfg.kv_cache_bits:
             # CacheConfig owns the cache-precision knob: rebuild the model
@@ -172,6 +172,11 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        # observability bundle (obs.Obs). None means "adopt the first
+        # scheduler's obs" — ContinuousScheduler.start() fills it before
+        # the lazy cache backend builds, so cache counters land in the
+        # same registry the drain report snapshots.
+        self.obs = obs
         self._cache_backend = None
         # trace-time counters: the scheduler's length-bucketing claim
         # ("compile count bounded by the bucket set") is asserted on these.

@@ -27,6 +27,11 @@ Record types (all carry ``"t"``):
     {"t": "emit",  "id", "i": first_index, "toks": [...]}
     {"t": "term",  "id", "st": "ok|timeout|rejected|failed"}
 
+A tracing supervisor additionally stamps records with ``"tr"`` (its
+trace id) so a journal can be matched to the Perfetto timeline of the
+run that wrote it; ``replay_state`` ignores unknown fields, so journals
+from traced and untraced runs replay identically.
+
 ``replay_state`` folds a record list into per-request recovery state:
 prompt, emitted prefix, terminal status (or None). Emit records are
 idempotent under replay — an overlap re-delivers the same tokens at the
@@ -47,6 +52,7 @@ import zlib
 from typing import Dict, List, Optional, Tuple
 
 from ..checkpoint.checkpointer import digest_bytes
+from ..obs.metrics import Counter, Registry
 
 _REC = struct.Struct("<II")
 
@@ -99,8 +105,14 @@ class Journal:
         self.path = pathlib.Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self.fsync = fsync
-        self.truncated_bytes = 0
-        self.fsyncs = 0
+        # accounting lives in registry counters (the journal's own until a
+        # supervisor adopts them via bind_registry) so every drain report
+        # and --metrics-json snapshot reads the SAME storage
+        self._c_records = Counter()
+        self._c_bytes = Counter()
+        self._c_fsyncs = Counter()
+        self._c_truncated = Counter()
+        self.bind_registry(Registry())
         self._dirty = False
         data = self.path.read_bytes() if self.path.exists() else b""
         sealed = self._verify_manifest(data)
@@ -111,12 +123,40 @@ class Journal:
                 f"the sealed prefix ({sealed} bytes) — manifest says those "
                 "bytes were durable; this is corruption, not a torn tail")
         if good_end < len(data):
-            self.truncated_bytes = len(data) - good_end
+            self._c_truncated.inc(len(data) - good_end)
             with open(self.path, "r+b") as f:
                 f.truncate(good_end)
-        self.records = len(self.recovered)
-        self.bytes = good_end
+        self._c_records.inc(len(self.recovered))
+        self._c_bytes.inc(good_end)
         self._fp = open(self.path, "ab")
+
+    def bind_registry(self, registry: Registry, **labels) -> None:
+        """Re-register this journal's live counters in ``registry`` (the
+        supervisor calls this with its fleet registry): counts are never
+        copied, the snapshot simply sees the same objects."""
+        registry.register_counter("journal.records", self._c_records,
+                                  **labels)
+        registry.register_counter("journal.bytes", self._c_bytes, **labels)
+        registry.register_counter("journal.fsyncs", self._c_fsyncs, **labels)
+        registry.register_counter("journal.truncated_bytes",
+                                  self._c_truncated, **labels)
+
+    # registry-backed views (the old attribute API)
+    @property
+    def records(self) -> int:
+        return self._c_records.value
+
+    @property
+    def bytes(self) -> int:
+        return self._c_bytes.value
+
+    @property
+    def fsyncs(self) -> int:
+        return self._c_fsyncs.value
+
+    @property
+    def truncated_bytes(self) -> int:
+        return self._c_truncated.value
 
     @property
     def manifest_path(self) -> pathlib.Path:
@@ -149,8 +189,8 @@ class Journal:
     def append(self, rec: dict) -> None:
         data = encode_record(rec)
         self._fp.write(data)
-        self.records += 1
-        self.bytes += len(data)
+        self._c_records.inc()
+        self._c_bytes.inc(len(data))
         self._dirty = True
 
     def flush(self) -> None:
@@ -162,7 +202,7 @@ class Journal:
         self._fp.flush()
         if self.fsync:
             os.fsync(self._fp.fileno())
-            self.fsyncs += 1
+            self._c_fsyncs.inc()
         self._dirty = False
 
     def seal(self) -> None:

@@ -67,6 +67,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.metrics import Counter
+
+
+def _bind_backend_obs(backend) -> None:
+    """Register the backend's live counters (and utilization gauges) in
+    the engine's obs registry. Called from ``start()`` — by then the
+    scheduler has propagated its Obs (and any replica labels) onto the
+    engine, so fleet replicas land under distinct label sets. Counts are
+    never copied: the snapshot sees the same Counter objects ``stats()``
+    reads."""
+    from ..obs import Obs  # deferred: obs never imports serve, this is safe
+    engine = backend.engine
+    if getattr(engine, "obs", None) is None:
+        engine.obs = Obs()
+    labels = dict(getattr(engine, "obs_labels", None) or {})
+    labels["backend"] = backend.name
+    reg = engine.obs.registry
+    for name, c in backend._obs_counters().items():
+        reg.register_counter(f"cache.{name}", c, **labels)
+    backend._g_util = reg.gauge("cache.page_utilization", **labels)
+    backend._g_hit = reg.gauge("cache.prefix_hit_rate", **labels)
+
 
 class PageExhaustionError(RuntimeError):
     """The page pool cannot serve an ``alloc``. ``permanent`` says the
@@ -234,8 +256,23 @@ class DenseCacheBackend(CacheBackend):
         self.engine = engine
         self._cache = None
         self._lengths = np.zeros(engine.cfg.max_slots, np.int64)
-        self.n_prefill_launches = 0
-        self.n_prefill_tokens = 0
+        # registry-backed accounting (old attribute names stay readable
+        # as properties; the drain report and --metrics-json snapshot
+        # read the SAME storage)
+        self._c_launches = Counter()
+        self._c_tokens = Counter()
+
+    def _obs_counters(self) -> dict:
+        return {"prefill_launches": self._c_launches,
+                "prefill_tokens": self._c_tokens}
+
+    @property
+    def n_prefill_launches(self) -> int:
+        return self._c_launches.value
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return self._c_tokens.value
 
     def _legacy(self, name: str, impl):
         """Instance-level overrides of the deprecated Engine primitives
@@ -248,8 +285,9 @@ class DenseCacheBackend(CacheBackend):
     def start(self) -> None:
         self._cache = self.engine._new_cache_impl()
         self._lengths[:] = 0
-        self.n_prefill_launches = 0
-        self.n_prefill_tokens = 0
+        self._c_launches.reset()
+        self._c_tokens.reset()
+        _bind_backend_obs(self)
 
     def alloc(self, slot: int, prompt: np.ndarray, max_new: int) -> int:
         return 0
@@ -264,16 +302,16 @@ class DenseCacheBackend(CacheBackend):
         fn = self._legacy("prefill_slot_chunk",
                           self.engine._prefill_slot_impl)
         logits, self._cache = fn(self._cache, slot, tokens, start, last)
-        self.n_prefill_launches += 1
-        self.n_prefill_tokens += len(tokens)
+        self._c_launches.inc()
+        self._c_tokens.inc(len(tokens))
         self._lengths[slot] = start + len(tokens)
         return logits
 
     def prefill_chunks(self, tokens, starts, lasts, active):
         logits, self._cache = self.engine._prefill_slots_impl(
             self._cache, tokens, starts, lasts, active)
-        self.n_prefill_launches += 1
-        self.n_prefill_tokens += int(np.sum(active)) * tokens.shape[1]
+        self._c_launches.inc()
+        self._c_tokens.inc(int(np.sum(active)) * tokens.shape[1])
         for i, on in enumerate(active):
             if on:
                 self._lengths[i] = int(starts[i]) + tokens.shape[1]
@@ -315,9 +353,13 @@ class DenseCacheBackend(CacheBackend):
 
     def stats(self) -> dict:
         cap = self.engine.cfg.max_slots * self.engine.cfg.max_seq
+        util = float(self._lengths.sum()) / max(cap, 1)
+        if hasattr(self, "_g_util"):
+            self._g_util.set(util)
+            self._g_hit.set(0.0)
         return dict(
             backend=self.name,
-            page_utilization=float(self._lengths.sum()) / max(cap, 1),
+            page_utilization=util,
             prefix_hit_rate=0.0,
             prefill_launches=self.n_prefill_launches,
             prefill_tokens=self.n_prefill_tokens,
@@ -376,13 +418,46 @@ class PagedCacheBackend(CacheBackend):
         self._lengths = np.zeros(self.max_slots, np.int64)
         self._kernel = False
         self._kernel_route = "unresolved (start() not called)"
-        # stats
-        self.n_prefill_launches = 0
-        self.n_prefill_tokens = 0
-        self.hit_tokens = 0
-        self.prompt_tokens = 0
-        self.cow_copies = 0
-        self.evictions = 0
+        # registry-backed stats (old attribute names stay readable as
+        # properties; one storage location shared with the snapshot)
+        self._c_launches = Counter()
+        self._c_tokens = Counter()
+        self._c_hit = Counter()
+        self._c_prompt = Counter()
+        self._c_cow = Counter()
+        self._c_evict = Counter()
+
+    def _obs_counters(self) -> dict:
+        return {"prefill_launches": self._c_launches,
+                "prefill_tokens": self._c_tokens,
+                "hit_tokens": self._c_hit,
+                "prompt_tokens": self._c_prompt,
+                "cow_copies": self._c_cow,
+                "evictions": self._c_evict}
+
+    @property
+    def n_prefill_launches(self) -> int:
+        return self._c_launches.value
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return self._c_tokens.value
+
+    @property
+    def hit_tokens(self) -> int:
+        return self._c_hit.value
+
+    @property
+    def prompt_tokens(self) -> int:
+        return self._c_prompt.value
+
+    @property
+    def cow_copies(self) -> int:
+        return self._c_cow.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evict.value
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> None:
@@ -400,12 +475,9 @@ class PagedCacheBackend(CacheBackend):
         self._node_of = {}
         self._tick = 0
         self._lengths[:] = 0
-        self.n_prefill_launches = 0
-        self.n_prefill_tokens = 0
-        self.hit_tokens = 0
-        self.prompt_tokens = 0
-        self.cow_copies = 0
-        self.evictions = 0
+        for c in self._obs_counters().values():
+            c.reset()
+        _bind_backend_obs(self)
         self._kernel = self._use_paged_kernel()
         if not self._built:
             self._build_helpers()
@@ -494,7 +566,7 @@ class PagedCacheBackend(CacheBackend):
             self._trie_pages.discard(v.phys)
             del self._node_of[v.phys]
             self._free.append(v.phys)
-            self.evictions += 1
+            self._c_evict.inc()
 
     def _take_page(self) -> int:
         return self._free.pop()
@@ -585,12 +657,12 @@ class PagedCacheBackend(CacheBackend):
         if cow_src is not None and cow_cp > 0:
             self._pools = self._copy_page(
                 self._pools, cow_src, int(self._table[slot, m]))
-            self.cow_copies += 1
+            self._c_cow.inc()
             matched += cow_cp
         matched = min(matched, plen - 1)
         self._lengths[slot] = matched
-        self.hit_tokens += matched
-        self.prompt_tokens += plen
+        self._c_hit.inc(matched)
+        self._c_prompt.inc(plen)
         return matched
 
     def free(self, slot: int) -> None:
@@ -638,8 +710,8 @@ class PagedCacheBackend(CacheBackend):
             row, 0, tokens, start, last)
         self._pools = self._scatter(self._pools, row,
                                     self._flat_table([slot]))
-        self.n_prefill_launches += 1
-        self.n_prefill_tokens += len(tokens)
+        self._c_launches.inc()
+        self._c_tokens.inc(len(tokens))
         self._lengths[slot] = start + len(tokens)
         return logits
 
@@ -649,8 +721,8 @@ class PagedCacheBackend(CacheBackend):
         logits, view = self.engine._prefill_slots_impl(
             view, tokens, starts, lasts, active)
         self._pools = self._scatter(self._pools, view, flat)
-        self.n_prefill_launches += 1
-        self.n_prefill_tokens += int(np.sum(active)) * tokens.shape[1]
+        self._c_launches.inc()
+        self._c_tokens.inc(int(np.sum(active)) * tokens.shape[1])
         for i, on in enumerate(active):
             if on:
                 self._lengths[i] = int(starts[i]) + tokens.shape[1]
@@ -755,6 +827,9 @@ class PagedCacheBackend(CacheBackend):
         live = int(np.sum(self._ref[:self.num_pages] > 0))
         resident = len(self._trie_pages)
         used = self.num_pages - len(self._free)
+        if hasattr(self, "_g_util"):
+            self._g_util.set(used / max(self.num_pages, 1))
+            self._g_hit.set(self.hit_tokens / max(self.prompt_tokens, 1))
         return dict(
             backend=self.name,
             page_size=self.page,

@@ -91,6 +91,9 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import Obs
+from ..obs.stats import nearest_percentile  # noqa: F401 — canonical home
+#                       is obs.stats; re-exported here for existing callers
 from .engine import Engine, Request
 from .faults import CacheCorruptionError, Clock, FaultInjector
 from .kv_cache import PageExhaustionError
@@ -125,16 +128,6 @@ def _bucket(c: int, buckets: Tuple[int, ...]) -> int:
         if b >= c:
             return b
     return buckets[-1]
-
-
-def nearest_percentile(values: Sequence[float], q: float) -> float:
-    """Nearest-index percentile over unsorted values (0.0 for an empty
-    sequence). One definition shared by the serve CLI and the serving
-    benchmark so reported TTFT percentiles cannot silently diverge."""
-    if not values:
-        return 0.0
-    vs = sorted(values)
-    return float(vs[min(len(vs) - 1, int(q * len(vs)))])
 
 
 @dataclasses.dataclass
@@ -213,7 +206,9 @@ class ContinuousScheduler:
                  queue_cap: Optional[int] = None,
                  clock: Optional[Clock] = None,
                  faults: Optional[FaultInjector] = None,
-                 nan_guard: bool = False):
+                 nan_guard: bool = False,
+                 obs: Optional[Obs] = None,
+                 obs_labels: Optional[dict] = None):
         self.engine = engine
         self.prefill_chunk = int(prefill_chunk)
         self.buckets = bucket_sizes(self.prefill_chunk)
@@ -223,15 +218,26 @@ class ContinuousScheduler:
         self.clock = clock or Clock()
         self.faults = faults
         self.nan_guard = nan_guard
+        # observability: obs=None means "own default Obs" (metrics on,
+        # tracing off), never a silent no-op — spec_stats()/token counters
+        # must keep working out of the box. A supervisor passes its shared
+        # bundle plus replica labels so fleet counters never collide.
+        self.obs = obs if obs is not None else Obs()
+        self.trace_tid = 0   # timeline lane for this scheduler's spans
+        labels = dict(obs_labels or {})
+        self._obs_labels = labels
+        reg = self.obs.registry
+        self._c_tokens = reg.counter("serve.decode.tokens", **labels)
+        self._c_status = {s: reg.counter("serve.requests", status=s,
+                                         **labels) for s in STATUSES}
+        self._c_spec = {k: reg.counter(f"serve.spec.{k}", **labels)
+                        for k in ("windows", "slot_steps", "draft_tokens",
+                                  "accepted_tokens", "emitted_tokens")}
+        self._h_ttft = reg.histogram("serve.ttft_s", **labels)
+        self._h_queue = reg.histogram("serve.queue_s", **labels)
         self.trace: List[StepTrace] = []
         self.admission_order: List[int] = []   # request ids, admission order
         self.results: List[SchedResult] = []
-        # speculative-decode accounting (see spec_stats())
-        self.spec_windows = 0          # speculative decode steps taken
-        self.spec_slot_steps = 0       # decoding-slot participations
-        self.spec_draft_tokens = 0     # draft tokens proposed
-        self.spec_accepted_tokens = 0  # draft tokens accepted by verify
-        self.spec_emitted_tokens = 0   # tokens emitted from spec windows
         self._queue: Deque[Tuple[float, Request]] = deque()
         self._slots: List[_Slot] = []
         self._backend = None
@@ -239,6 +245,30 @@ class ContinuousScheduler:
         self._was_busy = False
         self._stop_admissions = False
         self._kill_inflight = False
+
+    # ------------------------------------------------- registry-backed views
+    # The speculative counters used to be plain ints; they are now registry
+    # counters (one storage location for spec_stats(), drain reports and
+    # --metrics-json snapshots) with the old attribute names kept as views.
+    @property
+    def spec_windows(self) -> int:
+        return self._c_spec["windows"].value
+
+    @property
+    def spec_slot_steps(self) -> int:
+        return self._c_spec["slot_steps"].value
+
+    @property
+    def spec_draft_tokens(self) -> int:
+        return self._c_spec["draft_tokens"].value
+
+    @property
+    def spec_accepted_tokens(self) -> int:
+        return self._c_spec["accepted_tokens"].value
+
+    @property
+    def spec_emitted_tokens(self) -> int:
+        return self._c_spec["emitted_tokens"].value
 
     # ------------------------------------------------------------ validate
     def validate(self, req: Request) -> None:
@@ -278,11 +308,20 @@ class ContinuousScheduler:
         order = sorted(range(len(requests)), key=lambda i: arrivals[i])
         self._queue = deque((arrivals[i], requests[i]) for i in order)
         self.trace, self.admission_order, self.results = [], [], []
-        self.spec_windows = self.spec_slot_steps = 0
-        self.spec_draft_tokens = 0
-        self.spec_accepted_tokens = self.spec_emitted_tokens = 0
+        # per-serve accounting restarts with the serve (registry counters
+        # are the storage — spec_stats()/properties are views over them)
+        for c in self._c_spec.values():
+            c.reset()
+        self._c_tokens.reset()
+        for c in self._c_status.values():
+            c.reset()
         self._slots = [_Slot() for _ in range(self.engine.cfg.max_slots)]
-        # the backend owns the (donated) cache state end to end
+        # the backend owns the (donated) cache state end to end; an engine
+        # without its own obs bundle inherits the scheduler's BEFORE the
+        # backend is (lazily) built, so cache counters land in one registry
+        if self.engine.obs is None:
+            self.engine.obs = self.obs
+            self.engine.obs_labels = dict(self._obs_labels)
         self._backend = self.engine.cache_backend
         self._backend.start()
         self._t0 = self.clock.now()
@@ -373,6 +412,9 @@ class ContinuousScheduler:
                   now: Optional[float] = None) -> SchedResult:
         """A token-less terminal result (rejected / timeout-at-admission)."""
         now = self._now() if now is None else now
+        self._c_status[status].inc()
+        self.obs.tracer.instant("retire", tid=self.trace_tid,
+                                request_id=req.id, status=status)
         return SchedResult(
             id=req.id, tokens=[], arrival_s=arrival,
             queue_s=max(0.0, now - arrival), ttft_s=0.0,
@@ -402,6 +444,13 @@ class ContinuousScheduler:
 
     def _retire(self, slot: _Slot, status: str = "ok") -> None:
         has_toks = bool(slot.tokens)
+        self._c_status[status].inc()
+        self._h_queue.observe(max(0.0, slot.admit_t - slot.arrival))
+        if has_toks:
+            self._h_ttft.observe(max(0.0, slot.ttft_t - slot.arrival))
+        self.obs.tracer.instant("retire", tid=self.trace_tid,
+                                request_id=slot.req.id, status=status,
+                                tokens=len(slot.tokens))
         self.results.append(SchedResult(
             id=slot.req.id, tokens=slot.tokens,
             arrival_s=slot.arrival,
@@ -426,6 +475,7 @@ class ContinuousScheduler:
         """Record one sampled token; returns True if the slot retires."""
         slot.tokens.append(tok)
         slot.token_times.append(t)
+        self._c_tokens.inc()
         done = (tok == self.engine.cfg.eos_token
                 or len(slot.tokens) >= slot.req.max_new_tokens)
         if self.on_token is not None:
@@ -517,6 +567,9 @@ class ContinuousScheduler:
             # adaptive draft-window target resets per request
             slot.spec_k = eng.cfg.spec_k if eng.cfg.speculative else 0
             self.admission_order.append(req.id)
+            self.obs.tracer.instant("admit", tid=self.trace_tid,
+                                    request_id=req.id, slot=i,
+                                    prefix_hit=int(matched))
 
         active = [s for s in slots if s.state != _FREE]
         if not active:
@@ -595,7 +648,11 @@ class ContinuousScheduler:
                 if idx not in plan:  # idle lanes ride along, writes masked
                     st_v[idx] = max(0, min(slot.length,
                                            eng.cfg.max_seq - common))
-            logits = self._backend.prefill_chunks(toks, st_v, last_v, act_v)
+            with self.obs.tracer.span("prefill_chunks", tid=self.trace_tid,
+                                      slots=len(plan),
+                                      tokens=sum(plan.values())):
+                logits = self._backend.prefill_chunks(toks, st_v, last_v,
+                                                      act_v)
             sampled = None
             for idx, c in plan.items():
                 slot = slots[idx]
@@ -630,8 +687,12 @@ class ContinuousScheduler:
                 chunk = np.zeros((cb,), np.int32)
                 n_real = slot.pos + c - start
                 chunk[:n_real] = prompt[start:start + n_real]
-                logits = self._backend.prefill_chunk(
-                    idx, chunk, start, n_real - 1)
+                with self.obs.tracer.span("prefill_chunk",
+                                          tid=self.trace_tid,
+                                          request_id=slot.req.id,
+                                          slot=idx, tokens=c):
+                    logits = self._backend.prefill_chunk(
+                        idx, chunk, start, n_real - 1)
                 slot.pos += c
                 slot.length = slot.pos
                 if slot.pos == len(prompt):
@@ -657,7 +718,10 @@ class ContinuousScheduler:
             if k_eff >= 1:
                 self._spec_step(slots, toks, lens, k_eff)
             else:
-                logits = self._backend.decode(toks, lens)
+                with self.obs.tracer.span(
+                        "decode_step", tid=self.trace_tid,
+                        slots=sum(s.state == _DECODE for s in slots)):
+                    logits = self._backend.decode(toks, lens)
                 self._guard(logits, [s.state == _DECODE for s in slots])
                 sampled = np.asarray(eng._sample(logits))
                 t_tok = self._now()
@@ -708,9 +772,11 @@ class ContinuousScheduler:
         cache length to its accepted prefix — rejected positions stay as
         stale masked entries the next window overwrites."""
         eng = self.engine
-        self.spec_windows += 1
+        self._c_spec["windows"].inc()
         decoding = [s.state == _DECODE for s in slots]
-        draft, logits = self._backend.spec_window(toks, lens, k)
+        with self.obs.tracer.span("spec_window", tid=self.trace_tid, k=k,
+                                  slots=sum(decoding)):
+            draft, logits = self._backend.spec_window(toks, lens, k)
         self._guard(logits, decoding)
         outs = np.asarray(eng._sample_window(logits))   # (B, k+1)
         t_tok = self._now()
@@ -718,8 +784,8 @@ class ContinuousScheduler:
         for i, slot in enumerate(slots):
             if not decoding[i]:
                 continue
-            self.spec_slot_steps += 1
-            self.spec_draft_tokens += k
+            self._c_spec["slot_steps"].inc()
+            self._c_spec["draft_tokens"].inc(k)
             # longest prefix where draft agrees with the target's greedy
             # choice: draft[j] must equal the target token AFTER the
             # first j window inputs — i.e. outs[:, j] (window input j is
@@ -727,14 +793,14 @@ class ContinuousScheduler:
             a = 0
             while a < k and int(draft[i, a]) == int(outs[i, a]):
                 a += 1
-            self.spec_accepted_tokens += a
+            self._c_spec["accepted_tokens"].inc(a)
             target = slot.spec_k
             retired = False
             for j in range(a + 1):
                 tok = int(draft[i, j]) if j < a else int(outs[i, a])
                 slot.length += 1
                 slot.cur_tok = tok
-                self.spec_emitted_tokens += 1
+                self._c_spec["emitted_tokens"].inc()
                 if self._emit(slot, tok, t_tok):
                     self._retire(slot)   # resets backend length to 0
                     retired = True

@@ -88,8 +88,10 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..distributed.fault import HealthMonitor, backoff_delay
+from ..obs import Obs
 from .engine import Engine, Request
-from .faults import Clock, FaultPlan, FaultSpec, InjectedFault, VirtualClock
+from .faults import (CacheCorruptionError, Clock, FaultPlan, FaultSpec,
+                     InjectedFault, VirtualClock)
 from .journal import Journal, replay_state
 from .scheduler import ContinuousScheduler
 from .transport import (FramedConnection, RPCClient, TransportConfig,
@@ -232,13 +234,19 @@ class InprocReplica:
     kind = "inproc"
 
     def __init__(self, rid: int, engine: Engine, cfg: SupervisorConfig,
-                 clock: Clock, plan: Optional[FaultPlan]):
+                 clock: Clock, plan: Optional[FaultPlan],
+                 obs: Optional[Obs] = None):
         self.id = rid
         self.engine = engine
         inj = plan.injector(rid, clock) if plan else None
         self.scheduler = ContinuousScheduler(
             engine, prefill_chunk=cfg.prefill_chunk,
-            on_token=self._buffer, clock=clock, faults=inj, nan_guard=True)
+            on_token=self._buffer, clock=clock, faults=inj, nan_guard=True,
+            obs=obs, obs_labels={"replica": rid})
+        # in-process replicas share the supervisor timeline (pid 0) and
+        # get their own lane: tid 0 is the supervisor loop, tid rid+1 the
+        # replica's scheduler spans
+        self.scheduler.trace_tid = rid + 1
         self.alive = True
         self.dead = False           # restart cap exhausted (or retired)
         self.accepting = True
@@ -354,10 +362,14 @@ class ProcessReplica:
 
     kind = "procs"
 
-    def __init__(self, rid: int, spec, cfg: SupervisorConfig):
+    def __init__(self, rid: int, spec, cfg: SupervisorConfig,
+                 obs: Optional[Obs] = None):
         self.id = rid
-        self.spec = dataclasses.replace(spec, replica=rid)
+        self.obs = obs
+        tracing = obs is not None and obs.tracer.enabled
+        self.spec = dataclasses.replace(spec, replica=rid, trace=tracing)
         self.cfg = cfg
+        self._clock_offset_us = 0
         self.proc: Optional[subprocess.Popen] = None
         self.client: Optional[RPCClient] = None
         self.alive = True
@@ -421,15 +433,30 @@ class ProcessReplica:
                                 backoff_factor=self.cfg.backoff_factor,
                                 backoff_jitter=self.cfg.backoff_jitter,
                                 seed=self.cfg.seed * 1000 + self.id))
+        tracing = self.obs is not None and self.obs.tracer.enabled
+        if tracing:
+            # every call frame carries the trace id; worker-side spans
+            # come back in step replies and stitch under pid rid+1
+            self.client.trace_id = self.obs.tracer.trace_id
         try:
-            self.client.call("start",
-                             {"fault_step_offset": self.steps_taken},
-                             timeout=self.cfg.spawn_timeout_s)
+            rep = self.client.call(
+                "start",
+                {"fault_step_offset": self.steps_taken,
+                 "trace_id": self.obs.tracer.trace_id if tracing else None},
+                timeout=self.cfg.spawn_timeout_s)
         except TransportError as e:
             code = self.proc.poll()
             raise TransportError(
                 f"worker {self.id} failed to start "
                 f"(exit={code}): {e}", retryable=False) from e
+        if tracing and isinstance(rep, dict) and rep.get("t0_us") is not None:
+            # clock stitching: worker timestamps are worker-monotonic;
+            # the offset measured at the start handshake maps them into
+            # the supervisor timeline (skewed by at most the handshake)
+            sup_us = int(round(self.obs.clock.now() * 1e6))
+            self._clock_offset_us = sup_us - int(rep["t0_us"])
+            self.obs.tracer.set_process_name(self.id + 1,
+                                             f"worker-{self.id}")
         self.assigned = {}
         self.accepting = True
 
@@ -474,6 +501,10 @@ class ProcessReplica:
             self.client.arm_partition(n)
         rep = self.client.call("step", {})
         self._last_beat = 0.0       # forces no extra ping while stepping
+        ev_tr = rep.get("ev")
+        if ev_tr and self.obs is not None:
+            self.obs.tracer.adopt(ev_tr, pid=self.id + 1,
+                                  offset_us=self._clock_offset_us)
         for rid in rep.get("admitted", ()):
             if int(rid) in self.assigned:
                 self.assigned[int(rid)][0] = True
@@ -587,12 +618,19 @@ class Supervisor:
                  monitor: Optional[HealthMonitor] = None,
                  journal: Optional[Journal] = None,
                  fleet: str = "inproc",
-                 worker_spec=None):
+                 worker_spec=None,
+                 obs: Optional[Obs] = None):
         if fleet not in ("inproc", "procs"):
             raise ValueError(f"fleet {fleet!r} (one of inproc|procs)")
         self.cfg = cfg
         self.fleet = fleet
         self.clock = clock or Clock()
+        # one obs bundle for the whole fleet: replicas label their
+        # instruments, worker spans adopt into this tracer, the journal
+        # binds its counters here, report() publishes fleet gauges here
+        self.obs = obs if obs is not None else Obs(clock=self.clock)
+        if journal is not None:
+            journal.bind_registry(self.obs.registry)
         self.on_token = on_token
         self.on_replay = on_replay
         self.plan = fault_plan
@@ -618,7 +656,8 @@ class Supervisor:
                 raise ValueError(
                     "a VirtualClock cannot drive worker subprocesses "
                     "(they live in real time)")
-            self.replicas = [ProcessReplica(rid, worker_spec, cfg)
+            self.replicas = [ProcessReplica(rid, worker_spec, cfg,
+                                            obs=self.obs)
                              for rid in range(cfg.replicas)]
         else:
             if engine_factory is None:
@@ -626,7 +665,7 @@ class Supervisor:
                                  "in-process fleet")
             self.replicas = [
                 InprocReplica(rid, engine_factory(), cfg, self.clock,
-                              fault_plan)
+                              fault_plan, obs=self.obs)
                 for rid in range(cfg.replicas)]
         # process-level fault schedule, driven supervisor-side
         self._proc_pending: Dict[int, List[FaultSpec]] = {
@@ -670,6 +709,11 @@ class Supervisor:
 
     def _journal_add(self, rec: dict) -> None:
         if self.journal is not None:
+            if self.obs.tracer.enabled and rec.get("t") == "admit":
+                # stamp admits with the trace id so the journal can be
+                # matched to the Perfetto timeline of the run that wrote
+                # it (replay_state ignores unknown fields)
+                rec["tr"] = self.obs.tracer.trace_id
             self.journal.append(rec)
 
     # -------------------------------------------------------------- serving
@@ -720,6 +764,11 @@ class Supervisor:
             raise ValueError("resume() requires a journal")
         state = replay_state(self.journal.recovered)
         self.journal_replayed = len(self.journal.recovered)
+        self.obs.tracer.instant("resume", tid=0,
+                                replayed=self.journal_replayed,
+                                requests=len(state))
+        self.obs.recorder.record("resume", replayed=self.journal_replayed,
+                                 requests=len(state))
         self._t0 = self.clock.now()
         self._tick = 0
         self._book = {}
@@ -775,7 +824,9 @@ class Supervisor:
                     self._checkpoint(blocking=False)
                 self._health_check()
                 if self.journal is not None:
-                    self.journal.flush()
+                    with self.obs.tracer.span("journal_flush", tid=0,
+                                              tick=self._tick):
+                        self.journal.flush()
                 self._maybe_supervisor_crash()
                 if self._done():
                     break
@@ -784,6 +835,10 @@ class Supervisor:
         except SupervisorCrash:
             if self.journal is not None:
                 self.journal.flush()
+            self.obs.tracer.instant("supervisor_crash", tid=0,
+                                    tick=self._tick)
+            self.obs.recorder.record("supervisor_crash", tick=self._tick)
+            self.obs.recorder.dump("supervisor_crash")
             for r in self.replicas:
                 r.hard_kill()       # the process tree dies with its leader
             raise
@@ -802,6 +857,26 @@ class Supervisor:
         useful = sum(len(self._book[o.id].req.prompt) + len(o.tokens)
                      for o in self._outcomes
                      if o.tokens and o.id in self._book)
+        # publish the fleet-derived numbers as gauges so the registry
+        # snapshot carries EXACTLY what this report returns (journal
+        # counters are already registry-backed via bind_registry; replica
+        # token/status counters via the schedulers' labeled instruments)
+        reg = self.obs.registry
+        reg.gauge("fleet.wasted_compute_tokens").set(
+            self.wasted_compute_tokens)
+        reg.gauge("fleet.replayed_emitted_tokens").set(
+            self.replayed_emitted_tokens)
+        reg.gauge("fleet.useful_tokens").set(useful)
+        reg.gauge("fleet.restarts").set(
+            sum(r.restarts for r in self.replicas))
+        reg.gauge("fleet.straggler_events").set(self.straggler_events)
+        reg.gauge("fleet.frames_sent").set(
+            sum(r.frames_sent for r in self.replicas))
+        reg.gauge("fleet.frames_retried").set(
+            sum(r.frames_retried for r in self.replicas))
+        reg.gauge("fleet.journal_replayed").set(self.journal_replayed)
+        for status, n in Counter(o.status for o in self._outcomes).items():
+            reg.gauge("fleet.requests", status=status).set(n)
         return SupervisorReport(
             outcomes=list(self._outcomes),
             submitted=len(self._book) if submitted is None else submitted,
@@ -853,6 +928,13 @@ class Supervisor:
         skipped; a submit whose transport dies routes through the normal
         failure path (the killed incarnation never gets stepped again, so
         a possibly-delivered request cannot double-serve)."""
+        if not self._queue:
+            return
+        with self.obs.tracer.span("dispatch", tid=0,
+                                  queued=len(self._queue)):
+            self._dispatch_queue(now)
+
+    def _dispatch_queue(self, now: float) -> None:
         while self._queue:
             live = [r for r in self.replicas
                     if r.alive and not r.dead and r.accepting
@@ -917,7 +999,9 @@ class Supervisor:
                 continue
             t_a = self.clock.now()
             try:
-                ev = r.step()
+                with self.obs.tracer.span("replica_step", tid=0,
+                                          replica=r.id):
+                    ev = r.step()
                 if ev.progressed:
                     progressed = True
                 self._ingest(r, ev)
@@ -1028,6 +1112,16 @@ class Supervisor:
         if r.dead:
             return
         self.failures.append((r.id, repr(exc)))
+        self.obs.tracer.instant("replica_failure", tid=0, replica=r.id,
+                                error=type(exc).__name__)
+        self.obs.recorder.record("replica_failure", replica=r.id,
+                                 error=repr(exc), tick=self._tick)
+        if isinstance(exc, TransportError) and not exc.retryable:
+            # the worker process is gone (EOF, broken pipe, corrupt
+            # stream): leave a post-mortem of the supervisor's last view
+            self.obs.recorder.dump("worker_eof")
+        elif isinstance(exc, CacheCorruptionError):
+            self.obs.recorder.dump("cache_corruption")
         for req_id, was_inflight, pos in r.salvage():
             b = self._book[req_id]
             if b.done:
@@ -1050,6 +1144,9 @@ class Supervisor:
             # the replica-local request may be a resume (concatenated
             # prompt, shrunk budget, drained deadline) — always re-queue
             # the ORIGINAL from the book; emitted tokens ride separately
+            self.obs.tracer.instant("salvage", tid=0, request_id=req_id,
+                                    replica=r.id,
+                                    inflight=int(was_inflight))
             self._queue.append((b.arrival, b.req))
         self._queue = deque(sorted(self._queue, key=lambda t: t[0]))
         r.alive = False
@@ -1072,12 +1169,19 @@ class Supervisor:
                 r.engine.params = params
             except FileNotFoundError:
                 pass  # no complete checkpoint yet: keep in-memory params
-        r.start()
+        with self.obs.tracer.span("worker_respawn", tid=0, replica=r.id,
+                                  restarts=r.restarts):
+            r.start()
+        self.obs.recorder.record("restart", replica=r.id,
+                                 restarts=r.restarts)
         r.alive = True
 
     def _fail_everything(self) -> None:
         """Every replica is permanently dead: remaining requests cannot be
         served — terminal ``failed``, never a hang or a silent drop."""
+        self.obs.recorder.record("fleet_dead", tick=self._tick,
+                                 queued=len(self._queue))
+        self.obs.recorder.dump("fleet_dead")
         for arr, req in list(self._queue) + list(self._future):
             self._finish(req.id, "failed", replica=-1)
         self._queue.clear()
@@ -1102,8 +1206,10 @@ class Supervisor:
         try:
             if self._host_faults is not None:
                 self._host_faults.begin_step()
-            self.checkpointer.save(self._tick, self.replicas[0].engine.params,
-                                   blocking=blocking)
+            with self.obs.tracer.span("checkpoint", tid=0, tick=self._tick):
+                self.checkpointer.save(self._tick,
+                                       self.replicas[0].engine.params,
+                                       blocking=blocking)
         except Exception:  # capture-and-continue: checkpoint failure is
             self.ckpt_failures += 1  # not a serving failure; the previous
             # complete checkpoint remains authoritative

@@ -173,6 +173,9 @@ class RPCClient:
         self.cfg = cfg
         self._next_id = 0
         self.retries = 0
+        # set by a tracing supervisor: stamps every call frame with "tr"
+        # so worker-side spans stitch into the supervisor's timeline
+        self.trace_id: Optional[str] = None
         self._rng = np.random.default_rng(cfg.seed)
         self._partition_left = 0
         self._partition_phase = 0
@@ -205,6 +208,8 @@ class RPCClient:
         cid = self._next_id
         self._next_id += 1
         frame = {"t": "call", "id": cid, "m": method, "p": params or {}}
+        if self.trace_id is not None:
+            frame["tr"] = self.trace_id
         per_attempt = self.cfg.call_timeout_s if timeout is None else timeout
         deadline = time.monotonic() + self.cfg.tolerance_s + per_attempt
         attempt = 0

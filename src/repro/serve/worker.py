@@ -63,6 +63,9 @@ class WorkerSpec:
     fault_plan: str = ""        # full CLI plan; the worker's injector
                                 # keeps only engine-level kinds
     nan_guard: bool = True
+    trace: bool = False         # buffer scheduler spans and ship them in
+                                # step replies ("ev") for supervisor-side
+                                # timeline stitching
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), separators=(",", ":"))
@@ -117,9 +120,13 @@ def build_replica(spec: WorkerSpec):
     plan = FaultPlan.parse(spec.fault_plan) if spec.fault_plan else None
     if plan:
         injector = plan.injector(spec.replica)
+    obs = None
+    if spec.trace:
+        from ..obs import Obs
+        obs = Obs(trace=True, process_name=f"worker-{spec.replica}")
     scheduler = ContinuousScheduler(
         engine, prefill_chunk=spec.prefill_chunk, faults=injector,
-        nan_guard=spec.nan_guard)
+        nan_guard=spec.nan_guard, obs=obs)
     return engine, scheduler
 
 
@@ -157,10 +164,17 @@ class WorkerServer:
             # the previous incarnation must not re-trip in this one
             self.scheduler.faults.step = int(p.get("fault_step_offset",
                                                    0)) - 1
+        tracer = self.scheduler.obs.tracer
+        if tracer.enabled and p.get("trace_id"):
+            tracer.trace_id = str(p["trace_id"])
         self.scheduler.start()
         self._events = []
         self._consumed = 0
-        return {"started": True}
+        rep = {"started": True}
+        if tracer.enabled:
+            # worker clock zero for supervisor-side offset stitching
+            rep["t0_us"] = int(round(self.scheduler.obs.clock.now() * 1e6))
+        return rep
 
     def _h_submit(self, p):
         if self.draining:
@@ -181,7 +195,14 @@ class WorkerServer:
         done = self.scheduler.done
         if self.draining and done:
             self.exit_after_reply = True
+        rep_extra = {}
+        tracer = self.scheduler.obs.tracer
+        if tracer.enabled:
+            # spans recorded since the last step ride the reply; the
+            # supervisor adopts them under this replica's pid
+            rep_extra["ev"] = tracer.drain()
         return {
+            **rep_extra,
             "progressed": bool(progressed),
             "events": [[int(r), int(t), bool(d)] for r, t, d in events],
             "results": [[int(r.id), r.status] for r in results],

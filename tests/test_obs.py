@@ -1,0 +1,477 @@
+"""Observability suite: the metrics registry, span tracer, flight
+recorder and their integration with the serving stack.
+
+The load-bearing assertions:
+
+  * **One storage location** — every number a report prints (scheduler
+    token/status counts, cache stats, journal counters, fleet report
+    fields) equals the registry snapshot, because the report reads the
+    SAME instruments the snapshot serializes.
+  * **Determinism** — under a ``VirtualClock`` the exported Chrome trace
+    is byte-identical across two replays of the same chaos run
+    (including a kill + respawn): timestamps come from the injected
+    clock, ids are never random, serialization sorts keys.
+  * **Stitching** — worker-subprocess spans ride step replies and land
+    in the supervisor timeline under the worker's logical pid with the
+    supervisor's trace id.
+  * **Free when off** — a disabled Obs hands out shared no-op
+    instruments and a shared null span; serving results are unchanged.
+"""
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PAPER_PROXIES
+from repro.models import LM
+from repro.obs import (NULL_SPAN, FlightRecorder, Obs, Registry,
+                       latency_summary, metric_key, nearest_percentile,
+                       validate_chrome_trace)
+from repro.obs.check import validate_metrics_snapshot
+from repro.obs.metrics import (NOOP_COUNTER, NOOP_GAUGE, NOOP_HISTOGRAM,
+                               Counter)
+from repro.obs.trace import Tracer
+from repro.serve import (Engine, FaultPlan, Journal, Request, ServeConfig,
+                         Supervisor, SupervisorConfig, SupervisorCrash,
+                         VirtualClock, WorkerSpec, model_config_to_dict)
+from repro.serve.scheduler import ContinuousScheduler
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+# ---------------------------------------------------------------- fixtures
+def _tiny_cfg(**over):
+    base = dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                head_dim=32, d_ff=128, vocab=128, dtype=jnp.float32)
+    base.update(over)
+    return dataclasses.replace(PAPER_PROXIES["opt-proxy-25m"], **base)
+
+
+def _requests(lens=(3, 9, 5, 14, 7), new=None, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rng.integers(2, 128, l).astype(np.int32),
+                    max_new_tokens=(new or 4 + i), id=i, **kw)
+            for i, l in enumerate(lens)]
+
+
+@pytest.fixture(scope="module")
+def tiny(key):
+    model = LM(_tiny_cfg())
+    return model, model.init(key)
+
+
+# ========================================================== registry (pure)
+class TestRegistry:
+    def test_handles_are_cached_storage(self):
+        reg = Registry()
+        c = reg.counter("serve.decode.tokens", replica=1)
+        c.inc(5)
+        assert reg.counter("serve.decode.tokens", replica=1) is c
+        assert reg.snapshot()["counters"][
+            "serve.decode.tokens{replica=1}"] == 5
+
+    def test_metric_key_sorts_labels(self):
+        assert metric_key("x", dict(b=2, a=1)) == "x{a=1,b=2}"
+        assert metric_key("x", {}) == "x"
+
+    def test_register_counter_adopts_not_copies(self):
+        reg = Registry()
+        c = Counter()
+        c.inc(3)
+        assert reg.register_counter("journal.records", c, replica=0) is c
+        c.inc(4)  # the component keeps writing through its own handle
+        assert reg.snapshot()["counters"][
+            "journal.records{replica=0}"] == 7
+
+    def test_histogram_buckets_and_snapshot(self):
+        reg = Registry()
+        h = reg.histogram("serve.ttft", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.5, 5.0):
+            h.observe(v)
+        d = reg.snapshot()["histograms"]["serve.ttft"]
+        assert d["counts"] == [1, 2, 1] and d["count"] == 4
+        assert validate_metrics_snapshot(reg.snapshot()) == []
+
+    def test_disabled_registry_is_shared_noops(self):
+        reg = Registry(enabled=False)
+        assert reg.counter("a") is NOOP_COUNTER
+        assert reg.gauge("b") is NOOP_GAUGE
+        assert reg.histogram("c") is NOOP_HISTOGRAM
+        reg.counter("a").inc(99)
+        assert reg.counter("a").value == 0
+        assert reg.snapshot() == {"enabled": False}
+        assert validate_metrics_snapshot(reg.snapshot()) == []
+        # adopting into a disabled registry is a no-op, not an error
+        c = Counter()
+        assert reg.register_counter("x", c) is c
+
+    def test_snapshot_json_is_stable(self):
+        reg = Registry(clock=VirtualClock())
+        reg.counter("b").inc()
+        reg.counter("a").inc()
+        assert reg.snapshot_json() == reg.snapshot_json()
+        assert list(reg.snapshot()["counters"]) == ["a", "b"]
+
+
+# ======================================================= percentiles (pure)
+class TestStats:
+    def test_nearest_rank_semantics(self):
+        vals = [5.0, 1.0, 3.0, 2.0, 4.0]
+        assert nearest_percentile(vals, 0.5) == 3.0   # unsorted input ok
+        assert nearest_percentile(vals, 0.0) == 1.0
+        assert nearest_percentile(vals, 0.99) == 5.0
+        assert nearest_percentile([], 0.5) == 0.0
+        assert nearest_percentile([7.0], 0.95) == 7.0
+
+    def test_scheduler_reexport_is_the_same_function(self):
+        # serve.scheduler re-exports obs.stats.nearest_percentile — the
+        # CLI, scheduler and benchmark cannot silently diverge
+        from repro.serve.scheduler import nearest_percentile as sched_pct
+        assert sched_pct is nearest_percentile
+
+    def test_latency_summary(self):
+        s = latency_summary([0.2, 0.1, 0.3])
+        assert s["n"] == 3 and s["min"] == 0.1 and s["max"] == 0.3
+        assert s["p50"] == nearest_percentile([0.1, 0.2, 0.3], 0.5)
+        assert latency_summary([]) == dict(n=0, mean=0.0, p50=0.0,
+                                           p95=0.0, min=0.0, max=0.0)
+
+
+# ============================================================ tracer (pure)
+class TestTracer:
+    def test_disabled_tracer_is_free(self):
+        tr = Tracer(enabled=False)
+        assert tr.span("x") is NULL_SPAN
+        assert tr.span("y", request_id=1) is NULL_SPAN  # shared singleton
+        with tr.span("x"):
+            pass
+        tr.instant("i")
+        assert tr.events == []
+
+    def test_spans_under_virtual_clock_are_deterministic(self):
+        def run():
+            clock = VirtualClock()
+            tr = Tracer(clock=clock, enabled=True, trace_id="cafe0001")
+            with tr.span("prefill", request_id=0):
+                clock.sleep(0.010)
+            tr.instant("admit", request_id=1)
+            clock.sleep(0.005)
+            with tr.span("decode", tid=2):
+                clock.sleep(0.001)
+            return tr.to_json()
+
+        a, b = run(), run()
+        assert a == b
+        obj = json.loads(a)
+        assert validate_chrome_trace(obj) == []
+        ev = {e["name"]: e for e in obj["traceEvents"] if e["ph"] != "M"}
+        assert ev["prefill"]["dur"] == 10000  # virtual µs, exact
+        assert ev["decode"]["tid"] == 2
+        assert all(e["args"]["trace"] == "cafe0001" for e in ev.values())
+
+    def test_span_records_exception_and_reraises(self):
+        tr = Tracer(clock=VirtualClock(), enabled=True)
+        with pytest.raises(ValueError):
+            with tr.span("boom"):
+                raise ValueError("x")
+        assert tr.events[-1]["args"]["error"] == "ValueError"
+
+    def test_adopt_rehomes_and_offsets(self):
+        worker = Tracer(clock=VirtualClock(), enabled=True, pid=0)
+        with worker.span("decode_step"):
+            worker.clock.sleep(0.001)
+        shipped = worker.drain()
+        assert worker.events == []  # drain clears the buffer
+        sup = Tracer(clock=VirtualClock(), enabled=True)
+        sup.adopt(shipped, pid=3, offset_us=500)
+        e = sup.events[-1]
+        assert e["pid"] == 3 and e["ts"] == 500
+        sup.adopt(None)  # tolerated: a step reply without events
+
+    def test_validator_catches_malformed_events(self):
+        assert validate_chrome_trace({"traceEvents": 3})
+        bad = {"traceEvents": [{"name": "", "ph": "Z", "pid": "x",
+                                "tid": 0, "ts": -1}]}
+        errs = validate_chrome_trace(bad)
+        assert len(errs) >= 3
+
+
+# ==================================================== flight recorder (pure)
+class TestFlightRecorder:
+    def test_ring_is_bounded(self):
+        fr = FlightRecorder(capacity=4, clock=VirtualClock())
+        for i in range(10):
+            fr.record("tick", i=i)
+        assert len(fr.events) == 4
+        assert [e["i"] for e in fr.events] == [6, 7, 8, 9]
+
+    def test_dump_writes_ring_with_reason(self, tmp_path):
+        fr = FlightRecorder(capacity=8, clock=VirtualClock(),
+                            dir=str(tmp_path))
+        fr.record("restart", replica=1)
+        path = fr.dump("supervisor_crash")
+        assert path and fr.dumps == [path]
+        payload = json.loads(open(path).read())
+        assert payload["reason"] == "supervisor_crash"
+        assert payload["events"][0]["kind"] == "restart"
+        assert payload["n_events"] == 1
+
+    def test_no_dir_records_but_never_writes(self, tmp_path):
+        fr = FlightRecorder(clock=VirtualClock())  # dir=None
+        fr.record("x")
+        assert fr.dump("crash") is None and fr.dumps == []
+        # explicit dir at dump time overrides
+        assert fr.dump("crash", dir=str(tmp_path)) is not None
+
+    def test_disabled_recorder_is_inert(self, tmp_path):
+        fr = FlightRecorder(clock=VirtualClock(), dir=str(tmp_path),
+                            enabled=False)
+        fr.record("x")
+        assert len(fr.events) == 0 and fr.dump("crash") is None
+
+
+# ========================================================= check CLI (pure)
+class TestCheckCLI:
+    def test_valid_artifacts_exit_zero(self, tmp_path):
+        from repro.obs.check import main
+        tr = Tracer(clock=VirtualClock(), enabled=True)
+        with tr.span("x"):
+            pass
+        tp = tmp_path / "t.json"
+        tr.export(tp)
+        reg = Registry(clock=VirtualClock())
+        reg.counter("a").inc()
+        mp = tmp_path / "m.json"
+        mp.write_text(reg.snapshot_json())
+        assert main(["--trace", str(tp), "--metrics", str(mp)]) == 0
+
+    def test_invalid_artifacts_exit_one(self, tmp_path):
+        from repro.obs.check import main
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"traceEvents": [{"ph": "??"}]}))
+        assert main(["--trace", str(bad)]) == 1
+        badm = tmp_path / "badm.json"
+        badm.write_text(json.dumps({"enabled": True, "counters": {"a": "x"},
+                                    "gauges": {}, "histograms": {}}))
+        assert main(["--metrics", str(badm)]) == 1
+
+    def test_histogram_sum_mismatch_detected(self):
+        snap = dict(enabled=True, counters={}, gauges={}, histograms={
+            "h": dict(buckets=[1.0], counts=[2, 1], count=99, sum=0.0)})
+        assert validate_metrics_snapshot(snap)
+
+
+# =============================================== scheduler integration
+class TestSchedulerObs:
+    def test_report_numbers_equal_registry(self, tiny):
+        model, params = tiny
+        obs = Obs()
+        eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32))
+        sched = ContinuousScheduler(eng, prefill_chunk=4, obs=obs)
+        res = sched.run(_requests())
+        snap = obs.registry.snapshot()
+        toks = sum(len(r.tokens) for r in res)
+        assert snap["counters"]["serve.decode.tokens"] == toks
+        assert snap["counters"]["serve.requests{status=ok}"] == len(res)
+        # cache backend counters bound into the same registry
+        assert snap["counters"]["cache.prefill_launches{backend=dense}"] \
+            == eng.cache_backend.n_prefill_launches
+        # TTFT histogram observed one sample per served request
+        assert snap["histograms"]["serve.ttft_s"]["count"] == len(res)
+
+    def test_disabled_obs_serves_identically(self, tiny):
+        model, params = tiny
+        eng = Engine(model, params, ServeConfig(max_slots=2, max_seq=32),
+                     obs=Obs())
+        baseline = {r.id: r.tokens
+                    for r in ContinuousScheduler(eng, prefill_chunk=4)
+                    .run(_requests())}
+        eng2 = Engine(model, params, ServeConfig(max_slots=2, max_seq=32),
+                      obs=Obs.disabled())
+        sched = ContinuousScheduler(eng2, prefill_chunk=4,
+                                    obs=Obs.disabled())
+        got = {r.id: r.tokens for r in sched.run(_requests())}
+        assert got == baseline
+        assert sched.obs.registry.snapshot() == {"enabled": False}
+
+    def test_journal_bind_registry_preserves_counts(self, tmp_path):
+        j = Journal(tmp_path / "wal.journal")
+        j.append({"t": "admit", "id": 0, "prompt": [3], "new": 1,
+                  "dl": None, "arr": 0.0})
+        j.flush()
+        reg = Registry()
+        j.bind_registry(reg)
+        snap = reg.snapshot()["counters"]
+        assert snap["journal.records"] == j.records == 1
+        assert snap["journal.bytes"] == j.bytes > 0
+        j.append({"t": "term", "id": 0, "st": "ok"})
+        assert reg.snapshot()["counters"]["journal.records"] == 2
+        j.close()
+
+
+# ============================================ supervised fleet integration
+class TestSupervisedObs:
+    def _trace_run(self, tiny, plan="sigkill@3:step:0"):
+        """One supervised inproc chaos serve under a VirtualClock with a
+        fresh Obs; returns (report, obs). Fresh engines per call so no
+        state leaks between replays."""
+        model, params = tiny
+        clock = VirtualClock()
+        obs = Obs(trace=True, clock=clock)
+
+        def factory():
+            return Engine(model, params,
+                          ServeConfig(max_slots=2, max_seq=32))
+        sup = Supervisor(
+            factory,
+            SupervisorConfig(replicas=2, prefill_chunk=4,
+                             backoff_base_s=0.01, backoff_jitter=0.0,
+                             step_cost_s=0.01),
+            fault_plan=FaultPlan.parse(plan), clock=clock, obs=obs)
+        report = sup.serve(_requests())
+        return report, obs
+
+    def test_chaos_trace_is_byte_identical_across_replays(self, tiny):
+        # the deterministic-trace contract: same seed, same virtual
+        # clock, same kill coordinate -> byte-identical Perfetto export,
+        # respawn included
+        rep_a, obs_a = self._trace_run(tiny)
+        rep_b, obs_b = self._trace_run(tiny)
+        assert rep_a.zero_drops and rep_b.zero_drops
+        a, b = obs_a.tracer.to_json(), obs_b.tracer.to_json()
+        assert a == b
+        obj = json.loads(a)
+        assert validate_chrome_trace(obj) == []
+        names = {e["name"] for e in obj["traceEvents"]}
+        # the full lifecycle is on the timeline, replica lanes included
+        assert {"dispatch", "replica_step", "admit", "prefill_chunks",
+                "decode_step", "retire", "replica_failure",
+                "worker_respawn"} <= names
+        tids = {e["tid"] for e in obj["traceEvents"] if e["ph"] != "M"}
+        assert {0, 1, 2} <= tids  # supervisor lane + one per replica
+
+    def test_report_equals_registry_snapshot(self, tiny):
+        report, obs = self._trace_run(tiny)
+        snap = obs.registry.snapshot()
+        g, c = snap["gauges"], snap["counters"]
+        assert g["fleet.restarts"] == sum(report.restarts.values())
+        assert g["fleet.wasted_compute_tokens"] == \
+            report.wasted_compute_tokens
+        assert g["fleet.useful_tokens"] == report.useful_tokens
+        assert g["fleet.straggler_events"] == report.straggler_events
+        counts = report.status_counts()
+        for s, n in counts.items():
+            assert g[f"fleet.requests{{status={s}}}"] == n
+        # per-replica scheduler counters live under their fleet labels —
+        # no collisions. (A respawned replica's counters reset with
+        # scheduler.start(), per-serve accounting, so replica 0's count
+        # covers post-restart work only; the killed replica's lost
+        # progress is what fleet.wasted_compute_tokens measures.)
+        assert "serve.decode.tokens{replica=0}" in c
+        assert c["serve.decode.tokens{replica=1}"] > 0
+
+    def test_supervisor_crash_dumps_flight_and_resume_traces(
+            self, tiny, tmp_path):
+        model, params = tiny
+        clock = VirtualClock()
+        obs = Obs(trace=True, clock=clock, flight_dir=str(tmp_path))
+
+        def factory():
+            return Engine(model, params,
+                          ServeConfig(max_slots=2, max_seq=32))
+
+        def sup_cfg():
+            return SupervisorConfig(replicas=2, prefill_chunk=4,
+                                    backoff_base_s=0.01,
+                                    backoff_jitter=0.0, step_cost_s=0.01)
+        jp = tmp_path / "wal.journal"
+        sup = Supervisor(factory, sup_cfg(), journal=Journal(jp),
+                         fault_plan=FaultPlan.parse("supervisor_crash@3"),
+                         clock=clock, obs=obs)
+        with pytest.raises(SupervisorCrash):
+            sup.serve(_requests())
+        dumps = [p for p in obs.recorder.dumps
+                 if "supervisor_crash" in p]
+        assert len(dumps) == 1
+        payload = json.loads(open(dumps[0]).read())
+        assert payload["reason"] == "supervisor_crash"
+        assert any(e["kind"] == "supervisor_crash"
+                   for e in payload["events"])
+        # resume with the SAME obs: one timeline spans crash + recovery
+        sup2 = Supervisor(factory, sup_cfg(), journal=Journal(jp),
+                          clock=VirtualClock(), obs=obs)
+        report = sup2.resume()
+        assert report.zero_drops
+        names = [e["name"] for e in obs.tracer.events]
+        assert "supervisor_crash" in names and "resume" in names
+        assert names.index("supervisor_crash") < names.index("resume")
+
+    def test_journal_admits_stamped_with_trace_id(self, tiny, tmp_path):
+        model, params = tiny
+        clock = VirtualClock()
+        obs = Obs(trace=True, clock=clock, trace_id="feed0042")
+
+        def factory():
+            return Engine(model, params,
+                          ServeConfig(max_slots=2, max_seq=32))
+        jp = tmp_path / "wal.journal"
+        sup = Supervisor(
+            factory,
+            SupervisorConfig(replicas=2, prefill_chunk=4,
+                             step_cost_s=0.01),
+            journal=Journal(jp), clock=clock, obs=obs)
+        sup.serve(_requests())
+        j2 = Journal(jp)
+        admits = [r for r in j2.recovered if r.get("t") == "admit"]
+        assert admits and all(r.get("tr") == "feed0042" for r in admits)
+        j2.close()
+
+
+# ============================================== process fleet integration
+class TestProcessFleetObs:
+    @pytest.fixture(scope="class")
+    def spec(self):
+        return WorkerSpec(model=model_config_to_dict(_tiny_cfg()),
+                          serve=ServeConfig(max_slots=2,
+                                            max_seq=32).to_dict(),
+                          seed=0, prefill_chunk=4)
+
+    def test_worker_spec_trace_field_roundtrips(self, spec):
+        on = dataclasses.replace(spec, trace=True)
+        assert WorkerSpec.from_json(on.to_json()).trace is True
+        # old specs without the field deserialize to the default
+        legacy = json.loads(spec.to_json())
+        legacy.pop("trace")
+        assert WorkerSpec(**legacy).trace is False
+
+    def test_worker_spans_stitch_into_supervisor_timeline(
+            self, spec, tmp_path):
+        obs = Obs(trace=True, flight_dir=str(tmp_path),
+                  process_name="supervisor", trace_id="0ddba11c")
+        step = 3 + (CHAOS_SEED % 5)
+        sup = Supervisor(
+            cfg=SupervisorConfig(replicas=2, prefill_chunk=4,
+                                 backoff_base_s=0.01, backoff_jitter=0.0),
+            fleet="procs", worker_spec=spec,
+            fault_plan=FaultPlan.parse(f"sigkill@{step}:step:0"), obs=obs)
+        with sup:
+            report = sup.serve(_requests())
+        assert report.zero_drops and report.restarts[0] >= 1
+        obj = json.loads(obs.tracer.to_json())
+        assert validate_chrome_trace(obj) == []
+        ev = [e for e in obj["traceEvents"] if e["ph"] != "M"]
+        # worker-side spans landed under the workers' logical pids with
+        # the supervisor's trace id — the stitching contract
+        worker_ev = [e for e in ev if e["pid"] >= 1]
+        assert worker_ev
+        assert {e["name"] for e in worker_ev} & {"decode_step",
+                                                 "prefill_chunks"}
+        assert all(e["args"]["trace"] == "0ddba11c" for e in ev)
+        meta = {e["pid"]: e["args"]["name"]
+                for e in obj["traceEvents"] if e["ph"] == "M"}
+        assert meta[0] == "supervisor" and meta[1] == "worker-0"
+        # the SIGKILL left a worker_eof flight dump
+        assert any("worker_eof" in p for p in obs.recorder.dumps)
